@@ -1,0 +1,51 @@
+"""Fig 5 / App B.1–B.2 — k* distribution per projection type + stability.
+
+The paper finds k* varies systematically by projection (Q/K concentrated
+spectra ⇒ larger preserved rank; V flatter ⇒ smaller) and is stable to
+the probe seed (±1–3 at transformer dims). Reproduced on matrix-level
+synthetic weights whose spectral profiles follow the same ordering.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import calib_activations, synthetic_layer, write_csv
+from repro.core import make_scaling, select_rank
+
+
+def run(quick: bool = False):
+    d = 256 if quick else 384
+    r = 32
+    n_layers = 2 if quick else 4
+    n_seeds = 2 if quick else 3
+    per_proj: dict = {}
+    stab: dict = {}
+    for layer_seed in range(n_layers):
+        layer = synthetic_layer(layer_seed, d=d)
+        for name, w in layer.items():
+            x = calib_activations(layer_seed * 31 + hash(name) % 97,
+                                  4 * w.shape[0], w.shape[0])
+            s = make_scaling("qera-exact", x)
+            ks = [int(select_rank(w, s, r, jax.random.PRNGKey(seed),
+                                  exact=True).k_star)
+                  for seed in range(n_seeds)]
+            per_proj.setdefault(name, []).append(ks[0])
+            stab.setdefault(name, []).append(max(ks) - min(ks))
+    rows = []
+    for name in ("q", "k", "v", "o", "gate", "up", "down"):
+        ks = per_proj[name]
+        rows.append((name, f"{np.mean(ks):.1f}", min(ks), max(ks),
+                     f"{np.mean(stab[name]):.1f}", max(stab[name])))
+    path = write_csv(
+        "fig5_rank_dist.csv",
+        ["proj", "mean_k*", "min", "max", "mean_seed_dk", "max_seed_dk"],
+        rows)
+    return path, rows
+
+
+if __name__ == "__main__":
+    path, rows = run()
+    for r_ in rows:
+        print(r_)
+    print("->", path)

@@ -1,0 +1,65 @@
+"""Aggregate the dry-run JSONs (experiments/dryrun/*.json) into the
+EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_ms(x):
+    return f"{x * 1e3:,.1f}"
+
+
+def markdown(cells, mesh: str = "pod16x16") -> str:
+    rows = [c for c in cells if c.get("mesh") == mesh
+            and c.get("status", "ok") != "fail"]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "bound | useful-FLOPs | roofline frac | fix |",
+           "|---|---|---:|---:|---:|---|---:|---:|---|"]
+    for c in rows:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_ms(c['t_compute'])} | "
+            f"{fmt_ms(c['t_memory'])} | {fmt_ms(c['t_collective'])} | "
+            f"{c['bottleneck']} | {100 * c['useful_flops_frac']:.1f}% | "
+            f"{100 * c['roofline_frac']:.2f}% | "
+            f"{suggestion(c)} |")
+    return "\n".join(out)
+
+
+def suggestion(c) -> str:
+    b = c["bottleneck"]
+    if b == "memory":
+        if c["kind"] == "train":
+            return "fuse attention softmax chain (flash kernel)"
+        return "pack weights (3-bit) / fuse dequant into matmul"
+    if b == "collective":
+        if c["kind"] == "decode":
+            return "shard KV heads not head_dim; batch more decode steps"
+        return "overlap FSDP gathers with compute; bigger microbatch"
+    return "increase per-chip work (larger batch) or reduce remat"
+
+
+def main():
+    cells = load()
+    ok = [c for c in cells if c.get("status") == "ok" or "t_compute" in c]
+    fail = [c for c in cells if c.get("status") == "fail"]
+    skip = [c for c in cells if c.get("status") == "skip"]
+    print(f"{len(ok)} ok / {len(skip)} skip / {len(fail)} FAIL")
+    for c in fail:
+        print("  FAIL:", c.get("cell"), c.get("error", "")[:100])
+    print()
+    print(markdown(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Run every paper-table benchmark: ``python -m benchmarks.run [--quick]``.
+
+One module per paper artifact (see DESIGN.md §7); CSVs land in
+benchmarks/out/. The dry-run/roofline tables are produced separately by
+``python -m repro.launch.dryrun`` + ``python -m benchmarks.roofline_table``
+(they need the 512-device XLA flag set before jax init).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig2_alignment,
+    fig5_rank_dist,
+    fig7_layerwise,
+    table1_ptq,
+    table2_downstream,
+    table34_qpeft,
+    table5_quantizers,
+    table6_gamma,
+    table11_overhead,
+    table20_assumptions,
+)
+
+BENCHES = [
+    ("Table 1 (PTQ ppl: QER methods ± SRR)", table1_ptq),
+    ("Table 2 (downstream acc proxy)", table2_downstream),
+    ("Tables 3/4 (QPEFT inits)", table34_qpeft),
+    ("Table 5 (quantizer-agnostic)", table5_quantizers),
+    ("Table 6 (γ sweep + SGP)", table6_gamma),
+    ("Table 11 (overhead)", table11_overhead),
+    ("Tables 20/21 (assumptions)", table20_assumptions),
+    ("Fig 2 (surrogate alignment)", fig2_alignment),
+    ("Fig 5 (k* distribution)", fig5_rank_dist),
+    ("Fig 7 (layer-wise error)", fig7_layerwise),
+]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--only", default=None,
+                   help="substring filter on benchmark names")
+    args = p.parse_args(argv)
+
+    failures = 0
+    for name, mod in BENCHES:
+        if args.only and args.only.lower() not in name.lower():
+            continue
+        t0 = time.perf_counter()
+        print(f"=== {name} ===")
+        try:
+            path, rows = mod.run(quick=args.quick)
+            for r in rows:
+                print("   ", *r)
+            print(f"  -> {path}  ({time.perf_counter() - t0:.1f}s)\n")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"  FAILED ({time.perf_counter() - t0:.1f}s)\n")
+    print(f"[benchmarks] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Table 11 / App A.4 — computational overhead of SRR over QER.
+
+Wall-clock on realistic matrix sizes: scaling-matrix construction (the
+pipeline's dominant cost), QER decomposition, SRR decomposition (extra
+SVDs via the randomized sketch, n_iter=4, oversample 2r — App A.4), and
+the SRR/QER ratio. Paper reports ×1.06 on the quant+reconstruct stage.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import calib_activations, synthetic_weight, write_csv
+from repro.core import make_scaling, qer_decompose, srr_decompose
+from repro.quant import MXIntQuantizer
+
+QZ = MXIntQuantizer(bits=3, block_size=32)
+
+
+def _time(fn, reps=2):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn()))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False):
+    sizes = [(512, 512)] if quick else [(512, 512), (1024, 1024),
+                                        (1024, 2048)]
+    r = 64
+    rows = []
+    for m, n in sizes:
+        w = synthetic_weight(jax.random.PRNGKey(0), m, n, "o")
+        x = calib_activations(1, 2 * m, m)
+        t_scale = _time(lambda: make_scaling("qera-exact", x))
+        s = make_scaling("qera-exact", x)
+        t_qer = _time(lambda: qer_decompose(w, s, QZ, r, exact=False,
+                                            key=jax.random.PRNGKey(1)))
+        t_srr = _time(lambda: srr_decompose(
+            w, s, QZ, r, jax.random.PRNGKey(1), exact=False))
+        ratio = t_srr / t_qer
+        full = (t_scale + t_srr) / (t_scale + t_qer)
+        rows.append((f"{m}x{n}", f"{t_scale * 1e3:.0f}",
+                     f"{t_qer * 1e3:.0f}", f"{t_srr * 1e3:.0f}",
+                     f"x{ratio:.2f}", f"x{full:.2f}"))
+    path = write_csv(
+        "table11_overhead.csv",
+        ["matrix", "scaling_ms", "QER_ms", "SRR_ms", "QERvsSRR",
+         "full_pipeline"], rows)
+    return path, rows
+
+
+if __name__ == "__main__":
+    path, rows = run()
+    for r_ in rows:
+        print(r_)
+    print("->", path)

@@ -1,0 +1,36 @@
+"""Table 2 — zero-shot accuracy stand-in: next-token top-1 on held-out
+data, QERA-exact vs QERA-exact + SRR (r = 16), plus BF16 / w-only refs."""
+from __future__ import annotations
+
+from benchmarks.common import eval_top1, trained_tiny_model, write_csv
+from repro.core.api import PTQConfig
+from repro.data import capture_calibration
+from repro.models import lm_loss
+from repro.models.quantize import quantize_model_params
+from repro.quant.base import QuantizerConfig
+
+
+def run(quick: bool = False):
+    cfg, params, dcfg = trained_tiny_model(steps=120 if quick else 300)
+    stats = capture_calibration(
+        params, cfg, dcfg, lambda c, p, b, cc: lm_loss(c, p, b, cc),
+        n_batches=2)
+    qz = QuantizerConfig(kind="mxint", bits=3, block_size=32)
+    rows = [("bf16", f"{eval_top1(params, cfg, dcfg):.4f}")]
+    for method, label in (("w-only", "w-only"), ("qer", "QERA-exact"),
+                          ("srr", "QERA-exact + SRR")):
+        ptq = PTQConfig(method=method,
+                        scaling="identity" if method == "w-only"
+                        else "qera-exact",
+                        rank=16, quantizer=qz)
+        qp, _ = quantize_model_params(params, stats, ptq)
+        rows.append((label, f"{eval_top1(qp, cfg, dcfg):.4f}"))
+    path = write_csv("table2_downstream.csv", ["method", "top1_acc"], rows)
+    return path, rows
+
+
+if __name__ == "__main__":
+    path, rows = run()
+    for r in rows:
+        print(r)
+    print("->", path)

@@ -1,0 +1,54 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Multi-pod lowering walkthrough (the dry-run, narrated).
+
+    PYTHONPATH=src python examples/multipod_lowering.py [--arch phi3-mini-3.8b]
+
+Shows the public distribution API: build the production mesh, derive
+parameter/cache shardings from the rules, lower a full-size training and
+serving step, and read the compiled artifact's memory/cost/roofline.
+No arrays are allocated at any point.
+"""
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.specs import DryrunOptions, build_lowering, input_specs
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="phi3-mini-3.8b")
+    p.add_argument("--multi-pod", action="store_true")
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)}  ({mesh.devices.size} chips)")
+
+    for shape_name in ("train_4k", "decode_32k"):
+        shape = SHAPES[shape_name]
+        opts = DryrunOptions(remat="full", microbatch=8) \
+            if shape.kind == "train" else DryrunOptions()
+        spec = input_specs(cfg, shape, opts)
+        print(f"\n=== {shape_name} ({shape.kind}) ===")
+        print("inputs:", {k: getattr(v, 'shape', '<tree>')
+                          for k, v in spec.items()})
+        with mesh:
+            lowered = build_lowering(cfg, shape, mesh, opts)
+            compiled = lowered.compile()
+        print("memory_analysis:", compiled.memory_analysis())
+        r = analyze(compiled, cfg, shape,
+                    "multi" if args.multi_pod else "single",
+                    mesh.devices.size, args.arch)
+        print(f"roofline: compute {r.t_compute * 1e3:.1f} ms | memory "
+              f"{r.t_memory * 1e3:.1f} ms | collective "
+              f"{r.t_collective * 1e3:.1f} ms → {r.bottleneck}-bound "
+              f"(roofline frac {100 * r.roofline_frac:.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

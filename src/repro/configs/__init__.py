@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.chatglm3_6b import CONFIG as _chatglm3
+from repro.configs.deepseek_moe_16b import CONFIG as _dsmoe
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2
+from repro.configs.internvl2_2b import CONFIG as _internvl
+from repro.configs.minitron_4b import CONFIG as _minitron
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
+from repro.configs.qwen1_5_32b import CONFIG as _qwen
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.xlstm_125m import CONFIG as _xlstm
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (_qwen, _phi3, _chatglm3, _minitron, _whisper, _rgemma,
+              _dsmoe, _dsv2, _internvl, _xlstm)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+__all__ = ["ARCHS", "get_config", "list_archs", "ModelConfig", "ShapeConfig",
+           "SHAPES", "shape_applicable"]

@@ -1,0 +1,50 @@
+"""Core: the paper's contribution (SRR) + QER baselines + QPEFT."""
+from repro.core.api import (
+    CalibStats,
+    LayerReport,
+    PTQConfig,
+    quantize_layer,
+    quantize_tree,
+    report_summary,
+)
+from repro.core.qer import (
+    Decomposition,
+    qer_decompose,
+    scaled_error,
+    w_only,
+    weight_error,
+)
+from repro.core.qpeft import (
+    AdapterParams,
+    AdapterStatic,
+    adapter_matmul,
+    fixed_gamma_scale,
+    init_adapter,
+    scale_adapter_grads,
+    sgp_scale,
+    tree_scale_grads,
+)
+from repro.core.rank_alloc import (
+    RankSelection,
+    rho_prefix,
+    sample_probe,
+    select_rank,
+    true_reconstruction_error,
+)
+from repro.core.scaling import (
+    SCALING_KINDS,
+    Scaling,
+    identity_scaling,
+    lqer_scaling,
+    make_scaling,
+    qera_approx_scaling,
+    qera_exact_scaling,
+)
+from repro.core.srr import SRRResult, preserved_singular_values, srr_decompose
+from repro.core.svd import (
+    TruncatedSVD,
+    exact_svd,
+    randomized_svd,
+    singular_values,
+    topk_singular_values,
+)

@@ -1,0 +1,91 @@
+"""Baseline QER methods: W ≈ Q + LR with the full rank budget on the
+residual (ZeroQuant-V2 / LQER / QERA-approx / QERA-exact — the baseline
+family of the paper, §2).
+
+All variants share the same construction (Eq. 1):
+
+    Q  = 𝒬(W)
+    LR = S⁻¹ · SVD_r( S (W − Q) )
+
+and differ only in S (see :mod:`repro.core.scaling`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scaling import Scaling
+from repro.core.svd import exact_svd, randomized_svd
+
+
+class Decomposition(NamedTuple):
+    """W ≈ q + l @ r with ``k`` leading adapter ranks marked "preserved".
+
+    ``q`` is the *simulated* (fake-quantized) backbone in weight space;
+    packing for deployment happens downstream (serve/kernels).
+    """
+
+    q: jax.Array   # (m, n)
+    l: jax.Array   # (m, rank)  — l[:, :k] spans the preserved subspace
+    r: jax.Array   # (rank, n)
+    k: int         # preserved rank (0 for plain QER)
+
+    @property
+    def rank(self) -> int:
+        return self.l.shape[1]
+
+    def reconstruct(self) -> jax.Array:
+        return self.q + self.l @ self.r
+
+
+def scaled_error(w: jax.Array, dec: Decomposition, scaling: Scaling) -> jax.Array:
+    """‖S(W − Q − LR)‖_F — the paper's reconstruction objective."""
+    return jnp.linalg.norm(scaling.apply(w.astype(jnp.float32) - dec.reconstruct()))
+
+
+def weight_error(w: jax.Array, dec: Decomposition) -> jax.Array:
+    """‖W − Q − LR‖_F (Fig. 7 metric, S = I)."""
+    return jnp.linalg.norm(w.astype(jnp.float32) - dec.reconstruct())
+
+
+def _svd_factors(a: jax.Array, rank: int, key: Optional[jax.Array],
+                 exact: bool) -> tuple[jax.Array, jax.Array]:
+    """L = U_r, R = Σ_r V_rᵀ of a rank-``rank`` truncation of ``a``."""
+    if rank <= 0:
+        m, n = a.shape
+        return (jnp.zeros((m, 0), jnp.float32), jnp.zeros((0, n), jnp.float32))
+    if exact or key is None:
+        dec = exact_svd(a, rank)
+    else:
+        dec = randomized_svd(a, rank, key)
+    return dec.factors()
+
+
+def qer_decompose(
+    w: jax.Array,
+    scaling: Scaling,
+    quantizer,
+    rank: int,
+    key: Optional[jax.Array] = None,
+    exact: bool = True,
+) -> Decomposition:
+    """Activation-aware QER (Eq. 1). k = 0 by construction."""
+    w = w.astype(jnp.float32)
+    q = quantizer.fake_quant(w)
+    residual = scaling.apply(w - q)
+    lu, rv = _svd_factors(residual, rank, key, exact)
+    return Decomposition(q=q, l=scaling.apply_inv(lu), r=rv, k=0)
+
+
+def w_only(w: jax.Array, quantizer, rank: int) -> Decomposition:
+    """Quantization-only baseline: zero-width adapter."""
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    return Decomposition(
+        q=quantizer.fake_quant(w),
+        l=jnp.zeros((m, rank), jnp.float32),
+        r=jnp.zeros((rank, n), jnp.float32),
+        k=0,
+    )

@@ -1,0 +1,116 @@
+"""QPEFT: SRR-initialized adapters + decoupled gradient scaling (§4.4).
+
+The quantized backbone Q is frozen; the adapter (L, R) is trainable and
+initialized from the SRR decomposition. The two component groups get
+different treatment during fine-tuning:
+
+  * preserved directions (columns L[:, :k], rows R[:k, :]) — gradients
+    attenuated by γ ∈ (0, 1)                       (Eq. 7), or rank-wise
+    by SGP's (1 − λ_i), λ_i = (α+1)σ_i / (ασ_i + σ_1)   (Eq. 8–9);
+  * residual-reconstruction directions — unscaled.
+
+Implemented as a *gradient transform* so it composes with any optimizer
+(`repro.optim` applies it before the Adam update). All ops are jittable:
+``k`` is static per layer (baked at init), masks are precomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qer import Decomposition
+from repro.core.srr import preserved_singular_values
+
+
+class AdapterParams(NamedTuple):
+    """Trainable adapter factors."""
+
+    l: jax.Array  # (m, rank)
+    r: jax.Array  # (rank, n)
+
+
+class AdapterStatic(NamedTuple):
+    """Frozen per-layer state: backbone + scaling coefficients.
+
+    ``grad_scale`` is a per-rank vector g ∈ (0,1]^rank applied to the
+    gradient columns/rows; built once at init for either fixed-γ or SGP.
+    """
+
+    q: jax.Array           # (m, n) frozen fake-quantized backbone
+    grad_scale: jax.Array  # (rank,)
+    k: int
+
+
+def fixed_gamma_scale(rank: int, k: int, gamma: float) -> jax.Array:
+    """g_i = γ for i < k (preserved), 1 otherwise (Eq. 7)."""
+    idx = jnp.arange(rank)
+    return jnp.where(idx < k, gamma, 1.0).astype(jnp.float32)
+
+
+def sgp_scale(dec: Decomposition, alpha: float = 5.0) -> jax.Array:
+    """Rank-wise SGP scaling on the preserved block (Eq. 8–9).
+
+    λ_i = (α+1)σ_i / (ασ_i + σ_1) over the *preserved* singular values;
+    g_i = 1 − λ_i for i < k, 1 for the residual block.
+    """
+    rank, k = dec.rank, dec.k
+    if k == 0:
+        return jnp.ones((rank,), jnp.float32)
+    sigma = preserved_singular_values(dec)[:k]
+    sigma1 = jnp.maximum(sigma[0], 1e-12)
+    lam = (alpha + 1.0) * sigma / (alpha * sigma + sigma1)
+    lam = jnp.clip(lam, 0.0, 1.0)
+    g = jnp.ones((rank,), jnp.float32)
+    return g.at[:k].set(1.0 - lam)
+
+
+def init_adapter(
+    dec: Decomposition,
+    mode: str = "gamma",
+    gamma: float = 0.1,
+    alpha: float = 5.0,
+) -> tuple[AdapterParams, AdapterStatic]:
+    """Build the trainable/frozen split from an SRR (or QER) decomposition."""
+    if mode == "gamma":
+        g = fixed_gamma_scale(dec.rank, dec.k, gamma)
+    elif mode == "sgp":
+        g = sgp_scale(dec, alpha)
+    elif mode == "none":
+        g = jnp.ones((dec.rank,), jnp.float32)
+    else:
+        raise ValueError(f"unknown grad-scaling mode {mode!r}")
+    return (
+        AdapterParams(l=dec.l, r=dec.r),
+        AdapterStatic(q=dec.q, grad_scale=g, k=dec.k),
+    )
+
+
+def scale_adapter_grads(
+    grads: AdapterParams, static: AdapterStatic
+) -> AdapterParams:
+    """Apply the per-rank gradient scaling (jittable, no data-dependent
+    shapes)."""
+    g = static.grad_scale
+    return AdapterParams(l=grads.l * g[None, :], r=grads.r * g[:, None])
+
+
+def adapter_matmul(
+    x: jax.Array, params: AdapterParams, static: AdapterStatic
+) -> jax.Array:
+    """y = x Q + (x L) R — the QPEFT forward. Backbone receives no grads
+    because ``static.q`` is held outside the differentiated pytree."""
+    y = x @ jax.lax.stop_gradient(static.q)
+    return y + (x @ params.l) @ params.r
+
+
+def tree_scale_grads(grads, statics):
+    """Map :func:`scale_adapter_grads` over matching pytrees of adapters."""
+    return jax.tree_util.tree_map(
+        scale_adapter_grads,
+        grads,
+        statics,
+        is_leaf=lambda x: isinstance(x, AdapterParams),
+    )

@@ -1,0 +1,105 @@
+"""Rank-allocation criterion (paper §4.2, Eq. 5).
+
+``k* = argmin_{0≤k≤r}  ρ_k(SW) · ρ_{r−k}(SE)`` where
+
+  ρ_p(A) = 1 − Σ_{j≤p} σ_j(A)² / ‖A‖_F²   (rank-p unrecoverable energy)
+
+and E is a **one-shot** U[−1,1] random probe standing in for the
+normalized quantization-error spectrum (Assumptions 4.1 + 4.2). Only the
+top-r singular values of SW and SE are needed; ‖·‖_F² is computed exactly,
+so ρ is exact even with a truncated spectrum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scaling import Scaling
+from repro.core.svd import randomized_svd, singular_values
+
+
+class RankSelection(NamedTuple):
+    k_star: jax.Array        # scalar int32
+    objective: jax.Array     # (r+1,) surrogate values over k
+    rho_w: jax.Array         # (r+1,) ρ_k(SW), k = 0..r
+    rho_e: jax.Array         # (r+1,) ρ_p(SE), p = 0..r
+
+
+def rho_prefix(top_sv: jax.Array, frob_sq: jax.Array, r: int) -> jax.Array:
+    """ρ_p for p = 0..r from the top-r singular values + exact ‖A‖_F².
+
+    ρ_0 = 1; ρ_p = 1 − Σ_{j≤p} σ_j² / ‖A‖²_F. Clipped to [0, 1] against
+    floating-point drift (randomized σ estimates can slightly overshoot).
+    """
+    sv = top_sv[:r]
+    energy = jnp.concatenate([jnp.zeros((1,), top_sv.dtype), jnp.cumsum(sv**2)])
+    return jnp.clip(1.0 - energy / jnp.maximum(frob_sq, 1e-30), 0.0, 1.0)
+
+
+def sample_probe(key: jax.Array, shape: tuple[int, int]) -> jax.Array:
+    """E_ij ~ U[-1, 1] — Algorithm 1 line 1."""
+    return jax.random.uniform(key, shape, minval=-1.0, maxval=1.0,
+                              dtype=jnp.float32)
+
+
+def select_rank(
+    w: jax.Array,
+    scaling: Scaling,
+    r: int,
+    key: jax.Array,
+    exact: bool = False,
+    n_iter: int = 4,
+) -> RankSelection:
+    """Layer-wise k* selection (Algorithm 1 lines 1–2).
+
+    ``exact=True`` uses full SVDs (oracle / small benchmark matrices);
+    otherwise randomized top-r sketches per App. A.4.
+    """
+    kp, ks = jax.random.split(key)
+    sw = scaling.apply(w.astype(jnp.float32))
+    probe = sample_probe(kp, w.shape)
+    se = scaling.apply(probe)
+
+    if exact:
+        sv_w = singular_values(sw)
+        sv_e = singular_values(se)
+    else:
+        k1, k2 = jax.random.split(ks)
+        sv_w = randomized_svd(sw, r, k1, n_iter=n_iter).s
+        sv_e = randomized_svd(se, r, k2, n_iter=n_iter).s
+
+    rho_w = rho_prefix(sv_w, jnp.sum(sw**2), r)
+    rho_e = rho_prefix(sv_e, jnp.sum(se**2), r)
+    # objective over k: ρ_k(SW) · ρ_{r−k}(SE)
+    objective = rho_w * rho_e[::-1]
+    k_star = jnp.argmin(objective).astype(jnp.int32)
+    return RankSelection(k_star, objective, rho_w, rho_e)
+
+
+def true_reconstruction_error(
+    w: jax.Array,
+    scaling: Scaling,
+    quantizer,
+    r: int,
+    k: int,
+) -> jax.Array:
+    """Brute-force L(k) = ‖SE_k − SVD_{r−k}(SE_k)‖_F (Eq. 3, oracle).
+
+    Used by benchmarks (Fig. 2) to validate the surrogate; O(full SVD + one
+    quantization) per k, exactly the cost the surrogate avoids.
+    """
+    w = w.astype(jnp.float32)
+    sw = scaling.apply(w)
+    if k > 0:
+        u, s, vt = jnp.linalg.svd(sw, full_matrices=False)
+        preserved = scaling.apply_inv((u[:, :k] * s[:k]) @ vt[:k])
+    else:
+        preserved = jnp.zeros_like(w)
+    q = quantizer.fake_quant(w - preserved)
+    e_k = w - preserved - q
+    se_k = scaling.apply(e_k)
+    sv = jnp.linalg.svd(se_k, compute_uv=False)
+    tail = jnp.sum(sv[r - k:] ** 2)
+    return jnp.sqrt(tail)

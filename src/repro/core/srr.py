@@ -1,0 +1,99 @@
+"""Structured Residual Reconstruction — Algorithm 1 of the paper.
+
+Preserve-then-quantize with an explicit rank split:
+
+  1. k* ← argmin_k ρ_k(SW) ρ_{r−k}(SE)          (one-shot random probe)
+  2. L⁽¹⁾R⁽¹⁾ ← S⁻¹ SVD_{k*}(SW)                 (preserve)
+  3. Q ← 𝒬(W − L⁽¹⁾R⁽¹⁾)                         (quantize the residual)
+  4. E ← W − L⁽¹⁾R⁽¹⁾ − Q                        (induced quantization error)
+  5. L⁽²⁾R⁽²⁾ ← S⁻¹ SVD_{r−k*}(SE)               (reconstruct)
+  6. L ← [L⁽¹⁾ L⁽²⁾],  R ← [R⁽¹⁾; R⁽²⁾]
+
+``variant="joint"`` implements the paper's Eq. 6 alternative: after the
+preserve-quantize step, a *single* rank-r SVD of S(W − Q) replaces steps
+5–6 (optimal for fixed Q by Eckart–Young; the leading components recover
+the preserved structure).
+
+The split point k* requires a concrete Python int (it sets array shapes),
+so decomposition is a host-driven offline routine — exactly how the paper
+runs it (a calibration-time pipeline, not a training-step op).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qer import Decomposition, _svd_factors
+from repro.core.rank_alloc import RankSelection, select_rank
+from repro.core.scaling import Scaling
+
+
+class SRRResult(NamedTuple):
+    decomposition: Decomposition
+    selection: Optional[RankSelection]  # None when k was forced
+
+
+def srr_decompose(
+    w: jax.Array,
+    scaling: Scaling,
+    quantizer,
+    rank: int,
+    key: jax.Array,
+    k: Optional[int] = None,
+    exact: bool = True,
+    variant: str = "split",
+) -> SRRResult:
+    """Full SRR pipeline for one weight matrix.
+
+    Args:
+      w: (m, n) weight, used as ``y = x @ w``.
+      scaling: activation-aware S.
+      quantizer: object with ``fake_quant``.
+      rank: total budget r.
+      key: PRNG key — drives the probe and randomized SVD sketches.
+      k: force a split (benchmarks); None selects k* via Eq. 5.
+      exact: exact SVDs (oracle) vs randomized (paper's production path).
+      variant: "split" (Algorithm 1) or "joint" (Eq. 6).
+    """
+    if variant not in ("split", "joint"):
+        raise ValueError(f"unknown SRR variant {variant!r}")
+    w = w.astype(jnp.float32)
+    k_sel, k_probe, k_svd1, k_svd2 = jax.random.split(key, 4)
+
+    selection = None
+    if k is None:
+        selection = select_rank(w, scaling, rank, k_sel, exact=exact)
+        k = int(selection.k_star)
+    if not 0 <= k <= rank:
+        raise ValueError(f"k={k} outside budget r={rank}")
+
+    # --- preserve: top-k of SW, mapped back to weight space -------------
+    sw = scaling.apply(w)
+    l1s, r1 = _svd_factors(sw, k, k_svd1, exact)
+    l1 = scaling.apply_inv(l1s)
+    preserved = l1 @ r1 if k > 0 else jnp.zeros_like(w)
+
+    # --- quantize the residual ------------------------------------------
+    q = quantizer.fake_quant(w - preserved)
+    e = w - preserved - q
+
+    if variant == "split":
+        # --- reconstruct the induced error with the remaining budget ----
+        l2s, r2 = _svd_factors(scaling.apply(e), rank - k, k_svd2, exact)
+        l2 = scaling.apply_inv(l2s)
+        l = jnp.concatenate([l1, l2], axis=1)
+        r = jnp.concatenate([r1, r2], axis=0)
+    else:
+        # Eq. 6: single rank-r reconstruction of W − Q (= preserved + E)
+        ls, r = _svd_factors(scaling.apply(w - q), rank, k_svd2, exact)
+        l = scaling.apply_inv(ls)
+
+    return SRRResult(Decomposition(q=q, l=l, r=r, k=k), selection)
+
+
+def preserved_singular_values(dec: Decomposition) -> jax.Array:
+    """σ_i of the adapter rows (paper stores R = Σ Vᵀ, so row norms of R
+    are the component singular values — used by SGP gradient scaling)."""
+    return jnp.linalg.norm(dec.r, axis=1)

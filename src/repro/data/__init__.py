@@ -1,0 +1,14 @@
+"""Data substrate: deterministic synthetic streams + calibration capture."""
+from repro.data.calibration import calibration_summary, capture_calibration
+from repro.data.synthetic import (
+    DataConfig,
+    batches,
+    data_config_for,
+    host_batch,
+    sample_tokens,
+)
+
+__all__ = [
+    "DataConfig", "batches", "data_config_for", "host_batch",
+    "sample_tokens", "calibration_summary", "capture_calibration",
+]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the QER/SRR serving + quantization hot spots.
+
+Validated on CPU with interpret=True against the pure-jnp oracles in
+ref.py; compiled for TPU in deployment (ops.py auto-selects).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import mxint_lowrank_matmul, mxint_quantize
+
+__all__ = ["ops", "ref", "mxint_lowrank_matmul", "mxint_quantize"]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused MXINT dequant-matmul with low-rank correction.
+
+The QER/SRR serving hot spot is ``y = x·dequant(Q) + (x·L)·R``. A naive
+XLA lowering materializes the dequantized f32/bf16 weight in HBM (2–4×
+the quantized bytes) and runs the rank-r correction as a separate GEMM
+with its own HBM round trip of the (M, N) output. This kernel instead:
+
+  * streams int8 codes + per-32-block scales HBM→VMEM tile by tile and
+    dequantizes *in VMEM* into an MXU-aligned (bk, bn) tile — the weight
+    never exists in HBM at full precision, so the matmul's memory traffic
+    is ~bits/16 of the bf16 baseline;
+  * accumulates x @ W_tile in an f32 VMEM accumulator across the K grid;
+  * fuses the low-rank correction on the **last K step**: ``xl = x·L``
+    (an (M, r) sliver computed once outside — r ≤ 64 ≪ K so it is
+    negligible) is multiplied by the (r, bn) slice of R straight into the
+    same accumulator, saving a full (M, N) HBM round trip.
+
+Tiling: bm×bn×bk = 128×128×512 by default — multiples of the 128×128 MXU;
+bk a multiple of the MXINT block (32) so scale tiles align. VMEM per
+step ≈ x(128·512·4) + codes(512·128) + scale(16·128·4) + out(128·128·4)
++ xl/r slivers ≈ 390 KiB ≪ 16 MiB v5e VMEM, leaving headroom for
+double-buffering the HBM streams.
+
+TPU adaptation note (DESIGN.md §3): the CUDA equivalents (e.g. LQER's
+fused dequant GEMM) pivot on warp-level shuffles; here the same insight —
+"dequantize in fast memory, fuse the correction" — maps to VMEM tiling +
+MXU-aligned blocks instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
+            n_k: int, mx_block: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ dequant(codes[k,j])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[...].astype(jnp.float32)        # (bk, bn)
+    scale = scale_ref[...]                            # (bk/32, bn)
+    bk, bn = codes.shape
+    w = (codes.reshape(bk // mx_block, mx_block, bn)
+         * scale[:, None, :]).reshape(bk, bn)
+    x = x_ref[...].astype(jnp.float32)                # (bm, bk)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _lowrank():
+        xl = xl_ref[...].astype(jnp.float32)          # (bm, r)
+        rr = r_ref[...].astype(jnp.float32)           # (r, bn)
+        o_ref[...] += jnp.dot(xl, rr, preferred_element_type=jnp.float32)
+
+
+def mxint_lowrank_matmul_2d(
+    x: jax.Array,        # (M, K)
+    codes: jax.Array,    # (K, N) int8
+    scale: jax.Array,    # (K/32, N) f32
+    xl: jax.Array,       # (M, r) — precomputed x @ L
+    r: jax.Array,        # (r, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call; caller guarantees M % bm == K % bk == N % bn == 0
+    and bk % mx_block == 0."""
+    m, k = x.shape
+    _, n = codes.shape
+    mx_block = k // scale.shape[0]
+    assert bk % mx_block == 0, (bk, mx_block)
+    rr = max(r.shape[0], 1)
+    if r.shape[0] == 0:  # rank-0: keep the kernel uniform with a zero sliver
+        xl = jnp.zeros((m, 1), x.dtype)
+        r = jnp.zeros((1, n), x.dtype)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, mx_block=mx_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // mx_block, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, rr), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((rr, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale, xl, r)

@@ -1,0 +1,133 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles everything the raw kernels don't: batch/sequence flattening,
+padding to tile multiples, the (x · L) sliver, dtype plumbing, and
+interpret-mode fallback so the same call sites run on CPU (validation)
+and TPU (deployment). ``repro.models.linear`` routes here when
+``ctx.use_pallas`` is set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mxint_matmul import mxint_lowrank_matmul_2d
+from repro.kernels.mxint_quantize import mxint_quantize_2d
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mxint_lowrank_matmul(
+    x: jax.Array,        # (..., K)
+    codes: jax.Array,    # (K, N) int8
+    scale: jax.Array,    # (K/B, N) f32
+    l: jax.Array,        # (K, r)
+    r: jax.Array,        # (r, N)
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """y = x · dequant(codes, scale) + (x · L) · R, any leading dims."""
+    k, n = codes.shape
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+
+    # the (M, r) sliver: r ≤ 64 ≪ K, negligible FLOPs, one fused GEMM
+    xl = xf.astype(jnp.float32) @ l.astype(jnp.float32) \
+        if l.shape[-1] > 0 else jnp.zeros((m, 0), jnp.float32)
+
+    bk = min(bk, k)
+    while k % bk:
+        bk //= 2
+    bmm = min(bm, max(8, m))
+    xp = _pad_to(xf, bmm, 0)
+    xlp = _pad_to(xl, bmm, 0)
+    cp = _pad_to(codes, bn, 1)
+    sp = _pad_to(scale, bn, 1)
+    rp = _pad_to(r, bn, 1)
+
+    y = mxint_lowrank_matmul_2d(
+        xp, cp, sp, xlp, rp, bm=bmm, bn=min(bn, cp.shape[1]), bk=bk,
+        interpret=_interpret())
+    y = y[:m, :n]
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mx_block", "bm", "bn"))
+def mxint_quantize(
+    w: jax.Array,        # (M, N), M % mx_block == 0
+    bits: int = 3,
+    mx_block: int = 32,
+    bm: int = 256,
+    bn: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """(codes, exponents) = MXINT(w); pads N (and M to a block multiple)."""
+    m, n = w.shape
+    assert m % mx_block == 0, "pad rows to the MXINT block before calling"
+    bmm = min(bm, m)
+    while m % bmm:
+        bmm -= mx_block
+    wp = _pad_to(w, bn, 1)
+    codes, exps = mxint_quantize_2d(
+        wp, bits=bits, mx_block=mx_block, bm=bmm,
+        bn=min(bn, wp.shape[1]), interpret=_interpret())
+    return codes[:, :n], exps[:, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(
+    q: jax.Array,        # (B, Sq, KV, G, hd)
+    k: jax.Array,        # (B, Sk, KV, hd)
+    v: jax.Array,        # (B, Sk, KV, hd)
+    q_pos: jax.Array,    # (Sq,)
+    k_pos: jax.Array,    # (Sk,)
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 256,
+    bk: int = 256,
+) -> jax.Array:
+    """Model-layout wrapper over the flash kernel: handles GQA group
+    broadcast, (B·KV·G) flattening and Sq/Sk padding. Returns
+    (B, Sq, KV, G, hd) like blockwise_attention."""
+    from repro.kernels.flash_attention import flash_attention_hsd
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    kb = jnp.broadcast_to(k[:, :, :, None, :], (b, sk, kvh, g, hd))
+    vb = jnp.broadcast_to(v[:, :, :, None, :], (b, sk, kvh, g, hd))
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, sq, hd)
+    kf = kb.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, sk, hd)
+    vf = vb.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, sk, hd)
+
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    pq = (-sq) % bq_
+    pk = (-sk) % bk_
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pk), constant_values=-1)
+    out = flash_attention_hsd(
+        qf, kf, vf, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32),
+        causal=causal, window=window, bq=bq_, bk=bk_,
+        interpret=_interpret())
+    out = out[:, :sq].reshape(b, kvh, g, sq, hd).transpose(0, 3, 1, 2, 4)
+    return out.astype(q.dtype)

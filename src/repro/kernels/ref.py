@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics pinned by one of these
+reference functions; tests sweep shapes/dtypes and assert allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mxint_dequant_ref(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """codes (K, N) int8 × per-block scale (K/B, N) → f32 weight."""
+    k, n = codes.shape
+    nb = scale.shape[0]
+    block = k // nb
+    w = codes.astype(jnp.float32).reshape(nb, block, n) * scale[:, None, :]
+    return w.reshape(k, n)
+
+
+def mxint_lowrank_matmul_ref(
+    x: jax.Array,       # (M, K) or (..., K)
+    codes: jax.Array,   # (K, N) int8
+    scale: jax.Array,   # (K/B, N) f32
+    l: jax.Array,       # (K, r)
+    r: jax.Array,       # (r, N)
+) -> jax.Array:
+    """y = x · dequant(codes, scale) + (x · L) · R — the QER serving op."""
+    w = mxint_dequant_ref(codes, scale)
+    xf = x.astype(jnp.float32)
+    y = xf @ w
+    if l.shape[-1] > 0:
+        y = y + (xf @ l.astype(jnp.float32)) @ r.astype(jnp.float32)
+    return y
+
+
+def mxint_quantize_ref(w: jax.Array, bits: int = 3,
+                       block: int = 32) -> tuple[jax.Array, jax.Array]:
+    """(M, N) f32 → (codes int8 (M, N), exponents int8 (M/B, N)).
+
+    Mirrors repro.quant.mxint.MXIntQuantizer.quantize for row counts that
+    are multiples of ``block`` (kernel path never pads)."""
+    m, n = w.shape
+    assert m % block == 0
+    qmax = 2 ** (bits - 1) - 1
+    blocks = w.astype(jnp.float32).reshape(m // block, block, n)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    exp = jnp.clip(jnp.ceil(jnp.log2(safe / qmax)), -127, 127)
+    scale = jnp.exp2(exp)[:, None, :]
+    codes = jnp.clip(jnp.round(blocks / scale), -qmax - 1, qmax)
+    codes = jnp.where(amax[:, None, :] > 0, codes, 0.0)
+    return (codes.reshape(m, n).astype(jnp.int8), exp.astype(jnp.int8))
+
+
+def flash_attention_ref(
+    q: jax.Array,       # (H, Sq, hd)
+    k: jax.Array,       # (H, Sk, hd)
+    v: jax.Array,       # (H, Sk, hd)
+    q_pos: jax.Array,   # (Sq,)
+    k_pos: jax.Array,   # (Sk,), -1 invalid
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Dense-softmax oracle for the flash attention kernel."""
+    hd = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    mask = (k_pos[None, :] >= 0)
+    mask = jnp.broadcast_to(mask, s.shape[1:])
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if window > 0:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    neg = -0.7 * float(jnp.finfo(jnp.float32).max)
+    s = jnp.where(mask[None], s, neg)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))

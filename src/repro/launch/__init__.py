@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only as
+``python -m repro.launch.dryrun``. This package init deliberately does
+not re-export it.
+"""
+from repro.launch.mesh import make_host_mesh, make_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including jax and
+# repro.*): jax locks the device count at first initialization, and the
+# multi-pod dry-run needs 512 placeholder host devices to build the
+# production mesh. Everything below is ordinary code.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds abstract inputs (ShapeDtypeStruct — nothing is allocated),
+  2. jit's the step with explicit in/out shardings over the production
+     mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  3. ``.lower().compile()`` — any sharding mismatch, OOM-at-compile or
+     unsupported collective fails the cell (a bug in our system),
+  4. prints ``memory_analysis()`` / ``cost_analysis()`` and writes the
+     roofline record (repro.launch.roofline) to JSON.
+
+Usage:
+    python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, save
+from repro.launch.specs import DryrunOptions, build_lowering
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: DryrunOptions, out_dir: str, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if not ok:
+        if verbose:
+            print(f"[dryrun] SKIP {tag}: {why}")
+        return {"cell": tag, "status": "skip", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            lowered = build_lowering(cfg, shape, mesh, opts)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+    except Exception as e:
+        traceback.print_exc()
+        rec = {"cell": tag, "status": "fail", "error": f"{type(e).__name__}: {e}"}
+        if out_dir:
+            with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        pass
+    if verbose:
+        print(f"[dryrun] {tag}: lower {t1 - t0:.1f}s compile {t2 - t1:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        keep = {k: v for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "transcendentals")}
+        print(f"  cost_analysis:   {keep}")
+
+    r = analyze(compiled, cfg, shape, mesh_name, chips, arch)
+    if verbose:
+        print(f"  roofline: compute {r.t_compute * 1e3:.2f} ms | "
+              f"memory {r.t_memory * 1e3:.2f} ms | "
+              f"collective {r.t_collective * 1e3:.2f} ms "
+              f"→ {r.bottleneck}-bound; useful-FLOPs "
+              f"{100 * r.useful_flops_frac:.1f}%, roofline frac "
+              f"{100 * r.roofline_frac:.1f}%")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        save(r, os.path.join(out_dir, tag + ".json"))
+    rec = r.to_dict()
+    rec.update(cell=tag, status="ok",
+               lower_s=t1 - t0, compile_s=t2 - t1)
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="architecture id (or --all)")
+    p.add_argument("--shape", default=None,
+                   help="shape name (default: all applicable)")
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true", help="every arch")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--remat", default="none", choices=["none", "full"])
+    p.add_argument("--microbatch", type=int, default=0)
+    p.add_argument("--kv", default="int8", choices=["int8", "bf16"])
+    p.add_argument("--rank", type=int, default=64)
+    p.add_argument("--no-donate", action="store_true")
+    p.add_argument("--qchunk", type=int, default=512)
+    p.add_argument("--kvchunk", type=int, default=1024)
+    args = p.parse_args(argv)
+
+    opts = DryrunOptions(remat=args.remat, microbatch=args.microbatch,
+                         kv_dtype=args.kv, rank=args.rank,
+                         donate=not args.no_donate,
+                         q_chunk=args.qchunk, kv_chunk=args.kvchunk)
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                results.append(run_cell(arch, shape, multi, opts, args.out))
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skip")
+    n_fail = sum(1 for r in results if r["status"] == "fail")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} FAIL")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,342 @@
+"""While-loop-aware cost analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, which
+under-reports any scan-over-layers / chunked-attention model by the trip
+count (verified empirically: an 8-step lax.scan of a matmul reports 1/8
+of the unrolled FLOPs). Since the production models here lean on scan for
+O(period) compile times, the roofline needs loop-aware accounting.
+
+This module parses ``compiled.as_text()`` — the per-device partitioned
+module — into computations and ops, then walks the call graph:
+
+  * ``while``  : (body + cond) × trip count (trip = the max integer
+                 constant in the condition computation — exact for the
+                 counted loops lax.scan/map emit);
+  * ``fusion`` / ``call``: FLOPs recurse into the called computation;
+                 bytes count the call-site operands + results only
+                 (matching XLA's fusion accounting: internals stay in
+                 registers/VMEM);
+  * ``dot``    : 2 × |result| × |contracting dims|;
+  * elementwise/reduce: 1 FLOP per output element (second-order);
+  * collectives: result bytes, accumulated per kind, trip-multiplied.
+
+Outputs per-chip totals: flops, bytes, collective bytes by kind — the
+three roofline terms' numerators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{} ]+?)\s+"
+    r"([\w\-]+)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "negate", "abs", "rsqrt", "sqrt",
+    "logistic", "floor", "ceil", "round-nearest-even", "cosine", "sine",
+    "select", "compare", "and", "or", "xor", "not", "clamp",
+    "exponential-minus-one", "log-plus-one", "sign", "atan2", "remainder",
+}
+FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "rng-bit-generator",
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(text: str) -> Tuple[int, int]:
+    """(elements, bytes) of a shape or tuple-shape string."""
+    elems = 0
+    size = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        size += n * _DTYPE_BYTES[dt]
+    return elems, size
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str          # result shape text
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str]   # op name -> result shape text
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in COLLECTIVES}
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+                # parameters declared in the header keep their own lines
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, shape, opcode = m.group(1), m.group(2).strip(), m.group(3)
+            cur.symbols[name] = shape
+            cur.ops.append(Op(name, shape, opcode, s))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_shapes(op: Op, comp: Computation) -> List[str]:
+    inner = op.line.split("(", 1)[1]
+    inner = inner.split(")", 1)[0]
+    names = _OPERAND_RE.findall(inner)
+    return [comp.symbols.get(n, "") for n in names]
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_computations(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._param_memo: Dict[Tuple[str, int], Optional[float]] = {}
+
+    def _dus_root_slice_bytes(self, callee: Optional["Computation"]
+                              ) -> Optional[float]:
+        """If the callee's ROOT is a dynamic-update-slice (possibly via
+        bitcast), return the update-slice bytes, else None."""
+        if callee is None:
+            return None
+        root = None
+        for op in callee.ops:
+            if "ROOT %" in op.line or op.line.startswith("ROOT"):
+                root = op
+        if root is None and callee.ops:
+            root = callee.ops[-1]
+        seen = 0
+        while root is not None and root.opcode in ("bitcast", "copy",
+                                                   "convert") and seen < 4:
+            ops_ = _OPERAND_RE.findall(root.line.split("(", 1)[1])
+            nxt = next((o for o in callee.ops if o.name in ops_), None)
+            root = nxt
+            seen += 1
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = _operand_shapes(root, callee)
+            if len(upd) > 1:
+                return float(_shape_info(upd[1])[1])
+        return None
+
+    def _param_effective_bytes(self, callee: "Computation",
+                               index: int) -> Optional[float]:
+        """If fusion parameter ``index`` is consumed only by dynamic-slice
+        (read) or is the target of dynamic-update-slice (in-place write),
+        return the slice bytes; None → count the full operand."""
+        key = (callee.name, index)
+        if key in self._param_memo:
+            return self._param_memo[key]
+        pname = None
+        for op in callee.ops:
+            if op.opcode == "parameter" and f"parameter({index})" in op.line:
+                pname = op.name
+                break
+        result: Optional[float] = None
+        if pname is not None:
+            uses = [op for op in callee.ops
+                    if op.opcode != "parameter"
+                    and re.search(r"%" + re.escape(pname) + r"\b", op.line)]
+            if uses and all(u.opcode in ("dynamic-slice",
+                                         "dynamic-update-slice")
+                            for u in uses):
+                total = 0.0
+                for u in uses:
+                    if u.opcode == "dynamic-slice":
+                        total += _shape_info(u.shape)[1]
+                    else:  # DUS: find the update operand's size
+                        shapes = _operand_shapes(u, callee)
+                        upd = (_shape_info(shapes[1])[1]
+                               if len(shapes) > 1 else 0)
+                        total += 2.0 * upd  # read-modify-write of the slice
+                result = total
+        self._param_memo[key] = result
+        return result
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        self._memo[name] = total  # break cycles defensively
+        if comp is None:
+            return total
+        for op in comp.ops:
+            total += self.op_cost(op, comp)
+        return total
+
+    def op_cost(self, op: Op, comp: Computation) -> Cost:
+        oc = op.opcode
+        if oc in FREE_OPS:
+            return Cost()
+        out_elems, out_bytes = _shape_info(op.shape)
+
+        if oc == "while":
+            body = _BODY_RE.search(op.line)
+            cond = _COND_RE.search(op.line)
+            trip = 1
+            inner = Cost()
+            if cond and cond.group(1) in self.comps:
+                trip = _trip_count(self.comps[cond.group(1)])
+                inner += self.comp_cost(cond.group(1))
+            if body and body.group(1) in self.comps:
+                inner += self.comp_cost(body.group(1))
+            return inner.scaled(trip)
+
+        if oc in ("fusion", "call", "custom-call"):
+            c = Cost()
+            m = _CALLS_RE.search(op.line)
+            callee = self.comps.get(m.group(1)) if m else None
+            if callee is not None:
+                inner = self.comp_cost(callee.name)
+                c += Cost(inner.flops, 0.0, inner.coll)
+            # bytes at the call boundary: operands + result — EXCEPT
+            # in-place slice updates. A fusion whose root is a dynamic-
+            # update-slice aliases its big buffer operand with the output
+            # and touches only the slice region (XLA in-place DUS); and a
+            # parameter consumed only by dynamic-slice reads only the
+            # slice. Counting full buffers would overstate scan-carried
+            # accumulator traffic by the trip count.
+            shapes = _operand_shapes(op, comp)
+            opb_list = [float(_shape_info(s)[1]) for s in shapes]
+            ob = float(out_bytes)
+            if callee is not None:
+                # params consumed only through dynamic-(update-)slice read/
+                # write just the slice region
+                for i in range(len(opb_list)):
+                    eff = self._param_effective_bytes(callee, i)
+                    if eff is not None:
+                        opb_list[i] = min(opb_list[i], eff)
+                # a DUS-rooted fusion writes only the updated slice (the
+                # output buffer aliases the big input in place)
+                dus_slice = self._dus_root_slice_bytes(callee)
+                if dus_slice is not None:
+                    ob = min(ob, dus_slice)
+            c += Cost(0.0, sum(opb_list) + ob)
+            return c
+
+        if oc == "conditional":
+            # branches: worst case (sum would double-count)
+            branches = re.findall(r"%([\w.\-]+)", op.line)
+            cs = [self.comp_cost(b) for b in branches if b in self.comps]
+            best = max(cs, key=lambda c: c.flops, default=Cost())
+            return best
+
+        # leaf op: bytes = operands + result
+        opb = sum(_shape_info(s)[1] for s in _operand_shapes(op, comp))
+        c = Cost(0.0, opb + out_bytes)
+
+        if oc.startswith(COLLECTIVES):
+            for k in COLLECTIVES:
+                if oc.startswith(k):
+                    if not oc.endswith("-done"):
+                        c.coll[k] += out_bytes
+                    break
+            return c
+
+        if oc == "dot":
+            m = _LHS_CDIMS.search(op.line)
+            shapes = _operand_shapes(op, comp)
+            contract = 1
+            if m and shapes and shapes[0]:
+                dims_txt = _SHAPE_RE.search(shapes[0])
+                if dims_txt:
+                    lhs_dims = [int(d) for d in dims_txt.group(2).split(",")
+                                if d]
+                    for ci in m.group(1).split(","):
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+            c.flops += 2.0 * out_elems * contract
+        elif oc == "convolution":
+            # rough: 2 × out × (kernel elems) — unused by the model zoo
+            c.flops += 2.0 * out_elems
+        elif oc in ELEMENTWISE or oc in ("reduce", "reduce-window",
+                                         "exponential", "map"):
+            c.flops += float(out_elems)
+        return c
+
+
+def analyze_text(hlo_text: str) -> Dict[str, float]:
+    hc = HloCost(hlo_text)
+    t = hc.total()
+    eff = sum(t.coll.values()) + t.coll["all-reduce"]  # AR ≈ RS + AG
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "collective_bytes": eff,
+        "coll_by_kind": dict(t.coll),
+    }

@@ -1,0 +1,213 @@
+"""Abstract inputs + sharded step builders for the multi-pod dry-run.
+
+Everything here works on ShapeDtypeStructs — no array is ever allocated,
+so lowering a 32B model × 32k context × 512 devices is pure compilation.
+
+Three step kinds per (arch × shape) cell:
+
+  train   : full-parameter LM training (AdamW state included), bf16
+  prefill : prompt processing over the quantized Q + LR model
+  decode  : one-token serve_step over the quantized model + KV cache
+
+The quantized serving trees use the int8-codes container (3-bit codes in
+an int8 carrier + f32 block scales; DESIGN.md §3 records the accounting)
+with the paper's r = 64 adapters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Ctx, decode_step, init_lm, lm_loss
+from repro.models.transformer import init_cache, prefill
+from repro.models.quantize import quantized_abstract
+from repro.optim import AdamW, cosine_schedule
+from repro.sharding import (
+    batch_spec,
+    tree_cache_shardings,
+    tree_param_specs,
+    tree_shardings,
+)
+from repro.train import StepConfig, TrainState, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunOptions:
+    """Perf-iteration knobs (EXPERIMENTS.md §Perf records their effect)."""
+    remat: str = "none"            # none | full
+    microbatch: int = 0
+    kv_dtype: str = "int8"         # decode cache: int8 | bf16
+    rank: int = 64                 # adapter rank for serve paths
+    compute_dtype: Any = jnp.bfloat16
+    donate: bool = True
+    q_chunk: int = 512             # blockwise attention tiling
+    kv_chunk: int = 1024
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_lm(k, cfg, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def abstract_quant_params(cfg: ModelConfig, rank: int = 64):
+    return quantized_abstract(abstract_params(cfg), rank=rank)
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch stand-ins."""
+    b, s = shape.global_batch, shape.seq_len
+    S = jax.ShapeDtypeStruct
+    out = {"tokens": S((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = S((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = S((b, cfg.enc_seq, cfg.d_frontend), dtype)
+    if cfg.n_vision_tokens:
+        out["vision"] = S((b, cfg.n_vision_tokens,
+                           cfg.d_frontend or cfg.d_model), dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opts: DryrunOptions = DryrunOptions()) -> Dict[str, Any]:
+    """All abstract inputs for this cell's step (public dry-run surface)."""
+    if shape.kind == "train":
+        return {"batch": batch_structs(cfg, shape, opts.compute_dtype)}
+    if shape.kind == "prefill":
+        return {
+            "batch": batch_structs(cfg, shape, opts.compute_dtype),
+            "cache": abstract_cache(cfg, shape, opts),
+        }
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cache": abstract_cache(cfg, shape, opts),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig,
+                   opts: DryrunOptions):
+    dt = jnp.int8 if opts.kv_dtype == "int8" else jnp.bfloat16
+    slots = shape.seq_len
+    if shape.kind == "prefill" and cfg.n_vision_tokens:
+        slots += cfg.n_vision_tokens  # vision tokens prepend to the prompt
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, slots, dtype=dt))
+
+
+# ==========================================================================
+# Step builders (abstract in, lowered out)
+# ==========================================================================
+def _shardings_of(tree: Any, mesh: Mesh, spec_fn) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(mesh, spec_fn(path, x.shape)), tree)
+
+
+def build_train_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                         opts: DryrunOptions = DryrunOptions()):
+    """jit(train_step).lower(...) for this cell."""
+    opt = AdamW(learning_rate=cosine_schedule(3e-4, 100, 10_000),
+                weight_decay=0.1)
+    sc = StepConfig(remat=opts.remat, microbatch=opts.microbatch,
+                    compute_dtype=opts.compute_dtype, mesh=mesh)
+    step = make_train_step(cfg, opt, sc)
+
+    params_abs = abstract_params(cfg, opts.compute_dtype)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    state_abs = TrainState(params=params_abs, opt=opt_abs,
+                           step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    from repro.optim import AdamState
+    pspecs = tree_shardings(params_abs, mesh)
+    rep = NamedSharding(mesh, P())
+    ospecs = TrainState(  # Adam moments share the param layout (FSDP)
+        params=pspecs,
+        opt=AdamState(step=rep, mu=tree_shardings(params_abs, mesh),
+                      nu=tree_shardings(params_abs, mesh)),
+        step=rep)
+    batch_abs = batch_structs(cfg, shape, opts.compute_dtype)
+    bspecs = {k: NamedSharding(
+        mesh, batch_spec(mesh, shape.global_batch, len(v.shape) - 1))
+        for k, v in batch_abs.items()}
+    metric_specs = {"loss": NamedSharding(mesh, P()),
+                    "grad_norm": NamedSharding(mesh, P()),
+                    "step": NamedSharding(mesh, P())}
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(ospecs, bspecs),
+        out_shardings=(ospecs, metric_specs),
+        donate_argnums=(0,) if opts.donate else (),
+    )
+    return jitted.lower(state_abs, batch_abs)
+
+
+def build_prefill_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                           opts: DryrunOptions = DryrunOptions()):
+    ctx = Ctx(compute_dtype=opts.compute_dtype, mesh=mesh,
+              attn_q_chunk=opts.q_chunk, attn_kv_chunk=opts.kv_chunk)
+
+    def prefill_step(params, batch, cache):
+        return prefill(ctx, params, batch, cfg, cache)
+
+    qparams = abstract_quant_params(cfg, opts.rank)
+    cache_abs = abstract_cache(cfg, shape, opts)
+    batch_abs = batch_structs(cfg, shape, opts.compute_dtype)
+
+    pspecs = tree_shardings(qparams, mesh)
+    cspecs = tree_cache_shardings(cache_abs, mesh, shape.global_batch)
+    bspecs = {k: NamedSharding(
+        mesh, batch_spec(mesh, shape.global_batch, len(v.shape) - 1))
+        for k, v in batch_abs.items()}
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(pspecs, bspecs, cspecs),
+        out_shardings=(NamedSharding(
+            mesh, batch_spec(mesh, shape.global_batch, 2)), cspecs),
+        donate_argnums=(2,) if opts.donate else (),
+    )
+    return jitted.lower(qparams, batch_abs, cache_abs)
+
+
+def build_decode_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                          opts: DryrunOptions = DryrunOptions()):
+    ctx = Ctx(compute_dtype=opts.compute_dtype, mesh=mesh)
+
+    def serve_step(params, token, cache):
+        return decode_step(ctx, params, token, cache, cfg)
+
+    qparams = abstract_quant_params(cfg, opts.rank)
+    cache_abs = abstract_cache(cfg, shape, opts)
+    token_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+    pspecs = tree_shardings(qparams, mesh)
+    cspecs = tree_cache_shardings(cache_abs, mesh, shape.global_batch)
+    tspec = NamedSharding(mesh, batch_spec(mesh, shape.global_batch, 1))
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(pspecs, tspec, cspecs),
+        out_shardings=(NamedSharding(
+            mesh, batch_spec(mesh, shape.global_batch, 2)), cspecs),
+        donate_argnums=(2,) if opts.donate else (),
+    )
+    return jitted.lower(qparams, token_abs, cache_abs)
+
+
+BUILDERS: Dict[str, Callable] = {
+    "train": build_train_lowering,
+    "prefill": build_prefill_lowering,
+    "decode": build_decode_lowering,
+}
+
+
+def build_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   opts: DryrunOptions = DryrunOptions()):
+    return BUILDERS[shape.kind](cfg, shape, mesh, opts)

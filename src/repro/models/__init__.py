@@ -1,0 +1,18 @@
+"""Model zoo: pure-JAX transformer families routed through QuantizedLinear."""
+from repro.models.linear import Ctx, dequant_weight, init_linear, is_linear_params, linear
+from repro.models.transformer import (
+    apply_block,
+    decode_step,
+    forward,
+    init_cache,
+    init_lm,
+    layer_layout,
+    lm_loss,
+    prefill,
+)
+
+__all__ = [
+    "Ctx", "dequant_weight", "init_linear", "is_linear_params", "linear",
+    "apply_block", "decode_step", "forward", "init_cache", "init_lm",
+    "layer_layout", "lm_loss", "prefill",
+]

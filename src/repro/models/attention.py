@@ -1,0 +1,511 @@
+"""Attention variants: GQA (full/local/sliding-window), MLA (DeepSeek-V2).
+
+Sequence-parallel memory safety: training/prefill attention is *blockwise*
+(two-level chunking with online softmax, Rabe–Staats style) so the S×S
+score matrix never materializes — mandatory for the 32k prefill shapes.
+Decode (Sq = 1) uses direct attention over the cache.
+
+Caches:
+  full attn : {"k": (B, S_max, KV, hd), "v": …, "pos": ()} append-at-pos
+  local attn: ring buffer of ``window`` slots + per-slot absolute positions
+  MLA       : compressed {"ckv": (B, S_max, r_kv), "kpe": (B, S_max, pe)}
+              with the *absorbed* decode formulation (q folded through the
+              up-projections, so the per-step cost scales with r_kv, not
+              H·hd·S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear, weight_of
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ==========================================================================
+# Blockwise attention core
+# ==========================================================================
+def blockwise_attention(
+    q: jax.Array,              # (B, Sq, KV, G, hd)
+    k: jax.Array,              # (B, Sk, KV, hd)
+    v: jax.Array,              # (B, Sk, KV, hd)
+    q_pos: jax.Array,          # (Sq,) absolute positions
+    k_pos: jax.Array,          # (Sk,) absolute positions; -1 ⇒ invalid slot
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    ctx: Optional[Ctx] = None,
+    shard_chunks: bool = False,
+) -> jax.Array:
+    """Online-softmax chunked attention. Returns (B, Sq, KV, G, hd).
+
+    The query-chunk dimension is *vmapped* (one batched kv-scan, not a
+    sequential per-chunk loop), so it can carry a sharding: with
+    ``shard_chunks`` the chunk dim is constrained to the ``model`` axis —
+    the TP strategy when KV heads don't divide the axis (sharding head_dim
+    instead would all-reduce every score chunk; sharding query chunks
+    keeps attention compute model-parallel with zero per-step collectives
+    at the cost of one K/V gather per layer). q_chunk shrinks as needed so
+    the chunk count divides the axis.
+    """
+    b, sq, kv_h, g, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    qc = min(q_chunk, sq)
+    tp = ctx.mesh.shape.get("model", 1) if (
+        ctx is not None and ctx.mesh is not None) else 1
+    if shard_chunks and tp > 1:
+        # make the chunk count a multiple of the model axis
+        while qc > 16 and ((sq + (-sq) % qc) // qc) % tp:
+            qc //= 2
+    kc = min(kv_chunk, sk)
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=0)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-1)
+    nq, nk = (sq + pad_q) // qc, (sk + pad_k) // kc
+
+    # (nk, B, kc, KV, hd) — scan operand layout
+    ks = k.reshape(b, nk, kc, kv_h, hd).swapaxes(0, 1)
+    vs = v.reshape(b, nk, kc, kv_h, hd).swapaxes(0, 1)
+    kps = k_pos.reshape(nk, kc)
+    qs = q.reshape(b, nq, qc, kv_h, g, hd).swapaxes(0, 1)  # (nq, B, qc, KV, G, hd)
+    qps = q_pos.reshape(nq, qc)
+    if shard_chunks and ctx is not None and nq % max(tp, 1) == 0:
+        qs = hint(ctx, qs, "model", None, None, None, None, None)
+        qps = hint(ctx, qps, "model", None)
+
+    def one_q_chunk(qi, qp):
+        # qi: (B, qc, KV, G, hd), qp: (qc,)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kp = inp
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kp[None, :] >= 0
+            if causal:
+                mask = mask & (qp[:, None] >= kp[None, :])
+            if window is not None:
+                mask = mask & (qp[:, None] - kp[None, :] < window)
+            s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vi.dtype), vi,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv_h, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_h, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv_h, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, hd)
+
+    out = jax.vmap(one_q_chunk)(qs, qps)  # (nq, B, qc, KV, G, hd)
+    out = out.swapaxes(0, 1).reshape(b, sq + pad_q, kv_h, g, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,              # (B, 1, KV, G, hd)
+    k: jax.Array,              # (B, S, KV, hd)
+    v: jax.Array,
+    q_pos: jax.Array,          # () scalar absolute position
+    k_pos: jax.Array,          # (S,) absolute positions; -1 invalid
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention over a cache (no chunking needed)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    mask = (k_pos >= 0) & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ==========================================================================
+# GQA attention layer (full or sliding-window)
+# ==========================================================================
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d,
+                          scale=1.0 / ((cfg.n_heads * hd) ** 0.5 * (2 * cfg.n_layers) ** 0.5),
+                          dtype=dtype),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
+                    dtype=jnp.float32) -> Dict:
+    """``dtype=jnp.int8`` enables quantized KV: codes + per-(b, slot, head)
+    f32 scales. Halves (vs bf16) the dominant decode HBM footprint — the
+    quantization-native serving option that lets e.g. qwen-32B's 32k×128
+    MHA cache fit a single v5e pod. Dequantization fuses into the
+    attention matmuls under XLA."""
+    slots = min(cfg.window, max_len) if local else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    cache = {
+        "k": jnp.zeros((batch, slots, kv, hd), dtype),
+        "v": jnp.zeros((batch, slots, kv, hd), dtype),
+        "slot_pos": jnp.full((slots,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, slots, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, slots, kv), jnp.float32)
+    return cache
+
+
+def kv_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(B, S, KV, hd) → int8 codes + per-(B, S, KV) f32 scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def kv_dequantize(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return codes.astype(dtype) * scale[..., None].astype(dtype)
+
+
+def _cache_kv(cache: Dict, dtype) -> Tuple[jax.Array, jax.Array]:
+    """Read the cache's K/V in compute dtype (dequantizing int8 codes)."""
+    if "k_scale" in cache:
+        return (kv_dequantize(cache["k"], cache["k_scale"], dtype),
+                kv_dequantize(cache["v"], cache["v_scale"], dtype))
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+def attn_strategy(ctx: Ctx, cfg: ModelConfig) -> str:
+    """TP placement inside attention.
+
+    "heads"  — KV heads divide the model axis: classic Megatron head
+               sharding, no attention-internal collectives.
+    "chunks" — they don't (e.g. qwen 40H, chatglm kv=2 on 16-way TP):
+               shard the *query-chunk* dim in seq attention and the cache
+               *sequence* dim at decode (flash-decode: softmax-stat psums
+               only). Sharding head_dim instead would all-reduce every
+               (B,H,Sq,Sk) score block — measured 10-100× more collective
+               bytes on the 32k shapes.
+    "none"   — no mesh / no model axis.
+    """
+    if ctx.mesh is None or ctx.mesh.shape.get("model", 1) <= 1:
+        return "none"
+    return "heads" if cfg.n_kv_heads % ctx.mesh.shape["model"] == 0 \
+        else "chunks"
+
+
+def _qkv(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+         positions: jax.Array, prefix: str):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = linear(ctx, params["wq"], x, f"{prefix}.wq").reshape(b, s, cfg.n_heads, hd)
+    k = linear(ctx, params["wk"], x, f"{prefix}.wk").reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(ctx, params["wv"], x, f"{prefix}.wv").reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_kind)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_kind)
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, s, cfg.n_kv_heads, g, hd)
+    dp = dp_axes_of(ctx)
+    strat = attn_strategy(ctx, cfg)
+    h_ax = "model" if strat == "heads" else None
+    q = hint(ctx, q, dp, None, h_ax, None, None)
+    k = hint(ctx, k, dp, None, h_ax, None)
+    v = hint(ctx, v, dp, None, h_ax, None)
+    return q, k, v
+
+
+def attention_seq(
+    ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+    local: bool = False, causal: bool = True,
+    cache: Optional[Dict] = None, prefix: str = "attn",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Training / prefill attention over a full sequence."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
+    window = cfg.window if local else None
+    strat = attn_strategy(ctx, cfg)
+    if ctx.use_pallas:
+        # serving path: VMEM-resident flash kernel (no HBM score traffic)
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, positions, positions,
+                              causal=causal, window=window or 0)
+    else:
+        out = blockwise_attention(q, k, v, positions, positions,
+                                  causal=causal, window=window, ctx=ctx,
+                                  q_chunk=ctx.attn_q_chunk,
+                                  kv_chunk=ctx.attn_kv_chunk,
+                                  shard_chunks=(strat == "chunks"))
+    h_ax = "model" if strat == "heads" else None
+    out = hint(ctx, out, dp_axes_of(ctx), None, h_ax, None, None)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    y = linear(ctx, params["wo"], out, f"{prefix}.wo")
+    y = hint(ctx, y, dp_axes_of(ctx), None, None)
+
+    if cache is not None:  # prefill: populate
+        slots = cache["k"].shape[1]
+        if local and s > slots:
+            # ring-buffer invariant: position p lives at slot p % slots
+            shift = s % slots
+            ks_ = jnp.roll(k[:, -slots:], shift, axis=1)
+            vs_ = jnp.roll(v[:, -slots:], shift, axis=1)
+            ps_ = jnp.roll(positions[-slots:], shift, axis=0)
+        else:
+            ks_, vs_, ps_ = k, v, positions
+        cache = dict(cache)
+        if "k_scale" in cache:  # int8 KV
+            kc, ksc = kv_quantize(ks_)
+            vc, vsc = kv_quantize(vs_)
+            cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ksc, 0, axis=1)
+            cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vsc, 0, axis=1)
+            ks_, vs_ = kc, vc
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks_.astype(cache["k"].dtype), 0, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs_.astype(cache["v"].dtype), 0, axis=1)
+        cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], ps_.astype(jnp.int32), 0, axis=0)
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+    return y, cache
+
+
+def attention_step(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    local: bool = False, prefix: str = "attn",
+) -> Tuple[jax.Array, Dict]:
+    """One decode step; x: (B, 1, D)."""
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)  # (1,)
+    q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
+
+    slots = cache["k"].shape[1]
+    slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
+    new_cache = dict(cache)
+    if "k_scale" in cache:  # int8 KV: quantize the appended token
+        kc, ksc = kv_quantize(k)
+        vc, vsc = kv_quantize(v)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ksc, slot, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vsc, slot, axis=1)
+        k, v = kc, vc
+    knew = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    vnew = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    spos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], positions, slot, axis=0)
+    new_cache.update(k=knew, v=vnew, slot_pos=spos, pos=pos + 1)
+
+    window = cfg.window if local else None
+    kd, vd = _cache_kv(new_cache, x.dtype)
+    out = decode_attention(q, kd, vd, pos, spos, window=window)
+    h_ax = "model" if attn_strategy(ctx, cfg) == "heads" else None
+    out = hint(ctx, out, dp_axes_of(ctx), None, h_ax, None, None)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    y = linear(ctx, params["wo"], out, f"{prefix}.wo")
+    y = hint(ctx, y, dp_axes_of(ctx), None, None)
+    return y, new_cache
+
+
+# ==========================================================================
+# Cross attention (whisper decoder)
+# ==========================================================================
+def cross_attention(
+    ctx: Ctx, params: Dict, x: jax.Array, memory_kv: Tuple[jax.Array, jax.Array],
+    cfg: ModelConfig, prefix: str = "xattn",
+) -> jax.Array:
+    """Decoder-side cross attention; memory K/V precomputed at prefill."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = linear(ctx, params["wq"], x, f"{prefix}.wq").reshape(b, s, cfg.n_heads, hd)
+    k, v = memory_kv  # (B, Sm, KV, hd)
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, s, cfg.n_kv_heads, g, hd)
+    sm = k.shape[1]
+    mpos = jnp.arange(sm)
+    strat = attn_strategy(ctx, cfg)
+    out = blockwise_attention(q, k, v, jnp.arange(s), mpos, causal=False,
+                              ctx=ctx, shard_chunks=(strat == "chunks"))
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return linear(ctx, params["wo"], out, f"{prefix}.wo")
+
+
+def cross_memory(ctx: Ctx, params: Dict, memory: jax.Array, cfg: ModelConfig,
+                 prefix: str = "xattn") -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output."""
+    b, sm, _ = memory.shape
+    hd = cfg.head_dim_
+    k = linear(ctx, params["wk"], memory, f"{prefix}.wk").reshape(b, sm, cfg.n_kv_heads, hd)
+    v = linear(ctx, params["wv"], memory, f"{prefix}.wv").reshape(b, sm, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ==========================================================================
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ==========================================================================
+def init_mla(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    r, pe, h = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": init_linear(ks[0], d, r, dtype=dtype),
+        "w_kpe": init_linear(ks[1], d, pe, dtype=dtype),
+        "w_uk": init_linear(ks[2], r, h * hd, dtype=dtype),
+        "w_uv": init_linear(ks[3], r, h * hd, dtype=dtype),
+        "wo": init_linear(ks[4], h * hd, d,
+                          scale=1.0 / ((h * hd) ** 0.5 * (2 * cfg.n_layers) ** 0.5),
+                          dtype=dtype),
+        "ckv_norm": {"g": jnp.ones((r,), dtype)},
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = init_linear(ks[5], d, cfg.q_lora_rank, dtype=dtype)
+        p["w_uq"] = init_linear(ks[6], cfg.q_lora_rank, h * (hd + pe), dtype=dtype)
+        p["q_norm"] = {"g": jnp.ones((cfg.q_lora_rank,), dtype)}
+    else:
+        p["w_q"] = init_linear(ks[7], d, h * (hd + pe), dtype=dtype)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_q(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+           positions: jax.Array, prefix: str):
+    from repro.models.layers import norm
+    b, s, _ = x.shape
+    hd, pe, h = cfg.head_dim_, cfg.rope_head_dim, cfg.n_heads
+    if cfg.q_lora_rank:
+        cq = linear(ctx, params["w_dq"], x, f"{prefix}.w_dq")
+        cq = norm(params["q_norm"], cq, "rmsnorm")
+        q = linear(ctx, params["w_uq"], cq, f"{prefix}.w_uq")
+    else:
+        q = linear(ctx, params["w_q"], x, f"{prefix}.w_q")
+    q = q.reshape(b, s, h, hd + pe)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta, "full")
+    return q_nope, q_pe
+
+
+def _mla_compress(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, prefix: str):
+    from repro.models.layers import norm
+    ckv = linear(ctx, params["w_dkv"], x, f"{prefix}.w_dkv")
+    ckv = norm(params["ckv_norm"], ckv, "rmsnorm")
+    kpe = linear(ctx, params["w_kpe"], x, f"{prefix}.w_kpe")
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta, "full")
+    return ckv, kpe[:, :, 0, :]
+
+
+def mla_seq(
+    ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+    cache: Optional[Dict] = None, prefix: str = "attn",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Prefill/train MLA: expand K/V per head, blockwise attention."""
+    b, s, _ = x.shape
+    hd, pe, h = cfg.head_dim_, cfg.rope_head_dim, cfg.n_heads
+    positions = jnp.arange(s)
+    q_nope, q_pe = _mla_q(ctx, params, x, cfg, positions, prefix)
+    ckv, kpe = _mla_compress(ctx, params, x, cfg, positions, prefix)
+
+    dp = dp_axes_of(ctx)
+    k_nope = linear(ctx, params["w_uk"], ckv, f"{prefix}.w_uk").reshape(b, s, h, hd)
+    k_nope = hint(ctx, k_nope, dp, None, "model", None)
+    v = linear(ctx, params["w_uv"], ckv, f"{prefix}.w_uv").reshape(b, s, h, hd)
+    v = hint(ctx, v, dp, None, "model", None)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kpe[:, :, None, :], (b, s, h, pe))], -1)
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    # treat as MHA (KV = H, G = 1); pad V's head_dim up to hd+pe for the
+    # shared kernel, then slice back
+    qg = q.reshape(b, s, h, 1, hd + pe)
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pe)))
+    strat = "chunks" if (ctx.mesh is not None and
+                         h % ctx.mesh.shape.get("model", 1)) else "none"
+    out = blockwise_attention(qg, k, v_pad, positions, positions, causal=True,
+                              ctx=ctx, shard_chunks=(strat == "chunks"))
+    out = out.reshape(b, s, h, hd + pe)[..., :hd].reshape(b, s, h * hd)
+    y = linear(ctx, params["wo"], out, f"{prefix}.wo")
+
+    if cache is not None:
+        cache = dict(cache)
+        cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+        cache["kpe"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpe"], kpe.astype(cache["kpe"].dtype), 0, axis=1)
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+    return y, cache
+
+
+def mla_step(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    prefix: str = "attn",
+) -> Tuple[jax.Array, Dict]:
+    """Absorbed-formulation decode: score/value in the r_kv latent space."""
+    b = x.shape[0]
+    hd, pe, h, r = cfg.head_dim_, cfg.rope_head_dim, cfg.n_heads, cfg.kv_lora_rank
+    pos = cache["pos"]
+    positions = pos[None]
+    q_nope, q_pe = _mla_q(ctx, params, x, cfg, positions, prefix)  # (B,1,H,hd/pe)
+    ckv_t, kpe_t = _mla_compress(ctx, params, x, cfg, positions, prefix)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, axis=1)
+    kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpe"], kpe_t.astype(cache["kpe"].dtype), pos, axis=1)
+    smax = ckv.shape[1]
+
+    # absorb: q' = q_nope @ W_uk per head → latent space
+    w_uk = weight_of(params["w_uk"], jnp.float32).reshape(r, h, hd)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # (B,1,H,r)
+    q_lat = hint(ctx, q_lat, dp_axes_of(ctx), None, "model", None)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bqhp,bsp->bhqs", q_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32)))
+    scores = scores / ((hd + pe) ** 0.5)
+    k_pos = jnp.arange(smax)
+    mask = k_pos <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv.astype(jnp.float32))
+    w_uv = weight_of(params["w_uv"], jnp.float32).reshape(r, h, hd)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = linear(ctx, params["wo"], out, f"{prefix}.wo")
+    return y, {"ckv": ckv, "kpe": kpe, "pos": pos + 1}

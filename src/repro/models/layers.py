@@ -1,0 +1,148 @@
+"""Shared neural-net building blocks (pure JAX, no flax)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.float32) -> Dict:
+    p = {"g": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(params: Dict, x: jax.Array, kind: str = "rmsnorm",
+         eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["g"].astype(jnp.float32)
+    if "b" in params:
+        y = y + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               kind: str = "full") -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,). kind:
+    full — rotate all D dims; half — first D/2 dims only (ChatGLM 2d-RoPE
+    style); none — passthrough."""
+    if kind == "none":
+        return x
+    d = x.shape[-1]
+    rot_d = d if kind == "full" else d // 2
+    freqs = rope_frequencies(rot_d, theta)  # (rot_d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot_d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot_d].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(xr.shape)
+    if rot_d < d:
+        rotated = jnp.concatenate([rotated, x[..., rot_d:].astype(jnp.float32)],
+                                  axis=-1)
+    return rotated.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d: int, d_ff: int, act: str,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], d, d_ff, dtype=dtype),
+         "down": init_linear(ks[1], d_ff, d, scale=1.0 / (d_ff ** 0.5),
+                             dtype=dtype)}
+    if act == "swiglu":
+        p["gate"] = init_linear(ks[2], d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(ctx: Ctx, params: Dict, x: jax.Array, act: str,
+        prefix: str = "") -> jax.Array:
+    dp = dp_axes_of(ctx)
+    up = linear(ctx, params["up"], x, f"{prefix}.up")
+    if act == "swiglu":
+        gate = linear(ctx, params["gate"], x, f"{prefix}.gate")
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = hint(ctx, h, dp, None, "model")      # column-parallel intermediate
+    y = linear(ctx, params["down"], h, f"{prefix}.down")
+    return hint(ctx, y, dp, None, None)      # row-parallel out (AR folded)
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Dict:
+    return {"w": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+                  ).astype(dtype)}
+
+
+def embed(params: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return params["w"].astype(dtype)[tokens]
+
+
+def chunked_softmax_xent(
+    x: jax.Array,              # (B, S, D) final hidden states
+    head: Dict,                # linear params for D → V
+    labels: jax.Array,         # (B, S) int32
+    ctx: Ctx,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean token cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; inside a chunk the (B, c, V) logits live
+    only transiently (and V is model-sharded under pjit, so the per-device
+    footprint is (B·c·V/tp)). Returns scalar mean loss (f32).
+    """
+    if ctx.tap is not None:
+        # head stays full-precision (not quantized) — no calibration tap,
+        # and recording inside the scan body would leak tracers
+        ctx = Ctx(compute_dtype=ctx.compute_dtype)
+    b, s, d = x.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nchunks = s // c
+    xc = x.reshape(b, nchunks, c, d).swapaxes(0, 1)       # (n, B, c, D)
+    lc = labels.reshape(b, nchunks, c).swapaxes(0, 1)     # (n, B, c)
+
+    dp = dp_axes_of(ctx)
+
+    def step(carry, inp):
+        xi, li = inp
+        logits = linear(ctx, head, xi).astype(jnp.float32)  # (B, c, V)
+        logits = hint(ctx, logits, dp, None, "model")       # vocab-parallel
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(li, logits.shape[-1], dtype=jnp.float32)
+        lab = jnp.sum(logits * onehot, axis=-1)
+        return carry + jnp.sum(lse - lab), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)

@@ -1,0 +1,162 @@
+"""QuantizedLinear: every projection in the model zoo routes through here.
+
+The *params dict* encodes the execution mode (so one apply function works
+under jit for all modes, and PTQ is a pure pytree transformation):
+
+  fp      : {"w": (m, n) [, "b": (n,)]}
+  quant   : {"codes": int8 (m, n), "scale": (m/B, n),
+             "l": (m, r), "r": (r, n) [, "b"]}          — Q + LR serving
+  packed4 : {"packed": uint8 (m/2, n), "scale": (m/B, n), "l", "r" [, "b"]}
+  qpeft   : quant/packed4 where (l, r) live in the *trainable* tree and the
+            backbone stays in the frozen tree (split by repro.train).
+
+``calib`` taps are threaded through a tiny context object: when
+``ctx.tap`` is set, the layer records streaming input moments (eager mode
+only — calibration never runs under jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import CalibStats
+from repro.quant.mxint import unpack_codes_4bit
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call model context (not a pytree — static under jit)."""
+
+    compute_dtype: Any = jnp.float32
+    tap: Optional[Dict[str, CalibStats]] = None   # calibration capture
+    use_pallas: bool = False                      # TPU kernel path (serving)
+    prefix: str = ""                              # per-layer tap namespace
+    autocorr: bool = True                         # capture Σxxᵀ moments
+    mesh: Optional[Any] = None                    # enables sharding hints
+    attn_q_chunk: int = 512                       # blockwise attn tiling
+    attn_kv_chunk: int = 1024
+
+    def record(self, name: str, x: jax.Array, m: int) -> None:
+        if self.tap is None:
+            return
+        name = self.prefix + name
+        if name not in self.tap:
+            self.tap[name] = CalibStats.init(m, need_autocorr=self.autocorr)
+        self.tap[name] = self.tap[name].update(x)
+
+
+def hint(ctx: Ctx, x: jax.Array, *axes) -> jax.Array:
+    """Megatron-style activation sharding constraint (no-op without mesh).
+
+    Without explicit constraints GSPMD happily *replicates* whole
+    attention/MoE subgraphs across the model axis (observed: ~16× FLOP
+    and collective inflation on the 16-way-TP dry-run). Each ``axes``
+    entry names a mesh axis (or tuple of axes, or None) for that dim;
+    entries whose mesh axes don't divide the dim are dropped so the same
+    model code lowers on any mesh without padding.
+    """
+    mesh = ctx.mesh
+    if mesh is None or x.ndim != len(axes):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    clean = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            clean.append(None)
+            continue
+        group = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        ok = True
+        for a in group:
+            if a not in mesh.shape:
+                ok = False
+                break
+            n *= mesh.shape[a]
+        clean.append(ax if ok and n > 1 and dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*clean)))
+
+
+def dp_axes_of(ctx: Ctx):
+    """The data-parallel axes present on the ctx mesh ('pod','data')."""
+    if ctx.mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in ctx.mesh.shape)
+    return axes if axes else None
+
+
+def weight_of(p: Dict[str, jax.Array], dtype) -> jax.Array:
+    """Materialize W ≈ dequant(Q) + L·R from any linear-params schema
+    (used where the algorithm needs the matrix itself, e.g. MLA's
+    absorbed decode)."""
+    if "w" in p:
+        return p["w"].astype(dtype)
+    w = dequant_weight(p, dtype)
+    if p["l"].shape[-1] > 0:
+        w = w + p["l"].astype(dtype) @ p["r"].astype(dtype)
+    return w
+
+
+def dequant_weight(p: Dict[str, jax.Array], dtype) -> jax.Array:
+    """Materialize the quantized backbone (jnp fallback path; the Pallas
+    kernel fuses this into the matmul on TPU).
+
+    Codes may carry MXINT padding rows (input dims that aren't multiples
+    of the block, e.g. xLSTM's 4/3·d FFN); the adapter ``l`` always has
+    the true row count, so slice back to it."""
+    if "packed" in p:
+        codes = unpack_codes_4bit(p["packed"])
+    else:
+        codes = p["codes"]
+    scale = p["scale"]
+    block = codes.shape[-2] // scale.shape[-2]
+    w = codes.astype(dtype) * jnp.repeat(scale.astype(dtype), block, axis=-2)
+    m = p["l"].shape[-2] if "l" in p else w.shape[-2]
+    return w[..., :m, :]
+
+
+def linear(ctx: Ctx, params: Dict[str, jax.Array], x: jax.Array,
+           name: str = "") -> jax.Array:
+    """y = x @ W (+ b), dispatching on the params-dict schema."""
+    dt = ctx.compute_dtype
+    if ctx.tap is not None and "w" in params:
+        ctx.record(name, x, params["w"].shape[0])
+
+    if "w" in params:
+        y = x.astype(dt) @ params["w"].astype(dt)
+    else:
+        if ctx.use_pallas and "codes" in params:
+            from repro.kernels import ops as kops  # lazy: TPU-only path
+            xk = x.astype(dt)
+            pad = params["codes"].shape[-2] - xk.shape[-1]
+            if pad:  # codes carry MXINT block padding rows
+                xk = jnp.pad(xk, [(0, 0)] * (xk.ndim - 1) + [(0, pad)])
+            lpad = jnp.pad(params["l"], [(0, pad), (0, 0)]) if pad \
+                else params["l"]
+            y = kops.mxint_lowrank_matmul(
+                xk, params["codes"], params["scale"], lpad, params["r"])
+        else:
+            w = dequant_weight(params, dt)
+            y = x.astype(dt) @ w
+            if params["l"].shape[1] > 0:
+                y = y + (x.astype(dt) @ params["l"].astype(dt)) @ params["r"].astype(dt)
+            return y + params["b"].astype(dt) if "b" in params else y
+    if "b" in params:
+        y = y + params["b"].astype(dt)
+    return y
+
+
+def init_linear(key: jax.Array, m: int, n: int, *, bias: bool = False,
+                scale: Optional[float] = None, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    std = scale if scale is not None else (1.0 / (m ** 0.5))
+    p = {"w": (jax.random.normal(key, (m, n), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def is_linear_params(p: Any) -> bool:
+    return isinstance(p, dict) and ("w" in p or "codes" in p or "packed" in p)

@@ -1,0 +1,125 @@
+"""Fine-grained Mixture-of-Experts (DeepSeek-MoE style).
+
+``n_shared`` always-on experts + ``n_routed`` experts with top-k routing.
+The dispatch is capacity-based scatter/gather (Switch-style) rather than a
+dense ``(T, E, C)`` einsum, so dispatch cost is O(T·d) data movement and
+expert FLOPs are ``E · C · (3·d·d_e·2)`` with
+``C = ceil(T · top_k / E · capacity_factor)`` — the layout that shards
+cleanly over the ``model`` axis as expert parallelism.
+
+A load-balancing auxiliary loss (Switch §2.2) is returned alongside.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp, mlp
+from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, de = cfg.d_model, cfg.d_expert
+    k_r, k_sh, k_e = jax.random.split(key, 3)
+
+    def one_expert(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "up": init_linear(ks[0], d, de, dtype=dtype),
+            "gate": init_linear(ks[1], d, de, dtype=dtype),
+            "down": init_linear(ks[2], de, d, scale=1.0 / de**0.5, dtype=dtype),
+        }
+
+    p = {
+        "router": init_linear(k_r, d, cfg.n_routed, dtype=dtype),
+        "experts": jax.vmap(one_expert)(jax.random.split(k_e, cfg.n_routed)),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(k_sh, d, cfg.n_shared * de, "swiglu", dtype=dtype)
+    return p
+
+
+def _apply_w(p: Dict, x: jax.Array, dtype) -> jax.Array:
+    """Weight apply that honors quantized (Q + LR) expert params under vmap."""
+    from repro.models.linear import dequant_weight
+    if "w" in p:
+        y = x @ p["w"].astype(dtype)
+    else:
+        y = x @ dequant_weight(p, dtype)
+        if p["l"].shape[-1] > 0:
+            y = y + (x @ p["l"].astype(dtype)) @ p["r"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def _expert_ffn(wp: Dict, x: jax.Array) -> jax.Array:
+    """SwiGLU expert; x: (C, d) for a single expert's capacity slice."""
+    dt = x.dtype
+    h = jax.nn.silu(_apply_w(wp["gate"], x, dt)) * _apply_w(wp["up"], x, dt)
+    return _apply_w(wp["down"], h, dt)
+
+
+def moe_apply(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+              prefix: str = "moe") -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss). x: (B, S, D)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_routed, cfg.top_k
+    # decode / small-T regime: capacity = T makes dispatch dropless (an
+    # expert can receive at most T assignments since top-k indices are
+    # distinct per token). The extra buffer slots are cheap exactly when
+    # T is small, and serving must never drop tokens. Large-T training
+    # keeps the standard Switch capacity (drops balanced by the aux loss).
+    if t * k <= 2 * e or t <= 64:
+        cap = t
+    else:
+        cap = int(max(1, t * k * cfg.capacity_factor / e))
+    xf = x.reshape(t, d)
+
+    logits = linear(ctx, params["router"], xf, f"{prefix}.router")
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)          # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (importance × load) ---------------------
+    importance = jnp.mean(probs, axis=0)                       # (E,)
+    onehot_top = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T,k,E)
+    load = jnp.mean(jnp.sum(onehot_top, axis=1), axis=0)       # (E,)
+    aux = e * jnp.sum(importance * load)
+
+    # --- capacity-based dispatch -----------------------------------------
+    flat_expert = expert_idx.reshape(-1)                # (T·k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    # position of each assignment within its expert queue
+    assign_1h = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)   # (T·k, E)
+    pos_in_e = jnp.cumsum(assign_1h, axis=0) - assign_1h
+    position = jnp.sum(pos_in_e * assign_1h, axis=-1)             # (T·k,)
+    keep = position < cap
+    safe_pos = jnp.where(keep, position, 0)
+
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    upd = jnp.where(keep[:, None], xf[flat_token], 0.0)
+    buf = buf.at[flat_expert, safe_pos].add(upd)
+    # expert parallelism: dispatch buffer sharded over the expert dim —
+    # the scatter above becomes an all-to-all instead of a broadcast
+    buf = hint(ctx, buf, "model", None, None)
+
+    out_buf = jax.vmap(_expert_ffn)(params["experts"], buf)      # (E, C, d)
+    out_buf = hint(ctx, out_buf, "model", None, None)
+
+    gathered = out_buf[flat_expert, safe_pos]                    # (T·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = jnp.zeros((t, d), xf.dtype)
+    combined = combined.at[flat_token].add(gathered * flat_gate[:, None].astype(xf.dtype))
+
+    if "shared" in params:
+        combined = combined + mlp(ctx, params["shared"], xf, "swiglu",
+                                  f"{prefix}.shared")
+    return combined.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, De et al. 2024).
+
+Block:  x → [gate branch: W_gate → GeLU] ⊙ [W_branch → causal conv1d(w) →
+RG-LRU] → W_out.  The RG-LRU recurrence
+
+    r_t = σ(W_a h̃_t + b_a)         (recurrence gate)
+    i_t = σ(W_x h̃_t + b_x)         (input gate)
+    log a_t = −c · r_t · softplus(Λ)
+    y_t = a_t ⊙ y_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ h̃_t)
+
+is a diagonal linear recurrence ⇒ training/prefill uses
+``jax.lax.associative_scan`` (O(log S) depth, sub-quadratic — this is why
+recurrentgemma runs the 500k-context shape). Decode carries (y, conv
+state) with O(1) per-step cost.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, dr, cw = cfg.d_model, cfg.d_rnn_, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = σ(Λ)^c lies in (0.9, 0.999) — Griffin appendix
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus⁻¹(−log(u)/c)
+    return {
+        "w_gate": init_linear(ks[0], d, dr, dtype=dtype),
+        "w_branch": init_linear(ks[1], d, dr, dtype=dtype),
+        "w_out": init_linear(ks[2], dr, d, scale=1.0 / dr**0.5, dtype=dtype),
+        "w_a": init_linear(ks[3], dr, dr, bias=True, dtype=dtype),
+        "w_x": init_linear(ks[4], dr, dr, bias=True, dtype=dtype),
+        "conv_w": (jax.random.normal(key, (cw, dr), jnp.float32)
+                   / cw**0.5).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(dtype),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    dr = cfg.d_rnn_
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _causal_conv_seq(params: Dict, x: jax.Array,
+                     state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over (B, S, dr); returns (y, new_state)."""
+    cw = params["conv_w"].shape[0]
+    hist = state if state is not None else jnp.zeros(
+        (x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i].astype(x.dtype)
+            for i in range(cw))
+    y = y + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else hist
+    return y, new_state
+
+
+def _gates(ctx: Ctx, params: Dict, h: jax.Array, prefix: str):
+    r = jax.nn.sigmoid(linear(ctx, params["w_a"], h, f"{prefix}.w_a")
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(ctx, params["w_x"], h, f"{prefix}.w_x")
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    return a, beta * i * h.astype(jnp.float32)
+
+
+def rglru_seq(
+    ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+    cache: Optional[Dict] = None, prefix: str = "rglru",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence block apply (training / prefill)."""
+    dp = dp_axes_of(ctx)
+    gate = jax.nn.gelu(linear(ctx, params["w_gate"], x, f"{prefix}.w_gate"))
+    gate = hint(ctx, gate, dp, None, "model")
+    branch = linear(ctx, params["w_branch"], x, f"{prefix}.w_branch")
+    branch = hint(ctx, branch, dp, None, "model")
+    conv_in_state = cache["conv"] if cache is not None else None
+    h, conv_state = _causal_conv_seq(params, branch, conv_in_state)
+    a, b = _gates(ctx, params, h, prefix)  # (B, S, dr) each, f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, y_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = y_scan.astype(x.dtype) * gate
+    out = linear(ctx, params["w_out"], y, f"{prefix}.w_out")
+    out = hint(ctx, out, dp, None, None)
+
+    if cache is not None:
+        cache = dict(cache)
+        cache["h"] = y_scan[:, -1]  # pre-gate recurrent state, f32
+        cache["conv"] = conv_state.astype(cache["conv"].dtype)
+        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return out, cache
+
+
+def rglru_step(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    prefix: str = "rglru",
+) -> Tuple[jax.Array, Dict]:
+    """One decode step; x: (B, 1, D)."""
+    gate = jax.nn.gelu(linear(ctx, params["w_gate"], x, f"{prefix}.w_gate"))
+    branch = linear(ctx, params["w_branch"], x, f"{prefix}.w_branch")
+    cw = params["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(branch.dtype), branch], axis=1)
+    h = sum(hist[:, i:i + 1] * params["conv_w"][i].astype(branch.dtype)
+            for i in range(cw)) + params["conv_b"].astype(branch.dtype)
+    a, b = _gates(ctx, params, h, prefix)  # (B, 1, dr)
+    y = a[:, 0] * cache["h"] + b[:, 0]
+    out = y[:, None, :].astype(x.dtype) * gate
+    out = linear(ctx, params["w_out"], out, f"{prefix}.w_out")
+    return out, {"h": y, "conv": hist[:, 1:].astype(cache["conv"].dtype),
+                 "pos": cache["pos"] + 1}

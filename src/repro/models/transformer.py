@@ -1,0 +1,515 @@
+"""Model composition: config → init / forward / loss / prefill / decode.
+
+Depth is organized as  [prefix | scanned groups | suffix]:
+
+  * ``prefix``  — the leading ``first_dense`` layers (DeepSeek's dense-MLP
+    head layers), unrolled;
+  * ``groups``  — the remaining depth folded into ``lax.scan`` over stacks
+    of one *pattern period* (e.g. recurrentgemma's (rglru, rglru, local)),
+    so compile time is O(period), not O(depth) — essential for lowering
+    64-layer 32B configs;
+  * ``suffix``  — the remainder when depth isn't divisible by the period.
+
+Caches mirror this structure exactly, so decode scans layer-stacked caches
+alongside layer-stacked params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    mlp,
+    norm,
+)
+from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear
+
+
+def _hint_act(ctx: Ctx, x):
+    return hint(ctx, x, dp_axes_of(ctx), None, None)
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss coefficient
+
+
+# ==========================================================================
+# Layer layout
+# ==========================================================================
+def layer_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_prefix, n_groups, n_suffix) — see module docstring."""
+    period = len(cfg.block_pattern)
+    n_prefix = cfg.first_dense
+    n_main = cfg.n_layers - n_prefix
+    n_groups = n_main // period
+    n_suffix = n_main - n_groups * period
+    return n_prefix, n_groups, n_suffix
+
+
+def _kind_at(cfg: ModelConfig, i: int) -> str:
+    return cfg.block_pattern[(i - cfg.first_dense) % len(cfg.block_pattern)] \
+        if i >= cfg.first_dense else cfg.block_pattern[0]
+
+
+# ==========================================================================
+# Single block
+# ==========================================================================
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str, use_moe: bool,
+               dtype=jnp.float32, decoder_cross: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if kind in ("attn", "local"):
+        if cfg.attn_kind == "mla" and kind == "attn":
+            p["mixer"] = attn.init_mla(ks[0], cfg, dtype)
+        else:
+            p["mixer"] = attn.init_attention(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if decoder_cross:
+        p["norm_x"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn.init_attention(ks[2], cfg, dtype)
+
+    if kind not in ("slstm", "mlstm"):
+        if use_moe:
+            p["norm2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        elif cfg.d_ff > 0:
+            p["norm2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, cross: bool = False) -> Dict:
+    # int8 applies to the (dominant) GQA KV cache only; recurrent states,
+    # MLA latents and cross-attention memories stay in a float dtype
+    fdtype = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    if kind in ("attn", "local"):
+        if cfg.attn_kind == "mla" and kind == "attn":
+            c = attn.init_mla_cache(cfg, batch, max_len, fdtype)
+        else:
+            c = attn.init_attn_cache(cfg, batch, max_len, kind == "local", dtype)
+    elif kind == "rglru":
+        c = rglru_mod.init_rglru_cache(cfg, batch, fdtype)
+    elif kind == "mlstm":
+        c = xlstm_mod.init_mlstm_cache(cfg, batch)
+    elif kind == "slstm":
+        c = xlstm_mod.init_slstm_cache(cfg, batch)
+    else:
+        raise ValueError(kind)
+    if cross:
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        c["cross_k"] = jnp.zeros((batch, cfg.enc_seq, kv, hd), fdtype)
+        c["cross_v"] = jnp.zeros((batch, cfg.enc_seq, kv, hd), fdtype)
+    return c
+
+
+def apply_block(
+    ctx: Ctx,
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    mode: str,                      # "seq" (train/prefill) | "step" (decode)
+    cache: Optional[Dict] = None,
+    memory: Optional[jax.Array] = None,  # encoder output (whisper prefill)
+    causal: bool = True,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Returns (x_out, aux_loss, cache_out)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(p["norm1"], x, cfg.norm)
+    inner_cache = None
+    if cache is not None:
+        inner_cache = {k: v for k, v in cache.items()
+                       if not k.startswith("cross_")}
+
+    if kind in ("attn", "local"):
+        is_mla = cfg.attn_kind == "mla" and kind == "attn"
+        if mode == "seq":
+            if is_mla:
+                y, inner_cache = attn.mla_seq(ctx, p["mixer"], h, cfg,
+                                              cache=inner_cache)
+            else:
+                y, inner_cache = attn.attention_seq(
+                    ctx, p["mixer"], h, cfg, local=(kind == "local"),
+                    causal=causal, cache=inner_cache)
+        else:
+            if is_mla:
+                y, inner_cache = attn.mla_step(ctx, p["mixer"], h,
+                                               inner_cache, cfg)
+            else:
+                y, inner_cache = attn.attention_step(
+                    ctx, p["mixer"], h, inner_cache, cfg,
+                    local=(kind == "local"))
+    elif kind == "rglru":
+        fn = rglru_mod.rglru_seq if mode == "seq" else rglru_mod.rglru_step
+        if mode == "seq":
+            y, inner_cache = fn(ctx, p["mixer"], h, cfg, cache=inner_cache)
+        else:
+            y, inner_cache = fn(ctx, p["mixer"], h, inner_cache, cfg)
+    elif kind == "mlstm":
+        if mode == "seq":
+            y, inner_cache = xlstm_mod.mlstm_seq(ctx, p["mixer"], h, cfg,
+                                                 cache=inner_cache)
+        else:
+            y, inner_cache = xlstm_mod.mlstm_step(ctx, p["mixer"], h,
+                                                  inner_cache, cfg)
+    elif kind == "slstm":
+        if mode == "seq":
+            y, inner_cache = xlstm_mod.slstm_seq(ctx, p["mixer"], h, cfg,
+                                                 cache=inner_cache)
+        else:
+            y, inner_cache = xlstm_mod.slstm_step(ctx, p["mixer"], h,
+                                                  inner_cache, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    # cross attention (whisper decoder)
+    if "cross" in p:
+        hx = norm(p["norm_x"], x, cfg.norm)
+        if memory is not None:  # prefill/train: build cross K/V from memory
+            mem_kv = attn.cross_memory(ctx, p["cross"], memory, cfg)
+        else:                   # decode: read from cache
+            mem_kv = (cache["cross_k"], cache["cross_v"])
+        x = x + attn.cross_attention(ctx, p["cross"], hx, mem_kv, cfg)
+        if cache is not None and memory is not None:
+            assert inner_cache is not None
+            inner_cache = dict(inner_cache)
+            inner_cache["cross_k"] = mem_kv[0].astype(cache["cross_k"].dtype)
+            inner_cache["cross_v"] = mem_kv[1].astype(cache["cross_v"].dtype)
+        elif cache is not None:
+            inner_cache = dict(inner_cache)
+            inner_cache["cross_k"] = cache["cross_k"]
+            inner_cache["cross_v"] = cache["cross_v"]
+
+    if "moe" in p:
+        h2 = norm(p["norm2"], x, cfg.norm)
+        y2, aux = moe_mod.moe_apply(ctx, p["moe"], h2, cfg)
+        x = x + y2
+    elif "mlp" in p:
+        h2 = norm(p["norm2"], x, cfg.norm)
+        x = x + mlp(ctx, p["mlp"], h2, cfg.act)
+    return x, aux, inner_cache
+
+
+# ==========================================================================
+# Full model init
+# ==========================================================================
+def init_lm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    n_prefix, n_groups, n_suffix = layer_layout(cfg)
+    period = len(cfg.block_pattern)
+    keys = jax.random.split(key, 8)
+    cross = cfg.is_encoder_decoder
+
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[1], cfg.d_model, cfg.vocab,
+                                        scale=1.0 / cfg.d_model**0.5,
+                                        dtype=dtype)
+
+    # prefix (dense-MLP lead-in layers)
+    params["prefix"] = [
+        init_block(jax.random.fold_in(keys[2], i), cfg, _kind_at(cfg, i),
+                   use_moe=False, dtype=dtype, decoder_cross=cross)
+        for i in range(n_prefix)
+    ]
+
+    # scanned groups: one stacked param tree per period position
+    def group_at(pos: int):
+        kind = cfg.block_pattern[pos]
+        use_moe = cfg.moe  # main layers past first_dense
+        def one(k):
+            return init_block(k, cfg, kind, use_moe=use_moe, dtype=dtype,
+                              decoder_cross=cross)
+        gkeys = jax.random.split(jax.random.fold_in(keys[3], pos), max(n_groups, 1))
+        return jax.vmap(one)(gkeys) if n_groups > 0 else None
+
+    params["groups"] = {f"p{pos}": group_at(pos) for pos in range(period)} \
+        if n_groups > 0 else {}
+
+    params["suffix"] = [
+        init_block(jax.random.fold_in(keys[4], i), cfg,
+                   cfg.block_pattern[i % period], use_moe=cfg.moe,
+                   dtype=dtype, decoder_cross=cross)
+        for i in range(n_suffix)
+    ]
+
+    # encoder (whisper)
+    if cfg.is_encoder_decoder:
+        def enc_block(k):
+            return init_block(k, cfg, "attn", use_moe=False, dtype=dtype)
+        ekeys = jax.random.split(keys[5], cfg.enc_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(enc_block)(ekeys),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        }
+        if cfg.d_frontend and cfg.d_frontend != cfg.d_model:
+            params["frontend_proj"] = init_linear(keys[6], cfg.d_frontend,
+                                                  cfg.d_model, dtype=dtype)
+
+    # vision projector (vlm)
+    if cfg.n_vision_tokens:
+        params["vision_proj"] = init_linear(keys[7], cfg.d_frontend or cfg.d_model,
+                                            cfg.d_model, dtype=dtype)
+    return params
+
+
+# ==========================================================================
+# Encoder (whisper): bidirectional transformer over frame embeddings
+# ==========================================================================
+def _sinusoid(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(ctx: Ctx, params: Dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = frames.astype(ctx.compute_dtype)
+    if "frontend_proj" in params:
+        x = linear(ctx, params["frontend_proj"], x)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(xc, blk):
+        y, _, _ = apply_block(ctx, blk, xc, cfg, "attn", "seq", causal=False)
+        return y, None
+
+    if ctx.tap is not None:  # unroll for calibration (see forward())
+        for e in range(cfg.enc_layers):
+            blk = jax.tree_util.tree_map(lambda a: a[e],
+                                         params["encoder"]["blocks"])
+            ctx.prefix = f"E{e}."
+            x, _ = body(x, blk)
+        ctx.prefix = ""
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+# ==========================================================================
+# Forward (train / prefill)
+# ==========================================================================
+def forward(
+    ctx: Ctx,
+    params: Dict,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+    remat: str = "none",
+) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Returns (hidden (B,S,D), aux_loss, cache)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, ctx.compute_dtype)
+    x = _hint_act(ctx, x)
+
+    memory = None
+    if cfg.is_encoder_decoder:
+        # decoder positions come from RoPE (config deviation from whisper's
+        # learned embeddings — keeps decode caches position-free)
+        memory = encode(ctx, params, batch["frames"], cfg)
+    if cfg.n_vision_tokens and "vision" in batch:
+        vis = linear(ctx, params["vision_proj"],
+                     batch["vision"].astype(ctx.compute_dtype))
+        x = jnp.concatenate([vis, x], axis=1)
+
+    period = len(cfg.block_pattern)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(xc, blk, kind, blk_cache):
+        return apply_block(ctx, blk, xc, cfg, kind, "seq", cache=blk_cache,
+                           memory=memory)
+
+    # prefix
+    new_prefix_caches = []
+    for i, blk in enumerate(params["prefix"]):
+        if ctx.tap is not None:
+            ctx.prefix = f"L{i}."
+        c = cache["prefix"][i] if cache is not None else None
+        x, aux, c_out = run_block(x, blk, _kind_at(cfg, i), c)
+        aux_total += aux
+        new_prefix_caches.append(c_out)
+    ctx.prefix = ""
+
+    # scanned groups — unrolled when calibrating (ctx.tap records per-layer
+    # input moments eagerly; tracers from a lax.scan body would leak into
+    # the tap dict, so calibration walks the stacked params in Python)
+    new_group_caches = None
+    if params["groups"] and ctx.tap is not None:
+        assert cache is None, "calibration runs without decode caches"
+        n_groups = layer_layout(cfg)[1]
+        n_prefix = layer_layout(cfg)[0]
+        for g in range(n_groups):
+            for pos in range(period):
+                blk = jax.tree_util.tree_map(lambda a: a[g],
+                                             params["groups"][f"p{pos}"])
+                ctx.prefix = f"L{n_prefix + g * period + pos}."
+                x, aux, _ = run_block(x, blk, cfg.block_pattern[pos], None)
+                aux_total += aux
+        ctx.prefix = ""
+    elif params["groups"]:
+        def group_body(carry, xs):
+            xc, aux_c = carry
+            gp, gc = xs
+            new_gc = {}
+            for pos in range(period):
+                kind = cfg.block_pattern[pos]
+                c = gc[f"p{pos}"] if gc is not None else None
+                xc, aux, c_out = run_block(xc, gp[f"p{pos}"], kind, c)
+                aux_c = aux_c + aux
+                new_gc[f"p{pos}"] = c_out
+            ys = new_gc if gc is not None else 0
+            return (xc, aux_c), ys
+
+        if remat == "full":
+            group_body = jax.checkpoint(group_body)
+        gcaches = cache["groups"] if cache is not None else None
+        xs = (params["groups"], gcaches)
+        if gcaches is None:
+            n_groups = layer_layout(cfg)[1]
+            xs = (params["groups"],
+                  {f"p{p}": None for p in range(period)})
+            # scan needs a scannable xs: replace None caches by dummy zeros
+            xs = (params["groups"], jnp.zeros((n_groups,), jnp.float32))
+            def group_body_nc(carry, xs_):
+                xc, aux_c = carry
+                gp, _ = xs_
+                for pos in range(period):
+                    xc, aux, _ = run_block(xc, gp[f"p{pos}"],
+                                           cfg.block_pattern[pos], None)
+                    aux_c = aux_c + aux
+                return (xc, aux_c), 0
+            body = jax.checkpoint(group_body_nc) if remat == "full" else group_body_nc
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), xs)
+        else:
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                group_body, (x, aux_total), xs)
+
+    # suffix
+    new_suffix_caches = []
+    n_pre, n_grp, _ = layer_layout(cfg)
+    for i, blk in enumerate(params["suffix"]):
+        if ctx.tap is not None:
+            ctx.prefix = f"L{n_pre + n_grp * period + i}."
+        c = cache["suffix"][i] if cache is not None else None
+        x, aux, c_out = run_block(x, blk, cfg.block_pattern[i % period], c)
+        aux_total += aux
+        new_suffix_caches.append(c_out)
+    ctx.prefix = ""
+
+    x = norm(params["final_norm"], x, cfg.norm)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix_caches,
+                     "groups": new_group_caches,
+                     "suffix": new_suffix_caches}
+    return x, aux_total, new_cache
+
+
+# ==========================================================================
+# Loss (training step objective)
+# ==========================================================================
+def lm_loss(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
+            cfg: ModelConfig, remat: str = "none") -> jax.Array:
+    hidden, aux, _ = forward(ctx, params, batch, cfg, remat=remat)
+    if cfg.n_vision_tokens and "vision" in batch:
+        hidden = hidden[:, cfg.n_vision_tokens:]
+    head = params.get("lm_head") or {"w": params["embed"]["w"].T}
+    xent = chunked_softmax_xent(hidden, head, batch["labels"], ctx)
+    return xent + AUX_WEIGHT * aux
+
+
+# ==========================================================================
+# Cache init / prefill / decode
+# ==========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Dict:
+    n_prefix, n_groups, n_suffix = layer_layout(cfg)
+    period = len(cfg.block_pattern)
+    cross = cfg.is_encoder_decoder
+
+    def blockc(kind):
+        return init_block_cache(cfg, kind, batch, max_len, dtype, cross)
+
+    def stacked(kind):
+        one = blockc(kind)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(), one)
+
+    return {
+        "prefix": [blockc(_kind_at(cfg, i)) for i in range(n_prefix)],
+        "groups": ({f"p{p}": stacked(cfg.block_pattern[p]) for p in range(period)}
+                   if n_groups > 0 else None),
+        "suffix": [blockc(cfg.block_pattern[i % period]) for i in range(n_suffix)],
+    }
+
+
+def prefill(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
+            cfg: ModelConfig, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Process the prompt; returns (last-token logits, populated cache)."""
+    hidden, _, cache = forward(ctx, params, batch, cfg, cache=cache)
+    head = params.get("lm_head") or {"w": params["embed"]["w"].T}
+    logits = linear(ctx, head, hidden[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(ctx: Ctx, params: Dict, token: jax.Array, cache: Dict,
+                cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """One token for every sequence in the batch. token: (B, 1) int32."""
+    x = embed(params["embed"], token, ctx.compute_dtype)
+    x = _hint_act(ctx, x)
+    period = len(cfg.block_pattern)
+
+    new_prefix = []
+    for i, blk in enumerate(params["prefix"]):
+        x, _, c = apply_block(ctx, blk, x, cfg, _kind_at(cfg, i), "step",
+                              cache=cache["prefix"][i])
+        new_prefix.append(c)
+
+    new_groups = None
+    if params["groups"]:
+        def body(xc, xs):
+            gp, gc = xs
+            new_gc = {}
+            for pos in range(period):
+                xc, _, c = apply_block(ctx, gp[f"p{pos}"], xc, cfg,
+                                       cfg.block_pattern[pos], "step",
+                                       cache=gc[f"p{pos}"])
+                new_gc[f"p{pos}"] = c
+            return xc, new_gc
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               cache["groups"]))
+
+    new_suffix = []
+    for i, blk in enumerate(params["suffix"]):
+        x, _, c = apply_block(ctx, blk, x, cfg, cfg.block_pattern[i % period],
+                              "step", cache=cache["suffix"][i])
+        new_suffix.append(c)
+
+    x = norm(params["final_norm"], x, cfg.norm)
+    head = params.get("lm_head") or {"w": params["embed"]["w"].T}
+    logits = linear(ctx, head, x)
+    return logits, {"prefix": new_prefix, "groups": new_groups,
+                    "suffix": new_suffix}

@@ -1,0 +1,287 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (parallel) + sLSTM (sequential).
+
+mLSTM — matrix-memory LSTM with exponential gating. Its parallel form is
+linear attention with a (t, s) decay matrix
+``log D_ts = F_t − F_s + ĩ_s`` (F = cumulative log-sigmoid forget gates),
+stabilized by a running max m_t. We compute it *chunked* with an online
+max (same memory discipline as blockwise attention: no S×S materialization)
+and use the O(d²)-state recurrent form for decode — which is what makes
+the 500k-context decode shape run with constant memory.
+
+sLSTM — scalar-memory LSTM with recurrent gate connections (block-diagonal
+per head), inherently sequential ⇒ ``lax.scan`` over time.
+
+Block wrappers follow the paper: mLSTM block = up-proj (×2) → mixer →
+gated down-proj; sLSTM block = mixer → GeLU FFN (×4/3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.linear import Ctx, init_linear, linear
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def init_mlstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    dp = int(d * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": init_linear(ks[0], d, dp, dtype=dtype),
+        "up_gate": init_linear(ks[1], d, dp, dtype=dtype),
+        "wq": init_linear(ks[2], dp, dp, dtype=dtype),
+        "wk": init_linear(ks[3], dp, dp, dtype=dtype),
+        "wv": init_linear(ks[4], dp, dp, dtype=dtype),
+        "w_if": init_linear(ks[5], dp, 2 * h, bias=True, dtype=dtype),
+        "down": init_linear(ks[6], dp, d, scale=1.0 / dp**0.5, dtype=dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    dp = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    hd = dp // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mlstm_qkvif(ctx: Ctx, params: Dict, u: jax.Array, h: int, prefix: str):
+    b, s, dp = u.shape
+    hd = dp // h
+    q = linear(ctx, params["wq"], u, f"{prefix}.wq").reshape(b, s, h, hd)
+    k = linear(ctx, params["wk"], u, f"{prefix}.wk").reshape(b, s, h, hd)
+    v = linear(ctx, params["wv"], u, f"{prefix}.wv").reshape(b, s, h, hd)
+    gates = linear(ctx, params["w_if"], u, f"{prefix}.w_if").astype(jnp.float32)
+    i_pre, f_pre = gates[..., :h], gates[..., h:]  # (B, S, H)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, chunk: int = 256) -> jax.Array:
+    """Chunked stabilized parallel mLSTM. q,k,v: (B,S,H,hd); gates (B,S,H)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    logf = jax.nn.log_sigmoid(f_pre)                    # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)                     # F_t = Σ_{u≤t} logσ(f_u)
+    # log D_ts = Σ_{u=s+1}^{t} logσ(f_u) + ĩ_s = F_t − F_s + ĩ_s (s ≤ t),
+    # matching the recurrent form C_t = f_t C_{t−1} + i_t k_t v_tᵀ.
+    a_q = fcum                                          # per-query F_t
+    a_k = fcum - i_pre                                  # per-key F_s − ĩ_s
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, zq) for t in (q, k, v))
+        a_q = jnp.pad(a_q, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+        a_k = jnp.pad(a_k, ((0, 0), (0, pad), (0, 0)), constant_values=jnp.inf)
+    n_ch = (s + pad) // c
+    qs = q.reshape(b, n_ch, c, h, hd).swapaxes(0, 1)
+    ks_ = k.reshape(b, n_ch, c, h, hd).swapaxes(0, 1)
+    vs = v.reshape(b, n_ch, c, h, hd).swapaxes(0, 1)
+    aqs = a_q.reshape(b, n_ch, c, h).swapaxes(0, 1)
+    aks = a_k.reshape(b, n_ch, c, h).swapaxes(0, 1)
+    pos = jnp.arange(s + pad).reshape(n_ch, c)
+
+    def one_q(args):
+        qi, aqi, qp = args  # (B,c,H,hd), (B,c,H), (c,)
+
+        def kv_step(carry, inp):
+            m, num, den = carry
+            kj, vj, akj, kp = inp
+            # log decay (B,H,cq,ck) = aq_t − ak_s ; mask s ≤ t
+            ld = aqi.transpose(0, 2, 1)[:, :, :, None] - akj.transpose(0, 2, 1)[:, :, None, :]
+            mask = qp[:, None] >= kp[None, :]
+            ld = jnp.where(mask[None, None], ld, NEG)
+            m_new = jnp.maximum(m, jnp.max(ld, axis=-1))
+            dmat = jnp.exp(ld - m_new[..., None])
+            sc = jnp.einsum("bqhd,bchd->bhqc", qi, kj,
+                            preferred_element_type=jnp.float32) * scale
+            w = sc * dmat
+            corr = jnp.exp(m - m_new)
+            num_new = num * corr[..., None] + jnp.einsum(
+                "bhqc,bchd->bhqd", w, vj.astype(jnp.float32))
+            den_new = den * corr + jnp.sum(w, axis=-1)
+            return (m_new, num_new, den_new), None
+
+        m0 = jnp.full((b, h, c), NEG, jnp.float32)
+        num0 = jnp.zeros((b, h, c, hd), jnp.float32)
+        den0 = jnp.zeros((b, h, c), jnp.float32)
+        (m, num, den), _ = jax.lax.scan(kv_step, (m0, num0, den0),
+                                        (ks_, vs, aks, pos))
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        return out.transpose(0, 2, 1, 3)  # (B,c,H,hd)
+
+    out = jax.lax.map(one_q, (qs, aqs, pos))
+    out = out.swapaxes(0, 1).reshape(b, s + pad, h, hd)
+    return out[:, :s]
+
+
+def mlstm_seq(
+    ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+    cache: Optional[Dict] = None, prefix: str = "mlstm",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    u = linear(ctx, params["up"], x, f"{prefix}.up")
+    g = linear(ctx, params["up_gate"], x, f"{prefix}.up_gate")
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(ctx, params, u, h, prefix)
+    mixed = _mlstm_parallel(q, k, v, i_pre, f_pre)
+    y = mixed.reshape(b, s, -1).astype(x.dtype) * jax.nn.silu(g)
+    out = linear(ctx, params["down"], y, f"{prefix}.down")
+
+    if cache is not None:
+        # rebuild the recurrent state by scanning the last chunk is O(S);
+        # instead fold the full sequence once (prefill cost O(S·d²/h)).
+        cache = _mlstm_fold(q, k, v, i_pre, f_pre, cache)
+    return out, cache
+
+
+def _mlstm_fold(q, k, v, i_pre, f_pre, cache: Dict) -> Dict:
+    """Sequentially fold a whole sequence into the (C, n, m) state."""
+    del q
+    b, s, h, hd = k.shape
+
+    def step(carry, t):
+        C, n, m = carry
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        it, ft = i_pre[:, t], f_pre[:, t]
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]) / (hd ** 0.5)
+        n = f_s[..., None] * n + i_s[..., None] * kt / (hd ** 0.5)
+        return (C, n, m_new), None
+
+    (C, n, m), _ = jax.lax.scan(
+        step, (cache["C"], cache["n"], cache["m"]), jnp.arange(s))
+    return {"C": C, "n": n, "m": m, "pos": cache["pos"] + s}
+
+
+def mlstm_step(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    prefix: str = "mlstm",
+) -> Tuple[jax.Array, Dict]:
+    """Recurrent decode step; x: (B, 1, D). State is O(H·hd²) — constant in
+    sequence length (the 500k shape relies on this)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    u = linear(ctx, params["up"], x, f"{prefix}.up")
+    g = linear(ctx, params["up_gate"], x, f"{prefix}.up_gate")
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(ctx, params, u, h, prefix)
+    hd = q.shape[-1]
+    qt = q[:, 0].astype(jnp.float32)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    it, ft = i_pre[:, 0], f_pre[:, 0]
+
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + cache["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + cache["m"] - m_new)
+    C = f_s[..., None, None] * cache["C"] + i_s[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :]) / (hd ** 0.5)
+    n = f_s[..., None] * cache["n"] + i_s[..., None] * kt / (hd ** 0.5)
+
+    num = jnp.einsum("bhde,bhd->bhe", C, qt)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))
+    mixed = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]  # (B,H,hd)
+    y = mixed.reshape(b, 1, -1).astype(x.dtype) * jax.nn.silu(g)
+    out = linear(ctx, params["down"], y, f"{prefix}.down")
+    return out, {"C": C, "n": n, "m": m_new, "pos": cache["pos"] + 1}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def init_slstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    dff = int(d * cfg.slstm_proj_factor)
+    return {
+        "w_gates": init_linear(ks[0], d, 4 * d, bias=True, dtype=dtype),
+        # recurrent block-diagonal weights: (H, hd, 4·hd)
+        "r_gates": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+                    / hd**0.5).astype(dtype),
+        "w_out": init_linear(ks[2], d, d, scale=1.0 / d**0.5, dtype=dtype),
+        "ffn_up": init_linear(ks[3], d, dff, dtype=dtype),
+        "ffn_down": init_linear(ks[4], dff, d, scale=1.0 / dff**0.5, dtype=dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _slstm_scan(params: Dict, gates_x: jax.Array, state: Dict, h_heads: int):
+    """Run the sequential sLSTM over (B, S, 4d) precomputed input gates."""
+    b, s, d4 = gates_x.shape
+    d = d4 // 4
+    hd = d // h_heads
+    r_g = params["r_gates"].astype(jnp.float32)  # (H, hd, 4hd)
+
+    def step(carry, t):
+        c, n, hh, m = carry
+        gx = gates_x[:, t].astype(jnp.float32)
+        hr = hh.reshape(b, h_heads, hd)
+        gr = jnp.einsum("bhd,hde->bhe", hr, r_g).reshape(b, 4 * d)
+        g = gx + gr
+        z_pre, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    init = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, hh, m), hs = jax.lax.scan(step, init, jnp.arange(s))
+    return hs.swapaxes(0, 1), {"c": c, "n": n, "h": hh, "m": m}  # (B,S,d)
+
+
+def slstm_seq(
+    ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
+    cache: Optional[Dict] = None, prefix: str = "slstm",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    state = cache if cache is not None else init_slstm_cache(cfg, x.shape[0])
+    gates_x = linear(ctx, params["w_gates"], x, f"{prefix}.w_gates")
+    hs, new_state = _slstm_scan(params, gates_x, state, cfg.n_heads)
+    y = linear(ctx, params["w_out"], hs.astype(x.dtype), f"{prefix}.w_out")
+    y = y + linear(ctx, params["ffn_down"],
+                   jax.nn.gelu(linear(ctx, params["ffn_up"], y,
+                                      f"{prefix}.ffn_up")),
+                   f"{prefix}.ffn_down")
+    if cache is not None:
+        new_state["pos"] = cache["pos"] + x.shape[1]
+        return y, new_state
+    return y, None
+
+
+def slstm_step(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    prefix: str = "slstm",
+) -> Tuple[jax.Array, Dict]:
+    y, new_state = slstm_seq(ctx, params, x, cfg, cache=cache, prefix=prefix)
+    return y, new_state

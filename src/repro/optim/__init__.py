@@ -1,0 +1,27 @@
+"""Optimizer substrate: AdamW, schedules, grad transforms, compression."""
+from repro.optim.adamw import (
+    AdamState,
+    AdamW,
+    apply_updates,
+    constant_schedule,
+    cosine_schedule,
+)
+from repro.optim.compress import (
+    dequantize_int8,
+    ef_compressed_psum,
+    init_error_feedback,
+    quantize_int8,
+)
+from repro.optim.transforms import (
+    clip_by_global_norm,
+    global_norm,
+    scale_lr_grads_by_key,
+    srr_grad_transform,
+)
+
+__all__ = [
+    "AdamState", "AdamW", "apply_updates", "constant_schedule",
+    "cosine_schedule", "clip_by_global_norm", "global_norm",
+    "scale_lr_grads_by_key", "srr_grad_transform", "dequantize_int8",
+    "ef_compressed_psum", "init_error_feedback", "quantize_int8",
+]

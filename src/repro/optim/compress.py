@@ -1,0 +1,74 @@
+"""Error-feedback int8 gradient compression for cross-pod data parallelism.
+
+At 1000+ node scale the ``pod`` mesh axis rides the DCN, whose bandwidth
+is an order of magnitude below ICI; the cross-pod gradient all-reduce is
+then the dominant collective. Compressing that all-reduce from f32 to int8
+cuts its bytes 4× at the cost of quantization noise, which *error
+feedback* (Karimireddy et al., 2019; QSGD, Alistarh et al., 2017 — the
+same additive-noise model the paper's Assumption 4.1 leans on) makes
+asymptotically harmless: the residual of each step's quantization is added
+back before the next step's compression, so noise averages out instead of
+accumulating.
+
+Usage inside a shard_map'd gradient sync (see repro.train.steps):
+
+    g_local = ... per-pod mean gradient ...
+    g_sync, new_ef = ef_compressed_psum(g_local, ef_state, axis="pod")
+
+All ops are elementwise + one psum per leaf — jit/SPMD friendly.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(grads_like: Any) -> Any:
+    """Zero residual buffers matching the gradient tree (f32)."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (codes int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def ef_compressed_psum(
+    grads: Any,
+    ef: Any,
+    axis: str,
+) -> Tuple[Any, Any]:
+    """Compressed cross-``axis`` mean with error feedback.
+
+    Per leaf: c = Q8(g + ef);  synced = psum(c)/n;  ef' = (g + ef) − deq(c).
+    The psum runs on int32 accumulations of int8 codes (codes fit: ≤127·n
+    for n ≤ 2^24 pods), plus one scalar psum for the max scale.
+    """
+    n = jax.lax.psum(1.0, axis)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        # shared scale across the axis so codes are summable
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis)
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        codes = jnp.clip(jnp.round(g / scale), -127, 127)
+        summed = jax.lax.psum(codes.astype(jnp.int32), axis)
+        synced = summed.astype(jnp.float32) * scale / n
+        new_e = g - codes * scale
+        return synced, new_e
+
+    is_pair = lambda t: type(t) is tuple
+    pairs = jax.tree_util.tree_map(one, grads, ef)
+    synced = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return synced, new_ef

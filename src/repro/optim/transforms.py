@@ -1,0 +1,75 @@
+"""Composable gradient transforms: clipping + SRR gradient scaling.
+
+The SRR QPEFT rule (paper Eq. 7–9) attenuates gradients along preserved
+adapter directions. It is expressed here as a *gradient transform* applied
+before the optimizer update, so it composes with AdamW (or anything with
+the same (init, update) contract) and stays jittable: the per-rank scale
+vectors are precomputed at adapter init and live in the frozen tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qpeft import AdapterParams, AdapterStatic, scale_adapter_grads
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    """Returns (clipped grads, pre-clip norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def srr_grad_transform(statics: Any) -> Callable[[Any], Any]:
+    """Transform scaling AdapterParams gradients by their per-rank vectors.
+
+    ``statics`` is a pytree of AdapterStatic aligned with the trainable
+    adapter tree (same structure, AdapterStatic leaves where the grads tree
+    has AdapterParams leaves); non-adapter leaves pass through unchanged.
+    """
+    def transform(grads: Any) -> Any:
+        def apply(g, s):
+            if isinstance(g, AdapterParams) and isinstance(s, AdapterStatic):
+                return scale_adapter_grads(g, s)
+            return g
+        return jax.tree_util.tree_map(
+            apply, grads, statics,
+            is_leaf=lambda x: isinstance(x, (AdapterParams, AdapterStatic)))
+    return transform
+
+
+def scale_lr_grads_by_key(grads: Any, scales: Any) -> Any:
+    """Dict-schema variant used by the model zoo's QPEFT path.
+
+    The trainable tree holds per-layer dicts {"l": (m, r), "r": (r, n)};
+    ``scales`` holds matching {"gscale": (r,)} leaves. Gradients on ``l``
+    columns / ``r`` rows are multiplied by the per-rank vector.
+    """
+    def walk(g: Any, s: Any) -> Any:
+        if isinstance(g, dict) and "l" in g and "r" in g:
+            vec = s["gscale"] if isinstance(s, dict) and "gscale" in s else None
+            if vec is None:
+                return g
+            out = dict(g)
+            # broadcast over possible leading (scan/expert) dims
+            out["l"] = g["l"] * vec[..., None, :]
+            out["r"] = g["r"] * vec[..., :, None]
+            return out
+        if isinstance(g, dict):
+            return {k: walk(v, s.get(k) if isinstance(s, dict) else None)
+                    for k, v in g.items()}
+        if isinstance(g, (list, tuple)):
+            ss = s if isinstance(s, (list, tuple)) else [None] * len(g)
+            return type(g)(walk(v, sv) for v, sv in zip(g, ss))
+        return g
+    return walk(grads, scales)

@@ -1,0 +1,43 @@
+"""Quantizer substrate: MXINT, uniform-int, GPTQ-style."""
+from repro.quant.base import QuantizerConfig, effective_bits, quant_error, tree_bytes
+from repro.quant.gptq import BoundGPTQ, GPTQQuantizer, hessian_from_activations
+from repro.quant.mxint import (
+    MXIntPacked,
+    MXIntQuantizer,
+    pack_codes_4bit,
+    unpack_codes_4bit,
+)
+from repro.quant.uniform import UniformPacked, UniformQuantizer
+
+__all__ = [
+    "QuantizerConfig",
+    "effective_bits",
+    "quant_error",
+    "tree_bytes",
+    "MXIntPacked",
+    "MXIntQuantizer",
+    "pack_codes_4bit",
+    "unpack_codes_4bit",
+    "UniformPacked",
+    "UniformQuantizer",
+    "GPTQQuantizer",
+    "BoundGPTQ",
+    "hessian_from_activations",
+    "make_quantizer",
+]
+
+
+def make_quantizer(config: QuantizerConfig, hessian=None):
+    """Factory from a serializable config (+ optional calibration Hessian)."""
+    if config.kind == "mxint":
+        return MXIntQuantizer(bits=config.bits, block_size=config.block_size)
+    if config.kind == "uniform":
+        return UniformQuantizer(bits=config.bits, group_size=config.block_size,
+                                symmetric=config.symmetric)
+    if config.kind == "gptq":
+        if hessian is None:
+            raise ValueError("gptq quantizer needs a calibration Hessian")
+        return GPTQQuantizer(bits=config.bits, group_size=config.block_size,
+                             symmetric=config.symmetric,
+                             damping=config.damping).make_bound(hessian)
+    raise ValueError(f"unknown quantizer kind {config.kind!r}")

@@ -1,0 +1,84 @@
+"""Quantizer protocol.
+
+A quantizer maps a full-precision weight matrix ``W`` to a *simulated*
+quantized matrix ``Q = dequant(quant(W))`` plus an opaque packed
+representation for deployment. All SRR/QER math operates on the simulated
+``Q`` (exactly what the paper does); the packed form feeds the serving path
+and the Pallas kernels.
+
+Quantizers are stateless pytree-of-config objects so they can be passed
+through jit boundaries as static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantizer(Protocol):
+    """Protocol implemented by all weight quantizers."""
+
+    #: effective bits per weight including side info (e.g. 3.25 for MXINT3/b32)
+    effective_bits: float
+
+    def quantize(self, w: jax.Array) -> Any:
+        """Return an opaque packed representation of ``w``."""
+        ...
+
+    def dequantize(self, packed: Any) -> jax.Array:
+        """Inverse of :meth:`quantize` up to rounding."""
+        ...
+
+    def fake_quant(self, w: jax.Array) -> jax.Array:
+        """``dequantize(quantize(w))`` — the simulated quantized weights."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerConfig:
+    """Serializable description of a quantizer choice."""
+
+    kind: str = "mxint"  # mxint | uniform | gptq | none
+    bits: int = 3
+    block_size: int = 32  # MXINT block / uniform group size
+    symmetric: bool = True
+    # GPTQ-specific
+    damping: float = 0.01
+
+    def key(self) -> str:
+        return f"{self.kind}{self.bits}b{self.block_size}"
+
+
+def quant_error(quantizer: Quantizer, w: jax.Array) -> jax.Array:
+    """E_Q(W) = W - Q(W): the quantization error operator from the paper."""
+    return w - quantizer.fake_quant(w)
+
+
+def effective_bits(config: QuantizerConfig) -> float:
+    """Average bits/weight including shared side information.
+
+    MXINT with block ``b`` shares one 8-bit exponent per block:
+    ``bits + 8/b`` (e.g. 3 + 8/32 = 3.25, matching the paper's accounting).
+    Uniform group quantization stores one fp16 scale (+ fp16 zero point if
+    asymmetric) per group.
+    """
+    if config.kind == "none":
+        return 16.0
+    if config.kind == "mxint":
+        return config.bits + 8.0 / config.block_size
+    if config.kind in ("uniform", "gptq"):
+        side = 16.0 if config.symmetric else 32.0
+        return config.bits + side / config.block_size
+    raise ValueError(f"unknown quantizer kind {config.kind!r}")
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all arrays in a pytree (for memory accounting)."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if isinstance(x, (jax.Array, jnp.ndarray))
+    )

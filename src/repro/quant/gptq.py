@@ -1,0 +1,130 @@
+"""GPTQ-style Hessian-ordered quantizer (Frantar et al., 2023), JAX port.
+
+For a linear layer ``y = x @ W`` with input autocorrelation
+``H = E[x xᵀ] ∈ R^{m×m}``, GPTQ quantizes the rows of ``W`` (input
+channels) sequentially, propagating the rounding error of row ``i`` into
+the not-yet-quantized rows through the upper Cholesky factor ``U`` of
+``H⁻¹`` (``H⁻¹ = Uᵀ U``): after rounding row ``i``,
+``W[j,:] -= U[i,j]/U[i,i] · (W[i,:] − q_i)`` for ``j > i``.
+
+This is the second "real" quantizer family used by the paper's
+quantizer-agnostic study (Table 5). Group scales are fixed from the
+original weights (standard practice); :class:`UniformQuantizer` provides
+the rounding primitive.
+
+The sequential loop is a ``lax.fori_loop`` over rows with full-row rank-1
+updates — O(m²n), fine at calibration time and for benchmark dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.uniform import UniformQuantizer
+
+
+def _cholesky_inv_upper(h: jax.Array, damping: float) -> jax.Array:
+    """Upper-triangular U with H⁻¹ = Uᵀ U (dampened)."""
+    m = h.shape[0]
+    d = damping * jnp.mean(jnp.diag(h))
+    hd = h + (d + 1e-8) * jnp.eye(m, dtype=h.dtype)
+    hinv = jnp.linalg.inv(hd)
+    # symmetrize against numerical drift before the Cholesky
+    hinv = 0.5 * (hinv + hinv.T)
+    ell = jnp.linalg.cholesky(hinv)  # lower, H⁻¹ = L Lᵀ
+    return ell.T  # upper U, H⁻¹ = Uᵀ U
+
+
+@dataclasses.dataclass(frozen=True)
+class GPTQQuantizer:
+    """Hessian-aware sequential quantizer. Bind a Hessian with
+    :meth:`make_bound` to obtain a ``Quantizer``-protocol object."""
+
+    bits: int = 3
+    group_size: int = 128
+    symmetric: bool = False
+    damping: float = 0.01
+
+    @property
+    def effective_bits(self) -> float:
+        side = 16.0 if self.symmetric else 32.0
+        return self.bits + side / self.group_size
+
+    def _rounder(self) -> UniformQuantizer:
+        return UniformQuantizer(bits=self.bits, group_size=self.group_size,
+                                symmetric=self.symmetric)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def fake_quant_with_hessian(self, w: jax.Array, h: jax.Array) -> jax.Array:
+        """Quantize ``w`` (m, n) given input autocorrelation ``h`` (m, m)."""
+        m, n = w.shape
+        g = self.group_size
+        rounder = self._rounder()
+        # fixed group scales from the original weights
+        base = rounder.quantize(w)
+        scales, zeros = base.scales, base.zeros
+
+        uinv = _cholesky_inv_upper(h.astype(jnp.float32), self.damping)
+        diag = jnp.clip(jnp.diag(uinv), 1e-8, None)
+
+        def row_quant(i, wcur):
+            row = jax.lax.dynamic_slice_in_dim(wcur, i, 1, axis=0)  # (1, n)
+            gidx = i // g
+            s = jax.lax.dynamic_slice_in_dim(scales, gidx, 1, axis=0)
+            z = jax.lax.dynamic_slice_in_dim(zeros, gidx, 1, axis=0)
+            if self.symmetric:
+                qmax = 2 ** (self.bits - 1) - 1
+                q = jnp.clip(jnp.round(row / s), -qmax - 1, qmax) * s
+            else:
+                levels = 2**self.bits - 1
+                half = 2 ** (self.bits - 1)
+                c = jnp.clip(jnp.round((row - z) / s) + half, 0, levels) - half
+                q = c * s + z
+            err = (row - q) / diag[i]  # (1, n)
+            # propagate along row i of the upper factor into rows > i
+            u_row = jax.lax.dynamic_slice_in_dim(uinv, i, 1, axis=0)  # (1, m)
+            mask = (jnp.arange(m) > i).astype(wcur.dtype)[:, None]
+            wnew = wcur - mask * (u_row.T * err)
+            wnew = jax.lax.dynamic_update_slice_in_dim(wnew, q, i, axis=0)
+            return wnew
+
+        wq = jax.lax.fori_loop(0, m, row_quant, w.astype(jnp.float32))
+        return wq.astype(w.dtype)
+
+    def make_bound(self, h: jax.Array) -> "BoundGPTQ":
+        return BoundGPTQ(self, h)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundGPTQ:
+    """GPTQ with a baked-in Hessian, satisfying the Quantizer protocol."""
+
+    inner: GPTQQuantizer
+    hessian: jax.Array
+
+    @property
+    def effective_bits(self) -> float:
+        return self.inner.effective_bits
+
+    def fake_quant(self, w: jax.Array) -> jax.Array:
+        return self.inner.fake_quant_with_hessian(w, self.hessian)
+
+    def quantize(self, w: jax.Array):
+        return self._rounder().quantize(self.fake_quant(w))
+
+    def dequantize(self, packed):
+        return self._rounder().dequantize(packed)
+
+    def _rounder(self) -> UniformQuantizer:
+        return UniformQuantizer(bits=self.inner.bits,
+                                group_size=self.inner.group_size,
+                                symmetric=self.inner.symmetric)
+
+
+def hessian_from_activations(x: jax.Array) -> jax.Array:
+    """H = Xᵀ X / N from calibration activations ``x`` (N, m)."""
+    x = x.astype(jnp.float32)
+    return (x.T @ x) / x.shape[0]

@@ -1,0 +1,121 @@
+"""MXINT block quantizer (Darvish Rouhani et al., 2023).
+
+A block of ``block_size`` consecutive weights along the *reduction* axis
+(axis 0 of a ``(m, n)`` weight used as ``y = x @ W``) shares a single 8-bit
+power-of-two exponent; each element stores a signed ``bits``-bit integer
+mantissa. Effective bitwidth is ``bits + 8/block_size`` (3.25 for the
+paper's 3-bit/b32 setting).
+
+Two representations:
+  * :class:`MXIntPacked` — codes in an int8 container (algorithm path).
+  * :func:`pack_codes_4bit` / :func:`unpack_codes_4bit` — deployment
+    container for ``bits <= 4``: two codes per uint8 byte. The Pallas
+    serving kernel consumes this form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MXIntPacked(NamedTuple):
+    """Quantized weight: int8 codes + per-block int8 exponents.
+
+    ``codes``     int8  (m, n)           mantissas in [-qmax-1, qmax]
+    ``exponents`` int8  (m//block, n)    shared power-of-2 exponent per block
+    """
+
+    codes: jax.Array
+    exponents: jax.Array
+    block_size: int
+    bits: int
+    orig_rows: int  # m before padding
+
+
+def _qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def _pad_rows(w: jax.Array, block: int) -> jax.Array:
+    m = w.shape[0]
+    pad = (-m) % block
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return w
+
+
+@dataclasses.dataclass(frozen=True)
+class MXIntQuantizer:
+    """Symmetric MXINT quantizer with shared power-of-2 block exponents."""
+
+    bits: int = 3
+    block_size: int = 32
+
+    @property
+    def effective_bits(self) -> float:
+        return self.bits + 8.0 / self.block_size
+
+    def quantize(self, w: jax.Array) -> MXIntPacked:
+        if w.ndim != 2:
+            raise ValueError(f"MXInt expects 2-D weights, got {w.shape}")
+        m, n = w.shape
+        b = self.block_size
+        qmax = _qmax(self.bits)
+        wp = _pad_rows(w.astype(jnp.float32), b)
+        blocks = wp.reshape(-1, b, n)  # (nb, b, n)
+        amax = jnp.max(jnp.abs(blocks), axis=1)  # (nb, n)
+        # smallest power-of-2 scale such that amax/scale <= qmax
+        safe = jnp.where(amax > 0, amax, 1.0)
+        exp = jnp.ceil(jnp.log2(safe / qmax))
+        exp = jnp.clip(exp, -127, 127)
+        scale = jnp.exp2(exp)[:, None, :]  # (nb, 1, n)
+        codes = jnp.clip(jnp.round(blocks / scale), -qmax - 1, qmax)
+        codes = jnp.where(amax[:, None, :] > 0, codes, 0.0)
+        return MXIntPacked(
+            codes=codes.reshape(wp.shape).astype(jnp.int8),
+            exponents=exp.astype(jnp.int8),
+            block_size=b,
+            bits=self.bits,
+            orig_rows=m,
+        )
+
+    def dequantize(self, packed: MXIntPacked) -> jax.Array:
+        b = packed.block_size
+        codes = packed.codes.astype(jnp.float32)
+        nb = codes.shape[0] // b
+        n = codes.shape[1]
+        scale = jnp.exp2(packed.exponents.astype(jnp.float32))
+        out = (codes.reshape(nb, b, n) * scale[:, None, :]).reshape(codes.shape)
+        return out[: packed.orig_rows]
+
+    def fake_quant(self, w: jax.Array) -> jax.Array:
+        return self.dequantize(self.quantize(w)).astype(w.dtype)
+
+
+def pack_codes_4bit(codes: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-8, 7] two-per-byte (even rows = low nibble).
+
+    Input (m, n) int8 with m even; output (m//2, n) uint8.
+    """
+    if codes.shape[0] % 2:
+        raise ValueError("row count must be even to pack 4-bit pairs")
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[0::2], u[1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_codes_4bit(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_codes_4bit` → int8 codes in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    m2, n = packed.shape
+    out = jnp.zeros((m2 * 2, n), dtype=jnp.int8)
+    out = out.at[0::2].set(lo)
+    out = out.at[1::2].set(hi)
+    return out

@@ -1,0 +1,100 @@
+"""Group-wise uniform integer quantizer (symmetric or asymmetric).
+
+Used as (a) a second quantizer family for the paper's quantizer-agnostic
+study (Table 5) and (b) the rounding primitive inside the GPTQ-style
+quantizer. Groups run along the reduction axis like MXINT blocks, but the
+scale is a full-precision float (not a power of two).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.mxint import _pad_rows
+
+
+class UniformPacked(NamedTuple):
+    codes: jax.Array      # int8 (m, n)
+    scales: jax.Array     # f32 (m//g, n)
+    zeros: jax.Array      # f32 (m//g, n) — 0 when symmetric
+    group_size: int
+    bits: int
+    orig_rows: int
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformQuantizer:
+    bits: int = 3
+    group_size: int = 32
+    symmetric: bool = True
+
+    @property
+    def effective_bits(self) -> float:
+        side = 16.0 if self.symmetric else 32.0
+        return self.bits + side / self.group_size
+
+    def quantize(self, w: jax.Array) -> UniformPacked:
+        m, n = w.shape
+        g = self.group_size
+        wp = _pad_rows(w.astype(jnp.float32), g)
+        blocks = wp.reshape(-1, g, n)
+        if self.symmetric:
+            qmax = 2 ** (self.bits - 1) - 1
+            amax = jnp.max(jnp.abs(blocks), axis=1)
+            scale = jnp.where(amax > 0, amax / qmax, 1.0)
+            zero = jnp.zeros_like(scale)
+            codes = jnp.clip(jnp.round(blocks / scale[:, None, :]), -qmax - 1, qmax)
+        else:
+            levels = 2**self.bits - 1
+            lo = jnp.min(blocks, axis=1)
+            hi = jnp.max(blocks, axis=1)
+            rng = hi - lo
+            scale = jnp.where(rng > 0, rng / levels, 1.0)
+            zero = lo
+            codes = jnp.clip(jnp.round((blocks - zero[:, None, :]) / scale[:, None, :]), 0, levels)
+            codes = codes - 2 ** (self.bits - 1)  # recenter into int8 range
+            zero = zero + scale * 2 ** (self.bits - 1)
+        return UniformPacked(
+            codes=codes.reshape(wp.shape).astype(jnp.int8),
+            scales=scale,
+            zeros=zero,
+            group_size=g,
+            bits=self.bits,
+            orig_rows=m,
+        )
+
+    def dequantize(self, p: UniformPacked) -> jax.Array:
+        g = p.group_size
+        codes = p.codes.astype(jnp.float32)
+        nb = codes.shape[0] // g
+        n = codes.shape[1]
+        out = codes.reshape(nb, g, n) * p.scales[:, None, :] + p.zeros[:, None, :]
+        return out.reshape(codes.shape)[: p.orig_rows]
+
+    def fake_quant(self, w: jax.Array) -> jax.Array:
+        return self.dequantize(self.quantize(w)).astype(w.dtype)
+
+    def round_with_scales(self, w: jax.Array, scales: jax.Array, zeros: jax.Array) -> jax.Array:
+        """Round ``w`` (g-block rows) with *fixed* scales — GPTQ inner step.
+
+        ``w`` is (m, n); scales/zeros are (m//g, n) computed beforehand.
+        Returns the fake-quantized values (same shape as ``w``).
+        """
+        g = self.group_size
+        m, n = w.shape
+        wp = _pad_rows(w.astype(jnp.float32), g)
+        blocks = wp.reshape(-1, g, n)
+        if self.symmetric:
+            qmax = 2 ** (self.bits - 1) - 1
+            codes = jnp.clip(jnp.round(blocks / scales[:, None, :]), -qmax - 1, qmax)
+            out = codes * scales[:, None, :]
+        else:
+            levels = 2**self.bits - 1
+            q = jnp.round((blocks - zeros[:, None, :]) / scales[:, None, :])
+            half = 2 ** (self.bits - 1)
+            codes = jnp.clip(q + half, 0, levels) - half
+            out = codes * scales[:, None, :] + zeros[:, None, :]
+        return out.reshape(wp.shape)[:m]

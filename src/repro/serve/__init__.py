@@ -1,0 +1,4 @@
+"""Serving: batched prefill/decode engine over quantized (Q + LR) models."""
+from repro.serve.engine import Engine, Request, Result, ServeConfig
+
+__all__ = ["Engine", "Request", "Result", "ServeConfig"]

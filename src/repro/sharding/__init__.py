@@ -1,0 +1,19 @@
+"""Distribution: partition rules for the (pod, data, model) mesh."""
+from repro.sharding.rules import (
+    batch_axes,
+    batch_spec,
+    data_shardings,
+    dp_axes,
+    replicated,
+    spec_for_cache,
+    spec_for_param,
+    tree_cache_shardings,
+    tree_param_specs,
+    tree_shardings,
+)
+
+__all__ = [
+    "batch_axes", "batch_spec", "data_shardings", "dp_axes", "replicated",
+    "spec_for_cache", "spec_for_param", "tree_cache_shardings",
+    "tree_param_specs", "tree_shardings",
+]

@@ -1,0 +1,268 @@
+"""Partition rules: param path + shape → PartitionSpec.
+
+Mesh axes (see :mod:`repro.launch.mesh`):
+
+  * ``pod``   — pure data parallelism across pods (DCN)
+  * ``data``  — FSDP: params + optimizer state sharded, all-gathered per use
+  * ``model`` — tensor parallelism (attention heads / FFN columns / MoE
+                experts / vocab)
+
+Rules are *name-based*: every projection in the model zoo routes through
+``repro.models.linear`` with a stable dict schema, so the last string key
+on a pytree path identifies the tensor's role. Column-parallel weights
+(input dim replicated-per-use, output dim TP-sharded) are ``wq/wk/wv/up/
+gate/...``; row-parallel weights (input TP-sharded so a preceding
+column-parallel output feeds in without a gather) are ``wo/down/w_out``.
+
+Two structural wrinkles:
+  * **scan stacks** — params under ``groups`` carry a leading
+    ``n_groups`` layer dim, never sharded; rules apply to trailing dims.
+  * **MoE experts** — params under ``experts`` carry a leading expert dim
+    sharded over ``model`` (expert parallelism); within-expert dims then
+    avoid the ``model`` axis.
+
+Every rule degrades safely: a dim is only sharded when divisible by the
+mesh axis and at least ``min_shard`` wide, otherwise it is replicated
+(GSPMD would pad non-divisible dims — legal, but wasteful).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weights whose *output* (last) dim is TP-sharded
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "up", "gate", "up_gate", "w_gate", "w_branch",
+    "w_gates", "ffn_up", "w_if", "lm_head", "frontend_proj", "vision_proj",
+    "kv_down", "k_up", "v_up", "q_up", "q_proj", "w_kpe",
+}
+# weights whose *input* (second-to-last) dim is TP-sharded
+_ROW_PARALLEL = {"wo", "down", "w_out", "ffn_down"}
+# small / replicated by name
+_REPLICATED = {"g", "b", "conv_w", "router", "a_param", "conv_state",
+               "w_a", "w_x"}
+
+
+def _path_names(path: Tuple[Any, ...]) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+def _divisible(dim: int, axis_size: int, min_shard: int) -> bool:
+    return axis_size > 1 and dim >= min_shard and dim % axis_size == 0
+
+
+def spec_for_param(
+    path: Tuple[Any, ...],
+    shape: Sequence[int],
+    mesh: Mesh,
+    fsdp_axis: str = "data",
+    tp_axis: str = "model",
+    min_shard: int = 128,
+) -> P:
+    """PartitionSpec for one parameter array."""
+    names = _path_names(path)
+    axes = dict(mesh.shape)
+    fsdp = fsdp_axis if fsdp_axis in axes else None
+    tp = tp_axis if tp_axis in axes else None
+    fsdp_n = axes.get(fsdp_axis, 1)
+    tp_n = axes.get(tp_axis, 1)
+
+    leaf = names[-1] if names else ""
+    in_experts = "experts" in names
+    ndim = len(shape)
+
+    def shard(dim_size: int, axis: Optional[str], axis_n: int) -> Optional[str]:
+        return axis if axis and _divisible(dim_size, axis_n, min_shard) else None
+
+    # ---- 1-D / small tensors --------------------------------------------
+    if ndim <= 1 or leaf in _REPLICATED:
+        base: Tuple[Optional[str], ...] = (None,) * max(ndim, 0)
+        out = list(base)
+        # per-expert 1-D params still shard the expert dim
+        if in_experts and ndim >= 1:
+            out[0] = shard(shape[0], tp, tp_n)
+        return P(*out)
+
+    # ---- role of the trailing 2 dims -------------------------------------
+    m, n = shape[-2], shape[-1]
+    if leaf == "w" and "embed" in names:
+        two = (shard(m, tp, tp_n), shard(n, fsdp, fsdp_n))       # (vocab, d)
+    elif leaf in _ROW_PARALLEL or (leaf == "w" and names and
+                                   names[-2] in _ROW_PARALLEL):
+        two = (shard(m, tp, tp_n), shard(n, fsdp, fsdp_n))
+    elif leaf in _COL_PARALLEL or (leaf == "w" and len(names) >= 2 and
+                                   names[-2] in _COL_PARALLEL):
+        two = (shard(m, fsdp, fsdp_n), shard(n, tp, tp_n))
+    elif leaf in ("codes", "packed", "scale", "l"):
+        # quantized-backbone containers: inherit the parent linear's role
+        parent = names[-2] if len(names) >= 2 else ""
+        row = parent in _ROW_PARALLEL
+        if leaf == "l":       # (m, rank): rank never sharded
+            two = (shard(m, tp if row else fsdp,
+                         tp_n if row else fsdp_n), None)
+        elif row:
+            two = (shard(m, tp, tp_n), shard(n, fsdp, fsdp_n))
+        else:
+            two = (shard(m, fsdp, fsdp_n), shard(n, tp, tp_n))
+    elif leaf == "r":          # (rank, n): follow the output dim's role
+        parent = names[-2] if len(names) >= 2 else ""
+        row = parent in _ROW_PARALLEL
+        two = (None, shard(n, fsdp if row else tp,
+                           fsdp_n if row else tp_n))
+    else:
+        # default 2-D: FSDP the larger dim, TP the other when divisible
+        if m >= n:
+            two = (shard(m, fsdp, fsdp_n), shard(n, tp, tp_n))
+        else:
+            two = (shard(m, tp, tp_n), shard(n, fsdp, fsdp_n))
+
+    # ---- leading dims: expert dim → TP; scan/layer dims → replicated ----
+    lead: list[Optional[str]] = [None] * (ndim - 2)
+    if in_experts and ndim >= 3 and tp and _divisible(shape[ndim - 3], tp_n, 1):
+        # Expert parallelism wins the model axis: each device owns E/tp
+        # whole experts (full-width local GEMMs, dispatch/combine become
+        # all-to-alls) rather than slicing every small expert tp-ways.
+        lead[-1] = tp
+        two = tuple(a if a != tp else None for a in two)
+    return P(*lead, *two)
+
+
+def tree_param_specs(params: Any, mesh: Mesh, **kw) -> Any:
+    """Pytree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for_param(path, x.shape, mesh, **kw), params)
+
+
+def tree_shardings(params: Any, mesh: Mesh, **kw) -> Any:
+    """Pytree of NamedSharding matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(
+            mesh, spec_for_param(path, x.shape, mesh, **kw)), params)
+
+
+# ==========================================================================
+# Activation / batch / cache specs
+# ==========================================================================
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod', 'data') when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """DP axes usable for this batch (drop axes the batch can't fill)."""
+    axes: Tuple[str, ...] = ()
+    cap = 1
+    for a in dp_axes(mesh):
+        if global_batch % (cap * mesh.shape[a]) == 0:
+            axes = axes + (a,)
+            cap *= mesh.shape[a]
+    return axes
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """Spec for a (batch, ...) array: batch over usable DP axes."""
+    axes = batch_axes(mesh, global_batch)
+    lead = axes if axes else None
+    return P(lead, *([None] * extra_dims))
+
+
+def data_shardings(mesh: Mesh, batch: dict, global_batch: int) -> dict:
+    """NamedShardings for a train/prefill batch dict of arrays/specs."""
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        out[k] = NamedSharding(mesh, batch_spec(mesh, global_batch, nd - 1))
+    return out
+
+
+def spec_for_cache(
+    path: Tuple[Any, ...],
+    shape: Sequence[int],
+    mesh: Mesh,
+    global_batch: int,
+    tp_axis: str = "model",
+    min_shard: int = 16,
+) -> P:
+    """Decode-cache sharding.
+
+    Batch (dim 0) over the usable DP axes. The TP axis goes to, in
+    preference order: the KV-head dim, the head_dim, or a latent channel
+    dim — *never* the sequence dim (decode appends via
+    dynamic_update_slice at a runtime position; sharding S would force
+    GSPMD to all-gather the cache every step).
+    """
+    names = _path_names(path)
+    leaf = names[-1] if names else ""
+    axes = dict(mesh.shape)
+    tp = tp_axis if tp_axis in axes else None
+    tp_n = axes.get(tp_axis, 1)
+    ndim = len(shape)
+    if ndim == 0 or leaf in ("pos", "slot_pos"):
+        return P(*([None] * ndim))
+
+    spec: list[Optional[Any]] = [None] * ndim
+    # leading scan-stack dim: cache trees under "groups" carry n_groups
+    b_dim = 1 if (names and any(n.startswith("p") and n[1:].isdigit()
+                                for n in names) and ndim >= 2
+                  and "groups" in names) else 0
+    b_dim = 0
+    baxes = batch_axes(mesh, global_batch)
+    # caches stacked for scan have layer dim first; batch is then dim 1
+    if "groups" in names and ndim >= 2:
+        b_dim = 1
+    if baxes and shape[b_dim] >= 1:
+        spec[b_dim] = baxes
+
+    if tp is None:
+        return P(*spec)
+
+    def try_dim(d: int) -> bool:
+        if d < ndim and spec[d] is None and shape[d] % tp_n == 0 \
+                and shape[d] >= min_shard:
+            spec[d] = tp
+            return True
+        return False
+
+    if leaf in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale") \
+            and ndim - b_dim >= 3:
+        # (B, S, KV, hd): prefer KV heads; else shard the SEQUENCE dim
+        # (flash-decode: scores stay local, only softmax stats and the
+        # (B,1,H,hd) partial outputs all-reduce — sharding head_dim would
+        # all-reduce full score rows instead)
+        if ndim - b_dim == 4:
+            if not try_dim(b_dim + 2):
+                try_dim(b_dim + 1)
+        else:  # per-(b, slot, head) int8 KV scales
+            if not try_dim(b_dim + 2):
+                try_dim(b_dim + 1)
+    elif leaf in ("ckv", "kpe") and ndim - b_dim == 3:
+        try_dim(b_dim + 1)            # (B, S, r_kv): sequence dim
+    elif leaf in ("c", "n", "h", "cell", "state", "conv") or ndim >= 2:
+        # recurrent states: shard the widest non-batch dim
+        cands = sorted(range(b_dim + 1, ndim), key=lambda d: -shape[d])
+        for d in cands:
+            if try_dim(d):
+                break
+    return P(*spec)
+
+
+def tree_cache_shardings(cache: Any, mesh: Mesh, global_batch: int,
+                         **kw) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(
+            mesh, spec_for_cache(path, x.shape, mesh, global_batch, **kw)),
+        cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,19 @@
+"""Training substrate: steps, trainer loop, checkpointing."""
+from repro.train.checkpoint import CheckpointManager, config_hash
+from repro.train.steps import (
+    QPEFTState,
+    StepConfig,
+    TrainState,
+    init_qpeft_state,
+    init_train_state,
+    make_compressed_sync,
+    make_qpeft_step,
+    make_train_step,
+)
+from repro.train.trainer import Trainer
+
+__all__ = [
+    "CheckpointManager", "config_hash", "QPEFTState", "StepConfig",
+    "TrainState", "init_qpeft_state", "init_train_state",
+    "make_compressed_sync", "make_qpeft_step", "make_train_step", "Trainer",
+]

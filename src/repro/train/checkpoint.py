@@ -1,0 +1,154 @@
+"""Atomic, restart-safe checkpointing.
+
+Layout (one directory per run):
+
+    <dir>/step_00000400/
+        arrays.npz        flat {keystr: ndarray} of the full state pytree
+        manifest.json     step, timestamp, config hash, mesh note, keys
+    <dir>/LATEST          text file naming the newest complete step dir
+
+Write protocol (preemption-safe at every point):
+  1. write into ``<dir>/.tmp.<step>.<pid>``,
+  2. fsync + atomic ``os.replace`` onto ``step_XXXXXXXX``,
+  3. rewrite ``LATEST`` via the same tmp+replace dance,
+  4. prune to ``keep`` newest.
+A crash mid-write leaves only a ``.tmp.*`` orphan, never a torn
+checkpoint; restore reads LATEST, falling back to the newest complete
+``step_*`` dir if LATEST itself was lost.
+
+Resharding on restore: arrays land as host numpy and are ``device_put``
+against whatever shardings the *new* mesh prescribes, so a job restarted
+on a different device count re-lays-out automatically (elastic restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def _unflatten(tree_like: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, like in paths_leaves:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"expected {like.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def save(self, step: int, state: Any, meta: Optional[dict] = None) -> str:
+        flat = _flatten(state)
+        tmp = tempfile.mkdtemp(prefix=f".tmp.{step}.", dir=self.directory)
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "keys": sorted(flat),
+                **(meta or {}),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._write_latest(step)
+        self._prune()
+        return self._step_dir(step)
+
+    def _write_latest(self, step: int) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.directory)
+        with os.fdopen(fd, "w") as f:
+            f.write(f"step_{step:08d}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.directory, "LATEST"))
+
+    def _complete_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                p = os.path.join(self.directory, name)
+                if os.path.exists(os.path.join(p, "manifest.json")):
+                    steps.append(int(name[5:]))
+        return sorted(steps)
+
+    def _prune(self) -> None:
+        steps = self._complete_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.directory, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            p = os.path.join(self.directory, name)
+            if os.path.exists(os.path.join(p, "manifest.json")):
+                return int(name[5:])
+        steps = self._complete_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Returns (state, manifest). ``state_like`` provides structure
+        (arrays or ShapeDtypeStructs); ``shardings`` re-lays-out on load."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        state = _unflatten(state_like, arrays)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        else:
+            state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+        return state, manifest

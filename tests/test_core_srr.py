@@ -1,0 +1,217 @@
+"""The paper's contribution: SRR rank allocation, QER baselines, scalings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import planted_lowrank
+from repro.core import (
+    Decomposition,
+    make_scaling,
+    qer_decompose,
+    scaled_error,
+    select_rank,
+    srr_decompose,
+    w_only,
+    weight_error,
+)
+from repro.core.rank_alloc import rho_prefix, true_reconstruction_error
+from repro.core.scaling import qera_exact_scaling
+from repro.core.svd import exact_svd, randomized_svd
+from repro.quant import MXIntQuantizer
+
+QZ = MXIntQuantizer(bits=3, block_size=32)
+
+
+def _setup(m=256, n=192, seed=0):
+    w = planted_lowrank(jax.random.PRNGKey(seed), m, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100), (1024, m))
+    s = make_scaling("qera-exact", x)
+    return w, s
+
+
+# ---------------------------------------------------------------------------
+# SVD substrate
+# ---------------------------------------------------------------------------
+def test_randomized_svd_matches_exact_on_lowrank():
+    w, _ = _setup()
+    r = 16
+    ex = exact_svd(w, r)
+    rd = randomized_svd(w, r, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(rd.s[:8]), np.asarray(ex.s[:8]),
+                               rtol=1e-3)
+    # reconstructions agree (up to sign/rotation ⇒ compare products)
+    np.testing.assert_allclose(np.asarray(rd.lowrank()),
+                               np.asarray(ex.lowrank()), atol=1e-2)
+
+
+def test_svd_factors_orthonormal_left():
+    w, _ = _setup()
+    l, r = exact_svd(w, 12).factors()
+    np.testing.assert_allclose(np.asarray(l.T @ l), np.eye(12), atol=1e-4)
+
+
+def test_rho_prefix_monotone_decreasing():
+    w, _ = _setup()
+    sv = jnp.linalg.svd(w, compute_uv=False)
+    rho = rho_prefix(sv, jnp.sum(w ** 2), 32)
+    assert float(rho[0]) == 1.0
+    assert np.all(np.diff(np.asarray(rho)) <= 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# QER baseline (Eq. 1): Eckart–Young optimality
+# ---------------------------------------------------------------------------
+def test_qer_is_best_rank_r_correction():
+    w, s = _setup()
+    r = 16
+    dec = qer_decompose(w, s, QZ, r, exact=True)
+    base = scaled_error(w, dec, s)
+    # any perturbed rank-r correction is no better
+    key = jax.random.PRNGKey(3)
+    for i in range(3):
+        dl = dec.l + 0.01 * jax.random.normal(jax.random.fold_in(key, i),
+                                              dec.l.shape)
+        worse = scaled_error(w, Decomposition(dec.q, dl, dec.r, 0), s)
+        assert float(worse) >= float(base) - 1e-5
+
+
+def test_qer_identity_scaling_matches_weight_error():
+    w, _ = _setup()
+    s_id = make_scaling("identity")
+    dec = qer_decompose(w, s_id, QZ, 8, exact=True)
+    np.testing.assert_allclose(float(scaled_error(w, dec, s_id)),
+                               float(weight_error(w, dec)), rtol=1e-5)
+
+
+def test_w_only_has_zero_adapter():
+    w, _ = _setup()
+    dec = w_only(w, QZ, 8)
+    assert float(jnp.linalg.norm(dec.l)) == 0.0
+    assert dec.rank == 8
+
+
+# ---------------------------------------------------------------------------
+# SRR (Algorithm 1)
+# ---------------------------------------------------------------------------
+def test_srr_rank_budget_respected():
+    w, s = _setup()
+    for r in (8, 16, 32):
+        res = srr_decompose(w, s, QZ, r, jax.random.PRNGKey(0), exact=True)
+        dec = res.decomposition
+        assert dec.l.shape == (w.shape[0], r)
+        assert dec.r.shape == (r, w.shape[1])
+        assert 0 <= dec.k <= r
+        assert np.linalg.matrix_rank(np.asarray(dec.l @ dec.r)) <= r
+
+
+def test_srr_beats_qer_on_planted_lowrank():
+    """The paper's headline claim at its operating regime (Fig. 1/7)."""
+    w, s = _setup(512, 512, seed=2)
+    r = 64
+    e_qer = scaled_error(w, qer_decompose(w, s, QZ, r, exact=True), s)
+    res = srr_decompose(w, s, QZ, r, jax.random.PRNGKey(1), exact=True)
+    e_srr = scaled_error(w, res.decomposition, s)
+    assert float(e_srr) < float(e_qer)
+    assert res.decomposition.k > 0  # actually preserved something
+
+
+def test_srr_k0_equals_qer():
+    w, s = _setup()
+    r = 16
+    dq = qer_decompose(w, s, QZ, r, exact=True)
+    rs = srr_decompose(w, s, QZ, r, jax.random.PRNGKey(0), k=0, exact=True)
+    np.testing.assert_allclose(float(scaled_error(w, rs.decomposition, s)),
+                               float(scaled_error(w, dq, s)), rtol=1e-4)
+
+
+def test_srr_joint_variant_eq6():
+    """Eq. 6: single rank-r SVD of S(W−Q) is optimal for fixed Q ⇒ joint
+    error ≤ split error at the same k."""
+    w, s = _setup(seed=4)
+    r = 16
+    split = srr_decompose(w, s, QZ, r, jax.random.PRNGKey(0), k=6,
+                          exact=True, variant="split")
+    joint = srr_decompose(w, s, QZ, r, jax.random.PRNGKey(0), k=6,
+                          exact=True, variant="joint")
+    # identical quantized backbone by construction
+    np.testing.assert_allclose(np.asarray(split.decomposition.q),
+                               np.asarray(joint.decomposition.q), atol=1e-6)
+    assert float(scaled_error(w, joint.decomposition, s)) \
+        <= float(scaled_error(w, split.decomposition, s)) + 1e-5
+
+
+def test_surrogate_tracks_true_error():
+    """Fig. 2: argmin of the surrogate lands near the true-argmin (same
+    shape of the curve)."""
+    w, s = _setup(384, 256, seed=6)
+    r = 24
+    sel = select_rank(w, s, r, jax.random.PRNGKey(0), exact=True)
+    ks = list(range(0, r + 1, 4))
+    true = [float(true_reconstruction_error(w, s, QZ, r, k)) for k in ks]
+    k_true = ks[int(np.argmin(true))]
+    k_sur = int(sel.k_star)
+    # the surrogate's k should score close to the optimum on the true curve
+    t_at_sur = float(true_reconstruction_error(w, s, QZ, r, k_sur))
+    assert t_at_sur <= min(true) * 1.10
+
+
+def test_kstar_stable_across_probe_seeds():
+    """App B.1: probe randomness moves k* only slightly. The paper sees
+    ±1–3 at transformer dims (4096); at this test's 512×384 the probe
+    spectrum concentrates less, so the tolerance scales accordingly."""
+    w, s = _setup(512, 384, seed=8)
+    r = 32
+    ks = [int(select_rank(w, s, r, jax.random.PRNGKey(seed),
+                          exact=True).k_star)
+          for seed in range(4)]
+    assert max(ks) - min(ks) <= 6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_reconstruction_error_never_worse_than_wonly(seed):
+    """Property: any rank-r correction (QER or SRR) ≥-improves on w-only."""
+    key = jax.random.PRNGKey(seed)
+    w = planted_lowrank(key, 96, 64, rank_sig=4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (256, 96))
+    s = make_scaling("qera-approx", x)
+    r = 8
+    e_w = scaled_error(w, w_only(w, QZ, r), s)
+    e_q = scaled_error(w, qer_decompose(w, s, QZ, r, exact=True), s)
+    res = srr_decompose(w, s, QZ, r, jax.random.fold_in(key, 2), exact=True)
+    e_s = scaled_error(w, res.decomposition, s)
+    assert float(e_q) <= float(e_w) + 1e-5
+    assert float(e_s) <= float(e_w) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Scalings
+# ---------------------------------------------------------------------------
+def test_scaling_inverse_roundtrip(calib_x):
+    s = qera_exact_scaling(calib_x)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    np.testing.assert_allclose(np.asarray(s.apply_inv(s.apply(w))),
+                               np.asarray(w), atol=1e-3)
+
+
+def test_diag_scalings_positive(calib_x):
+    for kind in ("lqer", "qera-approx"):
+        s = make_scaling(kind, calib_x)
+        assert bool(jnp.all(s.diag > 0))
+
+
+def test_qera_exact_minimizes_output_error(calib_x):
+    """S = (E xxᵀ)^½ ⇒ ‖SΔ‖_F² = E‖xΔ‖² — scaled error equals true
+    expected output error, which diagonal scalings only approximate."""
+    x = calib_x
+    w = planted_lowrank(jax.random.PRNGKey(9), 256, 128)
+    r = 16
+    errs = {}
+    for kind in ("identity", "lqer", "qera-approx", "qera-exact"):
+        s = make_scaling(kind, x)
+        dec = qer_decompose(w, s, QZ, r, exact=True)
+        # true output-space error on the calibration sample
+        errs[kind] = float(jnp.linalg.norm(x @ (w - dec.reconstruct())))
+    assert errs["qera-exact"] <= min(errs.values()) * 1.02

@@ -1,0 +1,183 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, allclose."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import mxint_lowrank_matmul, mxint_quantize
+from repro.kernels.ref import (
+    mxint_dequant_ref,
+    mxint_lowrank_matmul_ref,
+    mxint_quantize_ref,
+)
+from repro.quant import MXIntQuantizer
+
+
+def _quant(w, bits=3):
+    packed = MXIntQuantizer(bits=bits, block_size=32).quantize(w)
+    return packed.codes, jnp.exp2(packed.exponents.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mxint_lowrank_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n,r", [
+    (8, 256, 128, 16),      # tall-skinny activations
+    (130, 512, 384, 64),    # ragged M (pads to block)
+    (1, 1024, 256, 0),      # decode row, rank-0 adapter
+    (64, 96, 64, 8),        # K smaller than default bk
+    (256, 128, 640, 32),    # wide N
+])
+def test_matmul_kernel_matches_ref(m, k, n, r):
+    key = jax.random.PRNGKey(m * 31 + k * 7 + n + r)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    codes, scale = _quant(w)
+    l = (jax.random.normal(jax.random.fold_in(key, 2), (k, r))
+         if r else jnp.zeros((k, 0)))
+    rr = (jax.random.normal(jax.random.fold_in(key, 3), (r, n))
+          if r else jnp.zeros((0, n)))
+    y = mxint_lowrank_matmul(x, codes, scale, l, rr)
+    yref = mxint_lowrank_matmul_ref(x, codes, scale, l, rr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 256)).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (256, 128))
+    codes, scale = _quant(w)
+    l = jax.random.normal(jax.random.fold_in(key, 2), (256, 8))
+    rr = jax.random.normal(jax.random.fold_in(key, 3), (8, 128))
+    y = mxint_lowrank_matmul(x, codes, scale, l, rr)
+    assert y.dtype == dtype
+    yref = mxint_lowrank_matmul_ref(x.astype(jnp.float32), codes, scale, l, rr)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yref),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_matmul_kernel_3d_input():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 5, 512))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 256))
+    codes, scale = _quant(w)
+    l = jax.random.normal(key, (512, 16))
+    rr = jax.random.normal(key, (16, 256))
+    y = mxint_lowrank_matmul(x, codes, scale, l, rr)
+    assert y.shape == (2, 5, 256)
+    yref = mxint_lowrank_matmul_ref(x, codes, scale, l, rr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_block_shape_sweep():
+    """Tiling must not change results."""
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (64, 512))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (512, 256))
+    codes, scale = _quant(w)
+    l = jnp.zeros((512, 0))
+    rr = jnp.zeros((0, 256))
+    ys = [mxint_lowrank_matmul(x, codes, scale, l, rr, bm=bm, bn=bn, bk=bk)
+          for bm, bn, bk in [(32, 64, 128), (64, 128, 256), (128, 256, 512)]]
+    for y in ys[1:]:
+        np.testing.assert_allclose(np.asarray(ys[0]), np.asarray(y),
+                                   rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mxint_quantize
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m,n", [(256, 256), (512, 384), (96, 130), (32, 8)])
+def test_quantize_kernel_matches_ref(bits, m, n):
+    w = jax.random.normal(jax.random.PRNGKey(m + n + bits), (m, n)) * 2.0
+    ck, ek = mxint_quantize(w, bits=bits)
+    cr, er = mxint_quantize_ref(w, bits=bits)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+
+
+def test_quantize_kernel_matches_quantizer_class():
+    w = jax.random.normal(jax.random.PRNGKey(9), (128, 96))
+    ck, ek = mxint_quantize(w, bits=3)
+    packed = MXIntQuantizer(bits=3, block_size=32).quantize(w)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(packed.codes))
+    np.testing.assert_array_equal(np.asarray(ek),
+                                  np.asarray(packed.exponents))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4]),
+       st.sampled_from([(32, 32), (64, 48), (96, 64)]))
+def test_quantize_roundtrip_property(seed, bits, shape):
+    """Property: kernel quantize → dequant error ≤ half step everywhere."""
+    m, n = shape
+    w = jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * 3.0
+    codes, exps = mxint_quantize(w, bits=bits)
+    deq = mxint_dequant_ref(codes, jnp.exp2(exps.astype(jnp.float32)))
+    step = jnp.repeat(jnp.exp2(exps.astype(jnp.float32)), 32, axis=0)
+    assert bool(jnp.all(jnp.abs(w - deq) <= step * 0.5 + 1e-7))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sq,sk,kv,g,hd,causal,window", [
+    (2, 128, 128, 2, 2, 64, True, 0),
+    (1, 300, 300, 4, 1, 128, True, 0),     # ragged S (pads)
+    (2, 64, 256, 2, 4, 64, False, 0),      # cross-attention shape
+    (1, 256, 256, 1, 8, 64, True, 64),     # sliding window
+])
+def test_flash_attention_matches_ref(b, sq, sk, kv, g, hd, causal, window):
+    from repro.kernels.ops import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    key = jax.random.PRNGKey(sq + sk + kv)
+    q = jax.random.normal(key, (b, sq, kv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kv, hd))
+    qp, kp = jnp.arange(sq), jnp.arange(sk)
+    out = flash_attention(q, k, v, qp, kp, causal=causal, window=window)
+    kb = jnp.broadcast_to(k[:, :, :, None, :], (b, sk, kv, g, hd))
+    vb = jnp.broadcast_to(v[:, :, :, None, :], (b, sk, kv, g, hd))
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, sq, hd),
+        kb.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, sk, hd),
+        vb.transpose(0, 2, 3, 1, 4).reshape(b * kv * g, sk, hd),
+        qp, kp, causal=causal, window=window)
+    ref = ref.reshape(b, kv, g, sq, hd).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_matches_blockwise():
+    """Kernel semantics == the model zoo's XLA attention."""
+    from repro.kernels.ops import flash_attention
+    from repro.models.attention import blockwise_attention
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 96, 2, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 96, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 96, 2, 32))
+    qp = jnp.arange(96)
+    bw = blockwise_attention(q, k, v, qp, qp, causal=True)
+    fl = flash_attention(q, k, v, qp, qp, causal=True)
+    np.testing.assert_allclose(np.asarray(bw), np.asarray(fl),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_serving_path():
+    """ctx.use_pallas routes prefill through the kernel; logits match."""
+    from repro.configs import get_config
+    from repro.models import Ctx, init_lm
+    from repro.models.transformer import init_cache, prefill
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.arange(32).reshape(2, 16) % cfg.vocab}
+    l_x, _ = prefill(Ctx(), params, batch, cfg, init_cache(cfg, 2, 32))
+    l_p, _ = prefill(Ctx(use_pallas=True), params, batch, cfg,
+                     init_cache(cfg, 2, 32))
+    np.testing.assert_allclose(np.asarray(l_x), np.asarray(l_p),
+                               rtol=1e-3, atol=1e-4)

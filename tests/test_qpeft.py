@@ -1,0 +1,165 @@
+"""QPEFT: adapter init, gradient scaling (Eq. 7–9), split/merge, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import planted_lowrank
+from repro.core import (
+    AdapterParams,
+    adapter_matmul,
+    fixed_gamma_scale,
+    init_adapter,
+    make_scaling,
+    scale_adapter_grads,
+    sgp_scale,
+    srr_decompose,
+)
+from repro.optim import scale_lr_grads_by_key
+from repro.quant import MXIntQuantizer
+
+QZ = MXIntQuantizer(bits=3, block_size=32)
+
+
+def _dec(seed=0, m=128, n=96, r=16):
+    w = planted_lowrank(jax.random.PRNGKey(seed), m, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (512, m))
+    s = make_scaling("qera-exact", x)
+    return w, srr_decompose(w, s, QZ, r, jax.random.PRNGKey(2),
+                            exact=True).decomposition
+
+
+def test_adapter_init_reconstructs_weight():
+    w, dec = _dec()
+    params, static = init_adapter(dec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, w.shape[0]))
+    y = adapter_matmul(x, params, static)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ dec.reconstruct()), atol=1e-3)
+
+
+def test_fixed_gamma_scale_vector():
+    g = fixed_gamma_scale(8, 3, 0.1)
+    np.testing.assert_allclose(np.asarray(g[:3]), 0.1)
+    np.testing.assert_allclose(np.asarray(g[3:]), 1.0)
+
+
+def test_gamma_grad_scaling_attenuates_preserved_only():
+    w, dec = _dec()
+    params, static = init_adapter(dec, mode="gamma", gamma=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, w.shape[0]))
+
+    def loss(p):
+        return jnp.sum(adapter_matmul(x, p, static) ** 2)
+
+    grads = jax.grad(loss)(params)
+    scaled = scale_adapter_grads(grads, static)
+    k = dec.k
+    np.testing.assert_allclose(np.asarray(scaled.l[:, :k]),
+                               np.asarray(grads.l[:, :k]) * 0.1, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(scaled.l[:, k:]),
+                               np.asarray(grads.l[:, k:]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(scaled.r[:k]),
+                               np.asarray(grads.r[:k]) * 0.1, rtol=1e-6)
+
+
+def test_sgp_scale_rankwise():
+    """Eq. 9: λ_i = (α+1)σ_i/(ασ_i+σ_1); top singular direction gets the
+    strongest attenuation (λ_1 = 1 ⇒ scale 0)."""
+    _, dec = _dec()
+    g = sgp_scale(dec, alpha=5.0)
+    k = dec.k
+    assert float(g[0]) == pytest.approx(0.0, abs=1e-5)
+    assert np.all(np.diff(np.asarray(g[:k])) >= -1e-6)  # monotone up
+    np.testing.assert_allclose(np.asarray(g[k:]), 1.0)
+
+
+def test_gamma_extremes_match_paper_semantics():
+    """γ=1 ⇒ no attenuation; γ=0 ⇒ preserved block frozen."""
+    _, dec = _dec()
+    p1, s1 = init_adapter(dec, mode="gamma", gamma=1.0)
+    np.testing.assert_allclose(np.asarray(s1.grad_scale), 1.0)
+    p0, s0 = init_adapter(dec, mode="gamma", gamma=0.0)
+    g = AdapterParams(l=jnp.ones_like(p0.l), r=jnp.ones_like(p0.r))
+    sg = scale_adapter_grads(g, s0)
+    assert float(jnp.sum(jnp.abs(sg.l[:, :dec.k]))) == 0.0
+
+
+def test_dict_schema_grad_scaling_stacked():
+    """Model-tree variant handles stacked (scan) adapters per matrix."""
+    G, m, r, n = 3, 8, 4, 6
+    grads = {"l": jnp.ones((G, m, r)), "r": jnp.ones((G, r, n))}
+    gscale = jnp.stack([jnp.array([0.1, 0.1, 1.0, 1.0]),
+                        jnp.array([0.1, 1.0, 1.0, 1.0]),
+                        jnp.ones(4)])
+    scales = {"gscale": gscale}
+    out = scale_lr_grads_by_key(grads, scales)
+    np.testing.assert_allclose(np.asarray(out["l"][0, :, 0]), 0.1)
+    np.testing.assert_allclose(np.asarray(out["l"][2]), 1.0)
+    np.testing.assert_allclose(np.asarray(out["r"][1, 0]), 0.1)
+    np.testing.assert_allclose(np.asarray(out["r"][1, 1]), 1.0)
+
+
+def test_model_qpeft_split_merge_roundtrip():
+    from repro.configs import get_config
+    from repro.core.api import PTQConfig
+    from repro.models import init_lm, lm_loss, Ctx
+    from repro.models.quantize import (merge_qpeft, quantize_model_params,
+                                       split_qpeft)
+    from repro.quant.base import QuantizerConfig
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ptq = PTQConfig(method="srr", scaling="identity", rank=8,
+                    quantizer=QuantizerConfig("mxint", 3, 32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+    trainable, frozen = split_qpeft(qparams)
+    merged = merge_qpeft(trainable, frozen)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    l0 = float(lm_loss(Ctx(), qparams, batch, cfg))
+    l1 = float(lm_loss(Ctx(), merged, batch, cfg))
+    assert l0 == pytest.approx(l1, rel=1e-6)
+    # backbone must not appear in the trainable tree
+    for path, leaf in jax.tree_util.tree_flatten_with_path(trainable)[0]:
+        key = jax.tree_util.keystr(path)
+        assert "codes" not in key and "scale" not in key
+
+
+def test_qpeft_training_descends():
+    from repro.configs import get_config
+    from repro.core.api import PTQConfig
+    from repro.data import data_config_for, host_batch
+    from repro.models import init_lm, lm_loss, Ctx
+    from repro.models.quantize import merge_qpeft, quantize_model_params, split_qpeft
+    from repro.optim import AdamW, cosine_schedule
+    from repro.quant.base import QuantizerConfig
+    from repro.train import StepConfig, init_qpeft_state, make_qpeft_step
+
+    cfg = get_config("minitron-4b").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ptq = PTQConfig(method="srr", scaling="identity", rank=8,
+                    quantizer=QuantizerConfig("mxint", 3, 32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+    trainable, frozen = split_qpeft(qparams)
+    opt = AdamW(learning_rate=cosine_schedule(3e-3, 5, 40))
+    state = init_qpeft_state(trainable, frozen, opt)
+    step = jax.jit(make_qpeft_step(
+        cfg, opt, StepConfig(compute_dtype=jnp.float32)))
+    dcfg = data_config_for(cfg, seq_len=32, global_batch=8)
+    eval_batch = host_batch(dcfg, 999)
+
+    def eval_loss(st):
+        return float(lm_loss(Ctx(), merge_qpeft(st.trainable, st.frozen),
+                             eval_batch, cfg))
+
+    before = eval_loss(state)
+    frozen_before = jax.tree_util.tree_leaves(state.frozen)[0].copy()
+    for s in range(40):
+        state, _ = step(state, host_batch(dcfg, s))
+    after = eval_loss(state)
+    assert after < before - 0.01
+    # frozen backbone untouched
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(state.frozen)[0]),
+        np.asarray(frozen_before))

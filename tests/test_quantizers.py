@@ -1,0 +1,119 @@
+"""Quantizer substrate: MXINT / uniform / GPTQ invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    MXIntQuantizer,
+    UniformQuantizer,
+    QuantizerConfig,
+    effective_bits,
+    make_quantizer,
+    pack_codes_4bit,
+    unpack_codes_4bit,
+)
+from repro.quant.gptq import GPTQQuantizer, hessian_from_activations
+
+
+def _w(seed, m=96, n=64, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * scale
+
+
+# ---------------------------------------------------------------------------
+# MXINT
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("block", [16, 32])
+def test_mxint_roundtrip_bound(bits, block):
+    """|w − Q(w)| ≤ scale/2 per element, scale = 2^exp of the block."""
+    q = MXIntQuantizer(bits=bits, block_size=block)
+    w = _w(bits * 7 + block, 128, 48, scale=3.0)
+    packed = q.quantize(w)
+    deq = q.dequantize(packed)
+    scales = jnp.exp2(packed.exponents.astype(jnp.float32))
+    per_elem_scale = jnp.repeat(scales, block, axis=0)[: w.shape[0]]
+    assert jnp.all(jnp.abs(w - deq) <= per_elem_scale * 0.5 + 1e-7)
+
+
+def test_mxint_idempotent():
+    q = MXIntQuantizer(bits=3, block_size=32)
+    w = _w(1)
+    w1 = q.fake_quant(w)
+    w2 = q.fake_quant(w1)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+
+
+def test_mxint_zero_block():
+    q = MXIntQuantizer(bits=3, block_size=32)
+    w = jnp.zeros((64, 8))
+    assert float(jnp.max(jnp.abs(q.fake_quant(w)))) == 0.0
+
+
+def test_mxint_code_range():
+    q = MXIntQuantizer(bits=3, block_size=32)
+    packed = q.quantize(_w(2, 64, 32, scale=10.0))
+    assert int(packed.codes.max()) <= 3 and int(packed.codes.min()) >= -4
+
+
+def test_mxint_pads_ragged_rows():
+    q = MXIntQuantizer(bits=3, block_size=32)
+    w = _w(3, 40, 16)  # 40 % 32 != 0
+    assert q.fake_quant(w).shape == w.shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pack4_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-8, 8, size=(16, 6)).astype(np.int8)
+    packed = pack_codes_4bit(jnp.asarray(codes))
+    out = unpack_codes_4bit(packed)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_effective_bits_accounting():
+    assert effective_bits(QuantizerConfig("mxint", 3, 32)) == 3.25
+    assert effective_bits(QuantizerConfig("mxint", 4, 32)) == 4.25
+    assert effective_bits(QuantizerConfig("mxint", 2, 32)) == 2.25
+
+
+# ---------------------------------------------------------------------------
+# Uniform
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("symmetric", [True, False])
+def test_uniform_roundtrip(symmetric):
+    q = UniformQuantizer(bits=4, group_size=32, symmetric=symmetric)
+    w = _w(4, 96, 32)
+    deq = q.fake_quant(w)
+    # error bounded by half step of each group
+    err = float(jnp.max(jnp.abs(w - deq)))
+    amax = float(jnp.max(jnp.abs(w)))
+    assert err <= amax / (2 ** 3) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# GPTQ
+# ---------------------------------------------------------------------------
+def test_gptq_beats_rtn_on_correlated_inputs():
+    """Hessian-aware rounding should reduce output-space error vs plain
+    rounding when inputs are correlated."""
+    key = jax.random.PRNGKey(5)
+    m, n = 64, 48
+    w = jax.random.normal(key, (m, n))
+    mix = jax.random.normal(jax.random.fold_in(key, 1), (m, m)) * 0.3 \
+        + jnp.eye(m)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (512, m)) @ mix
+    h = hessian_from_activations(x)
+    gptq = GPTQQuantizer(bits=3, group_size=32).make_bound(h)
+    rtn = UniformQuantizer(bits=3, group_size=32)
+    err_gptq = float(jnp.linalg.norm(x @ (w - gptq.fake_quant(w))))
+    err_rtn = float(jnp.linalg.norm(x @ (w - rtn.fake_quant(w))))
+    assert err_gptq < err_rtn
+
+
+def test_make_quantizer_factory():
+    assert make_quantizer(QuantizerConfig("mxint", 3, 32)).effective_bits == 3.25
+    with pytest.raises(ValueError):
+        make_quantizer(QuantizerConfig("gptq", 3, 32))  # needs hessian
