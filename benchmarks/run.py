@@ -16,6 +16,7 @@ from benchmarks import (
     fig2_alignment,
     fig5_rank_dist,
     fig7_layerwise,
+    serve_throughput,
     table1_ptq,
     table2_downstream,
     table34_qpeft,
@@ -36,6 +37,7 @@ BENCHES = [
     ("Fig 2 (surrogate alignment)", fig2_alignment),
     ("Fig 5 (k* distribution)", fig5_rank_dist),
     ("Fig 7 (layer-wise error)", fig7_layerwise),
+    ("Serving (continuous vs bucketed tok/s)", serve_throughput),
 ]
 
 

@@ -1,11 +1,12 @@
-"""PTQ → serve: quantize a whole model with SRR and serve it batched.
+"""PTQ → serve: quantize a whole model with SRR and serve it continuously.
 
     PYTHONPATH=src python examples/ptq_serve.py [--arch minitron-4b]
 
 The paper's deployment scenario: calibrate on a handful of batches,
 decompose every projection into Q + LR (per-matrix k*), then serve
-requests through the prefill/decode engine — optionally with the int8 KV
-cache and comparing against the w-only and QER baselines.
+requests through the continuous-batching engine — int8 KV cache on,
+requests streamed in via ``submit()``/``step()`` so late arrivals join
+mid-flight — and compare against the w-only and QER baselines.
 """
 import argparse
 import time
@@ -55,19 +56,31 @@ def main():
         print(f"   {method:7s}: eval loss {loss:.4f}  mean k*={kbar:4.1f}  "
               f"({dt:.1f}s)")
 
-    print("[3/3] serving the SRR model (int8 KV cache) …")
+    print("[3/3] serving the SRR model (continuous batching, int8 KV) …")
     eng = Engine(results["srr"], cfg,
                  ServeConfig(max_len=96, decode_batch=4, max_new_tokens=12,
-                             kv_dtype="int8"))
+                             kv_dtype="int8", scheduler="continuous",
+                             prefill_len=16 + (cfg.n_vision_tokens or 0)))
     rng = np.random.default_rng(0)
+    # stream requests in: 4 up front, 4 more arriving mid-decode
     reqs = [Request(uid=i, prompt=rng.integers(
-        0, cfg.vocab, size=8).astype(np.int32)) for i in range(8)]
-    out = eng.generate(reqs)
+        0, cfg.vocab, size=int(rng.integers(6, 14))).astype(np.int32),
+        max_new_tokens=int(rng.integers(6, 13))) for i in range(8)]
+    out = []
+    for r in reqs[:4]:
+        eng.submit(r)
+    for _ in range(4):                       # a few steps before the rest
+        out.extend(eng.step())
+    for r in reqs[4:]:                       # late arrivals join mid-flight
+        eng.submit(r)
+    out.extend(eng.drain())
+    out.sort(key=lambda r: r.uid)
     for r in out[:3]:
         print(f"   req {r.uid}: {r.tokens.tolist()}")
     toks = sum(len(r.tokens) for r in out)
-    dt = sum(r.decode_s for r in out[:1]) or 1.0
-    print(f"   {len(out)} requests, {toks} new tokens")
+    st = eng.stats()
+    print(f"   {len(out)} requests, {toks} new tokens, "
+          f"lane occupancy {st['occupancy']:.2f}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,19 @@ touches jax device state (device count locks on first jax init)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax ≥ 0.5 distinguishes Auto/Explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: Auto is the only behaviour
+    AxisType = None
+
+
+def _mk(shape, axes) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -17,13 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes) -> Mesh:
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> Mesh:

@@ -1,9 +1,10 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Full paper pipeline on a reduced model: init → calibrate → SRR-quantize
-(W ≈ Q + LR) → serve batched requests through the prefill/decode engine.
+(W ≈ Q + LR) → serve requests through the continuous-batching engine.
 ``--method qer`` / ``--method w-only`` serve the baselines instead;
-``--kv int8`` exercises the quantized KV cache.
+``--kv int8`` exercises the quantized KV cache; ``--scheduler bucketed``
+falls back to the prompt-length-bucketed baseline scheduler.
 """
 from __future__ import annotations
 
@@ -33,6 +34,10 @@ def main(argv=None):
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--new-tokens", type=int, default=16)
     p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--scheduler", default="continuous",
+                   choices=["continuous", "bucketed"])
+    p.add_argument("--prefill-len", type=int, default=32,
+                   help="compiled prompt pad length (continuous)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -58,7 +63,8 @@ def main(argv=None):
 
     eng = Engine(params, cfg, ServeConfig(
         max_len=128, decode_batch=args.batch,
-        max_new_tokens=args.new_tokens, kv_dtype=args.kv))
+        max_new_tokens=args.new_tokens, kv_dtype=args.kv,
+        scheduler=args.scheduler, prefill_len=args.prefill_len))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, size=8 + 4 * (i % 3))
@@ -69,7 +75,16 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
     print(f"[serve] {len(results)} requests, {toks} tokens "
-          f"in {dt:.1f}s ({toks / dt:.1f} tok/s incl. compile)")
+          f"in {dt:.1f}s ({toks / dt:.1f} tok/s incl. compile, "
+          f"scheduler={args.scheduler})")
+    lats = sorted(r.latency_s for r in results)
+    if args.scheduler == "continuous" and lats:
+        p50 = lats[len(lats) // 2]
+        p95 = lats[min(len(lats) - 1, int(0.95 * len(lats)))]
+        st = eng.stats()
+        print(f"[serve] latency p50 {p50 * 1e3:.0f}ms p95 {p95 * 1e3:.0f}ms "
+              f"occupancy {st['occupancy']:.2f} "
+              f"eos_retired {st['eos_retired']}")
     for r in results[:3]:
         print(f"  req {r.uid}: {r.tokens[:10].tolist()}")
     return 0

@@ -5,13 +5,22 @@ Sequence-parallel memory safety: training/prefill attention is *blockwise*
 score matrix never materializes — mandatory for the 32k prefill shapes.
 Decode (Sq = 1) uses direct attention over the cache.
 
-Caches:
-  full attn : {"k": (B, S_max, KV, hd), "v": …, "pos": ()} append-at-pos
-  local attn: ring buffer of ``window`` slots + per-slot absolute positions
+Caches (slot-based, continuous-batching ready):
+  full attn : {"k": (B, S_max, KV, hd), "v": …, "pos": (B,)} append-at-pos
+  local attn: ring buffer of ``window`` slots + per-(row, slot) absolute
+              positions
   MLA       : compressed {"ckv": (B, S_max, r_kv), "kpe": (B, S_max, pe)}
               with the *absorbed* decode formulation (q folded through the
               up-projections, so the per-step cost scales with r_kv, not
               H·hd·S).
+
+Every batch row carries its *own* write position (``pos``: (B,)) and its
+own per-slot validity/position map (``slot_pos``: (B, slots), -1 ⇒ empty
+slot). Rows therefore decode independently: one row can be at position 7
+of a fresh prompt while its neighbour is 300 tokens into generation —
+the substrate the serving engine's continuous batching builds on. Seq
+(prefill) entry points take an optional ``lengths`` (B,) so right-padded
+prompts populate exactly their valid prefix.
 """
 from __future__ import annotations
 
@@ -125,18 +134,21 @@ def decode_attention(
     q: jax.Array,              # (B, 1, KV, G, hd)
     k: jax.Array,              # (B, S, KV, hd)
     v: jax.Array,
-    q_pos: jax.Array,          # () scalar absolute position
-    k_pos: jax.Array,          # (S,) absolute positions; -1 invalid
+    q_pos: jax.Array,          # (B,) per-row absolute positions
+    k_pos: jax.Array,          # (B, S) per-(row, slot) positions; -1 invalid
     window: Optional[int] = None,
 ) -> jax.Array:
-    """Single-token attention over a cache (no chunking needed)."""
+    """Single-token attention over a cache (no chunking needed).
+
+    Each batch row masks against its own slot map, so co-batched rows may
+    sit at arbitrary, unrelated positions (continuous batching)."""
     hd = q.shape[-1]
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                    preferred_element_type=jnp.float32) / (hd ** 0.5)
-    mask = (k_pos >= 0) & (k_pos <= q_pos)
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])      # (B, S)
     if window is not None:
-        mask = mask & (q_pos - k_pos < window)
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask = mask & (q_pos[:, None] - k_pos < window)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -171,8 +183,8 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
     cache = {
         "k": jnp.zeros((batch, slots, kv, hd), dtype),
         "v": jnp.zeros((batch, slots, kv, hd), dtype),
-        "slot_pos": jnp.full((slots,), -1, jnp.int32),
-        "pos": jnp.zeros((), jnp.int32),
+        "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
     if dtype == jnp.int8:
         cache["k_scale"] = jnp.zeros((batch, slots, kv), jnp.float32)
@@ -240,12 +252,58 @@ def _qkv(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     return q, k, v
 
 
+def _populate_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                       lengths: jax.Array) -> Dict:
+    """Scatter freshly-prefilled K/V prefixes into a slot cache, per row.
+
+    For every row r (valid prefix length L_r) and cache slot j, the slot
+    holds the *latest* position p ≡ j (mod slots) with p < L_r — the
+    ring-buffer invariant (for full attention slots ≥ S, so p = j) — or
+    is empty (slot_pos = -1). Rows may have different lengths, which is
+    what lets the serving engine right-pad prompts to one compiled
+    prefill shape.
+    """
+    b, s = k.shape[:2]
+    slots = cache["k"].shape[1]
+    j = jnp.arange(slots)[None, :]                      # (1, slots)
+    last = lengths[:, None] - 1                         # (B, 1)
+    p = j + slots * jnp.floor_divide(last - j, slots)   # (B, slots)
+    valid = p >= 0
+    idx = jnp.clip(p, 0, s - 1)
+
+    def gather(src):  # (B, S, ...) → (B, slots, ...)
+        ix = idx.reshape(idx.shape + (1,) * (src.ndim - 2))
+        return jnp.take_along_axis(src, ix, axis=1)
+
+    cache = dict(cache)
+    if "k_scale" in cache:  # int8 KV
+        kc, ksc = kv_quantize(k)
+        vc, vsc = kv_quantize(v)
+        m3 = valid[..., None]
+        cache["k_scale"] = jnp.where(m3, gather(ksc), 0.0)
+        cache["v_scale"] = jnp.where(m3, gather(vsc), 0.0)
+        k, v = kc, vc
+    m4 = valid[..., None, None]
+    cache["k"] = jnp.where(m4, gather(k).astype(cache["k"].dtype),
+                           jnp.zeros((), cache["k"].dtype))
+    cache["v"] = jnp.where(m4, gather(v).astype(cache["v"].dtype),
+                           jnp.zeros((), cache["v"].dtype))
+    cache["slot_pos"] = jnp.where(valid, p, -1).astype(jnp.int32)
+    cache["pos"] = lengths.astype(jnp.int32)
+    return cache
+
+
 def attention_seq(
     ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     local: bool = False, causal: bool = True,
     cache: Optional[Dict] = None, prefix: str = "attn",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Training / prefill attention over a full sequence."""
+    """Training / prefill attention over a full sequence.
+
+    ``lengths`` (B,): per-row valid prefix (right-padded prompts). Only
+    cache population depends on it — causality already keeps positions
+    < L from attending to pad keys at positions ≥ L."""
     b, s, _ = x.shape
     positions = jnp.arange(s)
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
@@ -268,32 +326,10 @@ def attention_seq(
     y = linear(ctx, params["wo"], out, f"{prefix}.wo")
     y = hint(ctx, y, dp_axes_of(ctx), None, None)
 
-    if cache is not None:  # prefill: populate
-        slots = cache["k"].shape[1]
-        if local and s > slots:
-            # ring-buffer invariant: position p lives at slot p % slots
-            shift = s % slots
-            ks_ = jnp.roll(k[:, -slots:], shift, axis=1)
-            vs_ = jnp.roll(v[:, -slots:], shift, axis=1)
-            ps_ = jnp.roll(positions[-slots:], shift, axis=0)
-        else:
-            ks_, vs_, ps_ = k, v, positions
-        cache = dict(cache)
-        if "k_scale" in cache:  # int8 KV
-            kc, ksc = kv_quantize(ks_)
-            vc, vsc = kv_quantize(vs_)
-            cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], ksc, 0, axis=1)
-            cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], vsc, 0, axis=1)
-            ks_, vs_ = kc, vc
-        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], ks_.astype(cache["k"].dtype), 0, axis=1)
-        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], vs_.astype(cache["v"].dtype), 0, axis=1)
-        cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["slot_pos"], ps_.astype(jnp.int32), 0, axis=0)
-        cache["pos"] = jnp.asarray(s, jnp.int32)
+    if cache is not None:  # prefill: populate per-row valid prefixes
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        cache = _populate_kv_cache(cache, k, v, lengths)
     return y, cache
 
 
@@ -301,30 +337,27 @@ def attention_step(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     local: bool = False, prefix: str = "attn",
 ) -> Tuple[jax.Array, Dict]:
-    """One decode step; x: (B, 1, D)."""
+    """One decode step; x: (B, 1, D). Rows advance independently: each
+    writes at its own slot and masks against its own slot map."""
     b = x.shape[0]
     hd = cfg.head_dim_
-    pos = cache["pos"]
-    positions = pos[None].astype(jnp.int32)  # (1,)
+    pos = cache["pos"]                        # (B,)
+    positions = pos[:, None].astype(jnp.int32)  # (B, 1) per-row RoPE phase
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
 
     slots = cache["k"].shape[1]
     slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
+    rows = jnp.arange(b)
     new_cache = dict(cache)
     if "k_scale" in cache:  # int8 KV: quantize the appended token
         kc, ksc = kv_quantize(k)
         vc, vsc = kv_quantize(v)
-        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_scale"], ksc, slot, axis=1)
-        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v_scale"], vsc, slot, axis=1)
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ksc[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vsc[:, 0])
         k, v = kc, vc
-    knew = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    vnew = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    spos = jax.lax.dynamic_update_slice_in_dim(
-        cache["slot_pos"], positions, slot, axis=0)
+    knew = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vnew = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    spos = cache["slot_pos"].at[rows, slot].set(pos)
     new_cache.update(k=knew, v=vnew, slot_pos=spos, pos=pos + 1)
 
     window = cfg.window if local else None
@@ -402,7 +435,7 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {
         "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
         "kpe": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -436,6 +469,7 @@ def _mla_compress(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
 def mla_seq(
     ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     cache: Optional[Dict] = None, prefix: str = "attn",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Prefill/train MLA: expand K/V per head, blockwise attention."""
     b, s, _ = x.shape
@@ -463,12 +497,15 @@ def mla_seq(
     y = linear(ctx, params["wo"], out, f"{prefix}.wo")
 
     if cache is not None:
+        # latent rows beyond a row's length hold pad garbage; the decode
+        # mask (k_pos ≤ pos) keeps them invisible until overwritten
         cache = dict(cache)
         cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
             cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
         cache["kpe"] = jax.lax.dynamic_update_slice_in_dim(
             cache["kpe"], kpe.astype(cache["kpe"].dtype), 0, axis=1)
-        cache["pos"] = jnp.asarray(s, jnp.int32)
+        cache["pos"] = (jnp.full((b,), s, jnp.int32) if lengths is None
+                        else lengths.astype(jnp.int32))
     return y, cache
 
 
@@ -476,18 +513,18 @@ def mla_step(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     prefix: str = "attn",
 ) -> Tuple[jax.Array, Dict]:
-    """Absorbed-formulation decode: score/value in the r_kv latent space."""
+    """Absorbed-formulation decode: score/value in the r_kv latent space.
+    Per-row positions: each row appends at its own ``pos``."""
     b = x.shape[0]
     hd, pe, h, r = cfg.head_dim_, cfg.rope_head_dim, cfg.n_heads, cfg.kv_lora_rank
-    pos = cache["pos"]
-    positions = pos[None]
+    pos = cache["pos"]                        # (B,)
+    positions = pos[:, None]
     q_nope, q_pe = _mla_q(ctx, params, x, cfg, positions, prefix)  # (B,1,H,hd/pe)
     ckv_t, kpe_t = _mla_compress(ctx, params, x, cfg, positions, prefix)
 
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, axis=1)
-    kpe = jax.lax.dynamic_update_slice_in_dim(
-        cache["kpe"], kpe_t.astype(cache["kpe"].dtype), pos, axis=1)
+    rows = jnp.arange(b)
+    ckv = cache["ckv"].at[rows, pos].set(ckv_t[:, 0].astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[rows, pos].set(kpe_t[:, 0].astype(cache["kpe"].dtype))
     smax = ckv.shape[1]
 
     # absorb: q' = q_nope @ W_uk per head → latent space
@@ -500,8 +537,8 @@ def mla_step(
                            kpe.astype(jnp.float32)))
     scores = scores / ((hd + pe) ** 0.5)
     k_pos = jnp.arange(smax)
-    mask = k_pos <= pos
-    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    mask = k_pos[None, :] <= pos[:, None]     # (B, smax) per-row causality
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv.astype(jnp.float32))
     w_uv = weight_of(params["w_uv"], jnp.float32).reshape(r, h, hd)

@@ -50,7 +50,7 @@ def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
     return {
         "h": jnp.zeros((batch, dr), jnp.float32),
         "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -82,8 +82,15 @@ def _gates(ctx: Ctx, params: Dict, h: jax.Array, prefix: str):
 def rglru_seq(
     ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     cache: Optional[Dict] = None, prefix: str = "rglru",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Full-sequence block apply (training / prefill)."""
+    """Full-sequence block apply (training / prefill).
+
+    ``lengths`` (B,): per-row valid prefix for right-padded prompts. Pad
+    steps are forced to the identity transition (a=1, b=0), so the scan
+    carries each row's state at its last valid position to the end —
+    exactly the state decode must resume from."""
+    bsz, s, _ = x.shape
     dp = dp_axes_of(ctx)
     gate = jax.nn.gelu(linear(ctx, params["w_gate"], x, f"{prefix}.w_gate"))
     gate = hint(ctx, gate, dp, None, "model")
@@ -92,6 +99,11 @@ def rglru_seq(
     conv_in_state = cache["conv"] if cache is not None else None
     h, conv_state = _causal_conv_seq(params, branch, conv_in_state)
     a, b = _gates(ctx, params, h, prefix)  # (B, S, dr) each, f32
+
+    if lengths is not None:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])[..., None]
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -106,8 +118,20 @@ def rglru_seq(
     if cache is not None:
         cache = dict(cache)
         cache["h"] = y_scan[:, -1]  # pre-gate recurrent state, f32
-        cache["conv"] = conv_state.astype(cache["conv"].dtype)
-        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        if lengths is None:
+            cache["conv"] = conv_state.astype(cache["conv"].dtype)
+            cache["pos"] = jnp.full((bsz,), s, jnp.int32)
+        else:
+            # per-row conv history: the cw-1 branch inputs right before
+            # each row's length L (xp index L maps to branch position
+            # L - (cw - 1), i.e. the window feeding decode step L)
+            cw = params["conv_w"].shape[0]
+            xp = jnp.concatenate(
+                [cache["conv"].astype(branch.dtype), branch], axis=1)
+            ix = (lengths[:, None] + jnp.arange(cw - 1)[None, :])[..., None]
+            cache["conv"] = jnp.take_along_axis(
+                xp, ix, axis=1).astype(cache["conv"].dtype)
+            cache["pos"] = lengths.astype(jnp.int32)
     return out, cache
 
 

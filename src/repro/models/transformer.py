@@ -132,6 +132,7 @@ def apply_block(
     cache: Optional[Dict] = None,
     memory: Optional[jax.Array] = None,  # encoder output (whisper prefill)
     causal: bool = True,
+    lengths: Optional[jax.Array] = None,  # (B,) per-row valid prefix (seq)
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (x_out, aux_loss, cache_out)."""
     aux = jnp.zeros((), jnp.float32)
@@ -146,11 +147,12 @@ def apply_block(
         if mode == "seq":
             if is_mla:
                 y, inner_cache = attn.mla_seq(ctx, p["mixer"], h, cfg,
-                                              cache=inner_cache)
+                                              cache=inner_cache,
+                                              lengths=lengths)
             else:
                 y, inner_cache = attn.attention_seq(
                     ctx, p["mixer"], h, cfg, local=(kind == "local"),
-                    causal=causal, cache=inner_cache)
+                    causal=causal, cache=inner_cache, lengths=lengths)
         else:
             if is_mla:
                 y, inner_cache = attn.mla_step(ctx, p["mixer"], h,
@@ -160,22 +162,26 @@ def apply_block(
                     ctx, p["mixer"], h, inner_cache, cfg,
                     local=(kind == "local"))
     elif kind == "rglru":
-        fn = rglru_mod.rglru_seq if mode == "seq" else rglru_mod.rglru_step
         if mode == "seq":
-            y, inner_cache = fn(ctx, p["mixer"], h, cfg, cache=inner_cache)
+            y, inner_cache = rglru_mod.rglru_seq(ctx, p["mixer"], h, cfg,
+                                                 cache=inner_cache,
+                                                 lengths=lengths)
         else:
-            y, inner_cache = fn(ctx, p["mixer"], h, inner_cache, cfg)
+            y, inner_cache = rglru_mod.rglru_step(ctx, p["mixer"], h,
+                                                  inner_cache, cfg)
     elif kind == "mlstm":
         if mode == "seq":
             y, inner_cache = xlstm_mod.mlstm_seq(ctx, p["mixer"], h, cfg,
-                                                 cache=inner_cache)
+                                                 cache=inner_cache,
+                                                 lengths=lengths)
         else:
             y, inner_cache = xlstm_mod.mlstm_step(ctx, p["mixer"], h,
                                                   inner_cache, cfg)
     elif kind == "slstm":
         if mode == "seq":
             y, inner_cache = xlstm_mod.slstm_seq(ctx, p["mixer"], h, cfg,
-                                                 cache=inner_cache)
+                                                 cache=inner_cache,
+                                                 lengths=lengths)
         else:
             y, inner_cache = xlstm_mod.slstm_step(ctx, p["mixer"], h,
                                                   inner_cache, cfg)
@@ -318,6 +324,7 @@ def forward(
     cfg: ModelConfig,
     cache: Optional[Dict] = None,
     remat: str = "none",
+    lengths: Optional[jax.Array] = None,  # (B,) valid prefix per row
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (hidden (B,S,D), aux_loss, cache)."""
     tokens = batch["tokens"]
@@ -339,7 +346,7 @@ def forward(
 
     def run_block(xc, blk, kind, blk_cache):
         return apply_block(ctx, blk, xc, cfg, kind, "seq", cache=blk_cache,
-                           memory=memory)
+                           memory=memory, lengths=lengths)
 
     # prefix
     new_prefix_caches = []
@@ -466,11 +473,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
-            cfg: ModelConfig, cache: Dict) -> Tuple[jax.Array, Dict]:
-    """Process the prompt; returns (last-token logits, populated cache)."""
-    hidden, _, cache = forward(ctx, params, batch, cfg, cache=cache)
+            cfg: ModelConfig, cache: Dict,
+            lengths: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Process the prompt; returns (last-token logits, populated cache).
+
+    ``lengths`` (B,): valid prefix per row *including* any prepended
+    vision tokens. Prompts right-padded to a fixed compiled shape then
+    read their logits at position lengths-1 (the serving engine's
+    one-prefill-compile contract); caches populate only the valid prefix.
+    """
+    hidden, _, cache = forward(ctx, params, batch, cfg, cache=cache,
+                               lengths=lengths)
     head = params.get("lm_head") or {"w": params["embed"]["w"].T}
-    logits = linear(ctx, head, hidden[:, -1:, :])
+    if lengths is None:
+        last = hidden[:, -1:, :]
+    else:
+        ix = (lengths - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(hidden, ix, axis=1)
+    logits = linear(ctx, head, last)
     return logits, cache
 
 

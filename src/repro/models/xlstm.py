@@ -54,7 +54,7 @@ def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
         "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
         "n": jnp.zeros((batch, h, hd), jnp.float32),
         "m": jnp.zeros((batch, h), jnp.float32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -132,6 +132,7 @@ def _mlstm_parallel(q, k, v, i_pre, f_pre, chunk: int = 256) -> jax.Array:
 def mlstm_seq(
     ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     cache: Optional[Dict] = None, prefix: str = "mlstm",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -145,12 +146,15 @@ def mlstm_seq(
     if cache is not None:
         # rebuild the recurrent state by scanning the last chunk is O(S);
         # instead fold the full sequence once (prefill cost O(S·d²/h)).
-        cache = _mlstm_fold(q, k, v, i_pre, f_pre, cache)
+        cache = _mlstm_fold(q, k, v, i_pre, f_pre, cache, lengths)
     return out, cache
 
 
-def _mlstm_fold(q, k, v, i_pre, f_pre, cache: Dict) -> Dict:
-    """Sequentially fold a whole sequence into the (C, n, m) state."""
+def _mlstm_fold(q, k, v, i_pre, f_pre, cache: Dict,
+                lengths=None) -> Dict:
+    """Sequentially fold a whole sequence into the (C, n, m) state.
+    ``lengths`` (B,): rows freeze their state at their own valid length
+    (pad steps of a right-padded prompt are skipped per row)."""
     del q
     b, s, h, hd = k.shape
 
@@ -163,14 +167,21 @@ def _mlstm_fold(q, k, v, i_pre, f_pre, cache: Dict) -> Dict:
         m_new = jnp.maximum(logf + m, it)
         i_s = jnp.exp(it - m_new)
         f_s = jnp.exp(logf + m - m_new)
-        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+        C_new = f_s[..., None, None] * C + i_s[..., None, None] * (
             kt[..., :, None] * vt[..., None, :]) / (hd ** 0.5)
-        n = f_s[..., None] * n + i_s[..., None] * kt / (hd ** 0.5)
-        return (C, n, m_new), None
+        n_new = f_s[..., None] * n + i_s[..., None] * kt / (hd ** 0.5)
+        if lengths is not None:
+            live = (t < lengths)[:, None]                       # (B, 1)
+            C_new = jnp.where(live[..., None, None], C_new, C)
+            n_new = jnp.where(live[..., None], n_new, n)
+            m_new = jnp.where(live, m_new, m)
+        return (C_new, n_new, m_new), None
 
     (C, n, m), _ = jax.lax.scan(
         step, (cache["C"], cache["n"], cache["m"]), jnp.arange(s))
-    return {"C": C, "n": n, "m": m, "pos": cache["pos"] + s}
+    add = (jnp.full((b,), s, jnp.int32) if lengths is None
+           else lengths.astype(jnp.int32))
+    return {"C": C, "n": n, "m": m, "pos": cache["pos"] + add}
 
 
 def mlstm_step(
@@ -228,11 +239,14 @@ def init_slstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
 def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
     d = cfg.d_model
     z = jnp.zeros((batch, d), jnp.float32)
-    return {"c": z, "n": z, "h": z, "m": z, "pos": jnp.zeros((), jnp.int32)}
+    return {"c": z, "n": z, "h": z, "m": z,
+            "pos": jnp.zeros((batch,), jnp.int32)}
 
 
-def _slstm_scan(params: Dict, gates_x: jax.Array, state: Dict, h_heads: int):
-    """Run the sequential sLSTM over (B, S, 4d) precomputed input gates."""
+def _slstm_scan(params: Dict, gates_x: jax.Array, state: Dict, h_heads: int,
+                lengths=None):
+    """Run the sequential sLSTM over (B, S, 4d) precomputed input gates.
+    ``lengths`` (B,): rows stop updating state past their valid length."""
     b, s, d4 = gates_x.shape
     d = d4 // 4
     hd = d // h_heads
@@ -254,6 +268,12 @@ def _slstm_scan(params: Dict, gates_x: jax.Array, state: Dict, h_heads: int):
         c_new = f_s * c + i_s * z
         n_new = f_s * n + i_s
         h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        if lengths is not None:
+            live = (t < lengths)[:, None]                       # (B, 1)
+            c_new = jnp.where(live, c_new, c)
+            n_new = jnp.where(live, n_new, n)
+            h_new = jnp.where(live, h_new, hh)
+            m_new = jnp.where(live, m_new, m)
         return (c_new, n_new, h_new, m_new), h_new
 
     init = (state["c"], state["n"], state["h"], state["m"])
@@ -264,17 +284,19 @@ def _slstm_scan(params: Dict, gates_x: jax.Array, state: Dict, h_heads: int):
 def slstm_seq(
     ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     cache: Optional[Dict] = None, prefix: str = "slstm",
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     state = cache if cache is not None else init_slstm_cache(cfg, x.shape[0])
     gates_x = linear(ctx, params["w_gates"], x, f"{prefix}.w_gates")
-    hs, new_state = _slstm_scan(params, gates_x, state, cfg.n_heads)
+    hs, new_state = _slstm_scan(params, gates_x, state, cfg.n_heads, lengths)
     y = linear(ctx, params["w_out"], hs.astype(x.dtype), f"{prefix}.w_out")
     y = y + linear(ctx, params["ffn_down"],
                    jax.nn.gelu(linear(ctx, params["ffn_up"], y,
                                       f"{prefix}.ffn_up")),
                    f"{prefix}.ffn_down")
     if cache is not None:
-        new_state["pos"] = cache["pos"] + x.shape[1]
+        new_state["pos"] = cache["pos"] + (
+            x.shape[1] if lengths is None else lengths.astype(jnp.int32))
         return y, new_state
     return y, None
 

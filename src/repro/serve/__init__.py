@@ -1,4 +1,9 @@
-"""Serving: batched prefill/decode engine over quantized (Q + LR) models."""
+"""Serving: continuous-batching prefill/decode engine over Q + LR models."""
 from repro.serve.engine import Engine, Request, Result, ServeConfig
+from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
+from repro.serve.slots import SlotKVCache, SlotState, SlotTable, write_slot
 
-__all__ = ["Engine", "Request", "Result", "ServeConfig"]
+__all__ = [
+    "ContinuousScheduler", "Engine", "Request", "Result", "SchedulerStats",
+    "ServeConfig", "SlotKVCache", "SlotState", "SlotTable", "write_slot",
+]

@@ -1,22 +1,31 @@
-"""Serving engine: batched prefill + decode over a (quantized) model.
+"""Serving engine: continuous batching over a (quantized) Q + LR model.
 
-The engine serves the paper's deployment artifact — a ``Q + LR`` model —
-through the same forward code paths the dry-run lowers at pod scale:
+The engine serves the paper's deployment artifact — a ``W ≈ Q + LR``
+model — through the same forward code paths the dry-run lowers at pod
+scale, under two schedulers:
 
-  * **prefill** processes the whole prompt through ``models.prefill``
-    (blockwise attention, no S×S materialization) and populates the
-    contiguous KV cache;
-  * **decode** batches one ``decode_step`` per new token across requests;
-  * **int8 KV** (``kv_dtype="int8"``) halves cache HBM — the
-    quantization-native option that makes 32k-context MHA models fit.
+  * ``continuous`` (default, production): a **slot-based KV cache**
+    (``serve.slots``) gives every batch row its own write position and
+    valid-length mask, so requests are admitted into free slots
+    *mid-flight*: prefill-on-admit scatters a freshly prefilled row into
+    the live cache while the other slots keep decoding. Per-request
+    ``max_new_tokens`` / EOS retire a slot the moment its request
+    finishes, and the next queued request takes the lane on the same
+    step. Exactly **two compiled shapes** total — one (1, prefill_len)
+    prefill, one (slots, 1) decode — regardless of the prompt-length mix
+    (prompts are right-padded and masked, never re-bucketed).
+  * ``bucketed`` (baseline): the old dry-run-grade scheduler — requests
+    grouped by identical prompt length, each bucket padded to
+    ``decode_batch`` and decoded to its slowest member. Kept for A/B
+    benchmarking (``benchmarks/serve_throughput.py``).
 
-Scheduling: requests queue up and are grouped into fixed-size decode
-batches *bucketed by prompt length* (the KV cache tracks one scalar
-write position per batch, so co-batched prompts must align; production
-slot-level continuous batching with per-slot positions is a documented
-extension, not needed for dry-run-grade serving). Short buckets are
-padded up to ``decode_batch`` with dummy rows so every compiled shape is
-stable (two compilations total: one prefill, one decode).
+Also here: **int8 KV** (``kv_dtype="int8"``) halves cache HBM — the
+quantization-native option that makes 32k-context MHA models fit — and
+per-request latency metrics (TTFT, end-to-end latency) plus scheduler
+occupancy counters.
+
+API: ``submit()`` / ``step()`` / ``drain()`` for streaming use;
+``generate()`` runs a whole batch of requests through either scheduler.
 """
 from __future__ import annotations
 
@@ -30,20 +39,22 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Ctx, decode_step, init_cache, prefill
+from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.slots import KV_DTYPES, SlotKVCache
 
 
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 512               # cache slots (prompt + generation)
-    decode_batch: int = 8
+    decode_batch: int = 8            # decode lanes (= slots, continuous)
     max_new_tokens: int = 64
     eos_id: int = -1                 # -1: never stop early
     kv_dtype: str = "bf16"           # bf16 | f32 | int8
     temperature: float = 0.0         # 0 = greedy
     compute_dtype: str = "f32"
-
-
-_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "int8": jnp.int8}
+    scheduler: str = "continuous"    # continuous | bucketed
+    prefill_len: Optional[int] = None  # compiled prompt pad length
+    seed: int = 0                    # sampling stream for submit()/step()
 
 
 @dataclasses.dataclass
@@ -51,47 +62,101 @@ class Request:
     uid: int
     prompt: np.ndarray               # (L,) int32
     max_new_tokens: Optional[int] = None
+    t_submit: float = 0.0
 
 
 @dataclasses.dataclass
 class Result:
     uid: int
     tokens: np.ndarray               # generated tokens (without prompt)
-    prefill_s: float
-    decode_s: float
+    prefill_s: float                 # prefill wall time for this request
+    decode_s: float                  # first token → last token
+    ttft_s: float = 0.0              # submit → first token
+    latency_s: float = 0.0           # submit → done
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, sc: ServeConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None):
+        if sc.scheduler not in ("continuous", "bucketed"):
+            raise ValueError(f"unknown scheduler {sc.scheduler!r}")
         self.params = params
         self.cfg = cfg
         self.sc = sc
         self.extra = extra_inputs or {}
-        self.ctx = Ctx(compute_dtype=_DTYPES[sc.compute_dtype])
+        self.ctx = Ctx(compute_dtype=KV_DTYPES[sc.compute_dtype])
+        self.prefill_len = sc.prefill_len or sc.max_len
+        if self.prefill_len > sc.max_len:
+            raise ValueError(
+                f"prefill_len={self.prefill_len} exceeds max_len="
+                f"{sc.max_len}: the prefill shape must fit the cache")
+        self._n_vis = cfg.n_vision_tokens or 0
 
-        cdt = _DTYPES[sc.kv_dtype]
+        cdt = KV_DTYPES[sc.kv_dtype]
         self._init_cache = lambda: init_cache(
             cfg, sc.decode_batch, sc.max_len, dtype=cdt)
 
         ctx = self.ctx
 
-        def _prefill(params, batch, cache):
-            return prefill(ctx, params, batch, cfg, cache)
-
-        def _decode(params, token, cache, key):
-            logits, cache = decode_step(ctx, params, token, cache, cfg)
+        def _sample(logits, key):
             logits = logits[:, -1].astype(jnp.float32)
             if sc.temperature > 0:
                 tok = jax.random.categorical(key, logits / sc.temperature)
             else:
                 tok = jnp.argmax(logits, axis=-1)
-            return tok.astype(jnp.int32)[:, None], cache
+            return tok.astype(jnp.int32)[:, None]
+
+        def _prefill(params, batch, cache, lengths, key):
+            logits, cache = prefill(ctx, params, batch, cfg, cache,
+                                    lengths=lengths)
+            return _sample(logits, key), cache
+
+        def _decode(params, token, cache, key):
+            logits, cache = decode_step(ctx, params, token, cache, cfg)
+            return _sample(logits, key), cache
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
 
+        # --- continuous-scheduler state ---------------------------------
+        self.slots: Optional[SlotKVCache] = None
+        self.sched: Optional[ContinuousScheduler] = None
+        self._tok = None
+        self._key = jax.random.PRNGKey(sc.seed)
+        self._bucket_steps = 0           # bucketed-path occupancy counters
+        self._bucket_slot_steps = 0
+        if sc.scheduler == "continuous":
+            self._reset_continuous()
+
     # ------------------------------------------------------------------
+    def _reset_continuous(self) -> None:
+        sc = self.sc
+        self.slots = SlotKVCache(self.cfg, sc.decode_batch, sc.max_len,
+                                 sc.kv_dtype)
+        self.sched = ContinuousScheduler(sc.decode_batch, sc.eos_id,
+                                         sc.max_new_tokens)
+        self._tok = jnp.zeros((sc.decode_batch, 1), jnp.int32)
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _validate(self, req: Request) -> None:
+        plen = len(req.prompt)
+        eff = plen + self._n_vis
+        if plen < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if eff >= self.sc.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen}"
+                + (f" (+{self._n_vis} vision tokens)" if self._n_vis else "")
+                + f" leaves no decode budget within max_len={self.sc.max_len}"
+                f" — raise ServeConfig.max_len or shorten the prompt")
+        if self.sc.scheduler == "continuous" and eff > self.prefill_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen} exceeds the "
+                f"compiled prefill shape prefill_len={self.prefill_len}")
+
     def _batch_for(self, prompts: np.ndarray) -> Dict[str, jax.Array]:
         b, s = prompts.shape
         batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(prompts)}
@@ -110,6 +175,130 @@ class Engine:
             batch["vision"] = jnp.asarray(vis[:b])
         return batch
 
+    # ==================================================================
+    # Streaming API (continuous scheduler)
+    # ==================================================================
+    def submit(self, req: Request) -> int:
+        """Queue a request; it is admitted on the next step() with a free
+        slot. Returns the request uid."""
+        if self.sc.scheduler != "continuous":
+            raise RuntimeError("submit()/step()/drain() need "
+                               "ServeConfig(scheduler='continuous')")
+        self._validate(req)
+        req.t_submit = req.t_submit or time.perf_counter()
+        self.sched.submit(req)
+        return req.uid
+
+    def _admit_one(self) -> Optional[List[Result]]:
+        """Prefill the next queued request into a free slot (if any)."""
+        nxt = self.sched.next_admission()
+        if nxt is None:
+            return None
+        req, state = nxt
+        eff = state.prompt_len + self._n_vis
+        state.budget = min(state.budget, self.sc.max_len - eff)
+
+        prompts = np.zeros((1, self.prefill_len), np.int32)
+        prompts[0, :state.prompt_len] = req.prompt
+        t0 = time.perf_counter()
+        # the pristine zero template goes in; a fresh populated copy comes
+        # out (never fed back — that would leak recurrent state between
+        # consecutive admissions through this buffer)
+        first, pf_cache = self._prefill(
+            self.params, self._batch_for(prompts), self.slots.prefill_cache,
+            jnp.asarray([eff], jnp.int32), self._next_key())
+        first = int(jax.device_get(first)[0, 0])
+        t1 = time.perf_counter()
+
+        slot = self.sched.admit(state)
+        state.t_prefill = t1 - t0
+        self.slots.admit(pf_cache, slot)
+        self._tok = self._tok.at[slot, 0].set(first)
+        if self.sched.record_token(slot, first):
+            return [self._finish(slot)]
+        return []
+
+    def _finish(self, slot: int) -> Result:
+        state = self.sched.retire(slot)
+        now = time.perf_counter()
+        toks = np.asarray(state.tokens, np.int32)
+        return Result(
+            uid=state.uid, tokens=toks,
+            prefill_s=getattr(state, "t_prefill", 0.0),
+            decode_s=now - state.t_first_token,
+            ttft_s=(state.t_first_token - state.t_submit
+                    if state.t_submit else 0.0),
+            latency_s=now - state.t_submit if state.t_submit else 0.0)
+
+    def step(self) -> List[Result]:
+        """Admit as many queued requests as there are free slots, then run
+        one decode step over all slots. Returns requests finished now."""
+        if self.sc.scheduler != "continuous":
+            raise RuntimeError("step() needs scheduler='continuous'")
+        finished: List[Result] = []
+        while True:
+            done = self._admit_one()
+            if done is None:
+                break
+            finished.extend(done)
+
+        if self.sched.table.n_active == 0:
+            return finished
+
+        self._tok, self.slots.cache = self._decode(
+            self.params, self._tok, self.slots.cache, self._next_key())
+        self.sched.note_decode_step()
+        toks = np.asarray(jax.device_get(self._tok))[:, 0]
+        for slot in self.sched.table.active_slots():
+            if self.sched.record_token(slot, toks[slot]):
+                finished.append(self._finish(slot))
+        return finished
+
+    def drain(self) -> List[Result]:
+        """Run step() until queue and slots are empty; results by uid."""
+        if self.sc.scheduler != "continuous":
+            raise RuntimeError("drain() needs scheduler='continuous'")
+        results: List[Result] = []
+        while self.sched.has_work:
+            results.extend(self.step())
+        results.sort(key=lambda r: r.uid)
+        return results
+
+    def stats(self) -> Dict[str, float]:
+        """Scheduler-level counters: decode lane utilization etc."""
+        if self.sc.scheduler == "bucketed":
+            n = self._bucket_steps
+            occ = (self._bucket_slot_steps
+                   / (n * self.sc.decode_batch)) if n else 0.0
+            return {"decode_steps": n, "occupancy": round(occ, 4)}
+        s = self.sched.stats
+        return {"admitted": s.admitted, "retired": s.retired,
+                "eos_retired": s.eos_retired, "decode_steps": s.decode_steps,
+                "occupancy": round(s.occupancy, 4)}
+
+    def _reset_stats(self) -> None:
+        if self.sched is not None:
+            self.sched.stats = type(self.sched.stats)(
+                n_slots=self.sc.decode_batch)
+        self._bucket_steps = 0
+        self._bucket_slot_steps = 0
+
+    def warmup(self) -> None:
+        """Trigger the two compiles (prefill + decode) with a dummy
+        request so steady-state timing excludes compilation. Counters
+        are reset afterwards — the dummy never shows in stats()."""
+        if self.sc.scheduler != "continuous":
+            return
+        dummy = Request(uid=-1, prompt=np.zeros((1,), np.int32),
+                        max_new_tokens=2)
+        self.submit(dummy)
+        while self.sched.has_work:
+            self.step()
+        self._reset_stats()
+
+    # ==================================================================
+    # Bucketed baseline (dry-run-grade scheduler)
+    # ==================================================================
     def _run_bucket(self, reqs: List[Request], key: jax.Array) -> List[Result]:
         sc = self.sc
         b = sc.decode_batch
@@ -121,15 +310,15 @@ class Engine:
 
         t0 = time.perf_counter()
         cache = self._init_cache()
-        logits, cache = self._prefill(self.params, self._batch_for(prompts),
-                                      cache)
-        first = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-        tok = first.astype(jnp.int32)[:, None]
+        key, sub = jax.random.split(key)
+        # first token goes through the same temperature path as decode
+        tok, cache = self._prefill(self.params, self._batch_for(prompts),
+                                   cache, None, sub)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
 
         budget = max((r.max_new_tokens or sc.max_new_tokens) for r in reqs)
-        budget = min(budget, sc.max_len - plen)
+        budget = min(budget, sc.max_len - plen - self._n_vis)
         out = np.zeros((b, budget), np.int32)
         done = np.zeros((b,), bool)
         n = 0
@@ -139,6 +328,13 @@ class Engine:
             n = step + 1
             if done[:len(reqs)].all():
                 break
+            # a lane is useful only while its (real) request still needs
+            # tokens — padding rows and early-EOS rows ride along wasted
+            self._bucket_steps += 1
+            self._bucket_slot_steps += sum(
+                1 for i, r in enumerate(reqs)
+                if not done[i]
+                and step < (r.max_new_tokens or sc.max_new_tokens))
             key, sub = jax.random.split(key)
             tok, cache = self._decode(self.params, tok, cache, sub)
         jax.block_until_ready(tok)
@@ -150,14 +346,15 @@ class Engine:
             if sc.eos_id >= 0 and (toks == sc.eos_id).any():
                 toks = toks[: int(np.argmax(toks == sc.eos_id)) + 1]
             lim = r.max_new_tokens or sc.max_new_tokens
+            since = r.t_submit or t0     # queue wait counts toward latency
             results.append(Result(uid=r.uid, tokens=toks[:lim],
-                                  prefill_s=t1 - t0, decode_s=t2 - t1))
+                                  prefill_s=t1 - t0, decode_s=t2 - t1,
+                                  ttft_s=t1 - since,
+                                  latency_s=t2 - since))
         return results
 
-    # ------------------------------------------------------------------
-    def generate(self, requests: Sequence[Request],
-                 seed: int = 0) -> List[Result]:
-        """Run all requests: bucket by prompt length, batch, decode."""
+    def _generate_bucketed(self, requests: Sequence[Request],
+                           seed: int) -> List[Result]:
         buckets: Dict[int, List[Request]] = {}
         for r in requests:
             buckets.setdefault(len(r.prompt), []).append(r)
@@ -171,3 +368,22 @@ class Engine:
                     self._run_bucket(queue[i: i + self.sc.decode_batch], sub))
         results.sort(key=lambda r: r.uid)
         return results
+
+    # ==================================================================
+    def generate(self, requests: Sequence[Request],
+                 seed: int = 0) -> List[Result]:
+        """Run all requests through the configured scheduler. Each call
+        is a fresh run: sampling stream re-seeded, stats() reset, and
+        submission timestamps re-stamped (so reusing Request objects
+        across runs cannot inflate latency metrics)."""
+        now = time.perf_counter()
+        for r in requests:
+            self._validate(r)
+            r.t_submit = now
+        self._reset_stats()
+        if self.sc.scheduler == "bucketed":
+            return self._generate_bucketed(requests, seed)
+        self._key = jax.random.PRNGKey(seed)
+        for r in requests:
+            self.submit(r)
+        return self.drain()

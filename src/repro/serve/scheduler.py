@@ -1,0 +1,100 @@
+"""Request scheduler for continuous batching.
+
+Policy (vLLM-style, minus preemption — slots are sized so an admitted
+request always fits ``max_len``):
+
+  * FIFO admission: whenever a slot is free and the queue is non-empty,
+    the next request is prefilled *immediately* (prefill-on-admit) and
+    its slot joins the decode batch on the very next step.
+  * Decode runs every step over all slots in lockstep (one compiled
+    shape); retired/empty slots ride along masked — their lanes compute
+    garbage that nothing reads.
+  * Retirement: a request leaves its slot as soon as it hits its own
+    ``max_new_tokens`` or emits ``eos_id``; the slot is handed to the
+    next queued request on the same engine step.
+
+The scheduler is pure host-side bookkeeping: the engine owns the device
+arrays and calls in here to decide *which* request occupies *which*
+slot, and *when* one is finished.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Optional, Tuple
+
+from repro.serve.slots import SlotState, SlotTable
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    n_slots: int = 1
+    admitted: int = 0
+    retired: int = 0
+    eos_retired: int = 0            # retired early by EOS (freed budget)
+    decode_steps: int = 0
+    decode_slot_steps: int = 0      # steps × active slots (useful work)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode lanes doing useful work."""
+        if self.decode_steps == 0:
+            return 0.0
+        return self.decode_slot_steps / (self.decode_steps * self.n_slots)
+
+
+class ContinuousScheduler:
+    """FIFO queue + slot table + retirement policy."""
+
+    def __init__(self, n_slots: int, eos_id: int, default_budget: int):
+        self.table = SlotTable(n_slots)
+        self.eos_id = eos_id
+        self.default_budget = default_budget
+        self.queue: Deque = collections.deque()
+        self.stats = SchedulerStats(n_slots=n_slots)
+
+    # ------------------------------------------------------------------
+    def submit(self, request) -> None:
+        self.queue.append(request)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.table.n_active > 0
+
+    def next_admission(self) -> Optional[Tuple[object, SlotState]]:
+        """Pop the next request if a slot is free; returns (request,
+        fresh SlotState) — the engine prefills, then calls admit()."""
+        if not self.queue or self.table.n_free == 0:
+            return None
+        req = self.queue.popleft()
+        budget = req.max_new_tokens or self.default_budget
+        state = SlotState(uid=req.uid, prompt_len=len(req.prompt),
+                          budget=budget, t_submit=getattr(req, "t_submit", 0.0))
+        return req, state
+
+    def admit(self, state: SlotState) -> int:
+        slot = self.table.alloc(state)
+        self.stats.admitted += 1
+        return slot
+
+    # ------------------------------------------------------------------
+    def record_token(self, slot: int, token: int) -> bool:
+        """Append a generated token; True iff the request just finished."""
+        state = self.table.active[slot]
+        if not state.tokens:
+            state.t_first_token = time.perf_counter()
+        state.tokens.append(int(token))
+        hit_eos = self.eos_id >= 0 and int(token) == self.eos_id
+        done = hit_eos or len(state.tokens) >= state.budget
+        if done and hit_eos:
+            self.stats.eos_retired += 1
+        return done
+
+    def retire(self, slot: int) -> SlotState:
+        self.stats.retired += 1
+        return self.table.free(slot)
+
+    def note_decode_step(self) -> None:
+        self.stats.decode_steps += 1
+        self.stats.decode_slot_steps += self.table.n_active

@@ -1,0 +1,141 @@
+"""Slot-based KV cache: the device-side substrate for continuous batching.
+
+The model's decode cache (``models.init_cache``) is a pytree whose every
+leaf carries the batch dimension — attention K/V pages, per-(row, slot)
+position maps, recurrent states, MLA latents, cross-attention memories.
+Under continuous batching each batch row is a *slot*: an independent
+request lane with its own write position and valid-length mask (the
+per-row ``pos`` / ``slot_pos`` arrays the model layer maintains).
+
+This module adds the two operations the scheduler needs on top of that
+pytree, both compiled once:
+
+  * ``write_slot``   — scatter a freshly prefilled single-request cache
+    (batch=1, same ``max_len``) into slot *i* of the live cache. Admission
+    happens mid-flight: the other slots keep decoding untouched.
+  * ``SlotTable``    — host-side alloc/free bookkeeping mapping slots to
+    request state (uid, budget, output tokens, timing).
+
+Supports ``bf16 | f32 | int8`` KV: the copy is dtype-agnostic (it walks
+whatever leaves the cache has, including int8 codes + f32 scales).
+
+Cache pytree layout (see ``transformer.init_cache``): ``prefix`` /
+``suffix`` hold per-layer dicts whose leaves have batch at axis 0;
+``groups`` holds scan-stacked trees whose leaves carry (n_groups, B, ...)
+— batch at axis 1. The scatter respects both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache
+
+KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "int8": jnp.int8}
+
+
+def _copy_row(batch_axis: int):
+    def copy(dst: jax.Array, src: jax.Array, slot) -> jax.Array:
+        row = jax.lax.index_in_dim(src, 0, batch_axis, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(dst, row, slot, batch_axis)
+    return copy
+
+
+def write_slot(dst_cache: Dict, src_cache: Dict, slot: jax.Array) -> Dict:
+    """Copy row 0 of ``src_cache`` (batch=1, same max_len) into ``slot``
+    of ``dst_cache``. Pure function of pytrees — jit it once; ``slot`` is
+    a traced scalar, so one compile covers every slot."""
+    c0 = _copy_row(0)
+    c1 = _copy_row(1)
+    out = dict(dst_cache)
+    out["prefix"] = jax.tree_util.tree_map(
+        lambda d, s: c0(d, s, slot), dst_cache["prefix"], src_cache["prefix"])
+    out["suffix"] = jax.tree_util.tree_map(
+        lambda d, s: c0(d, s, slot), dst_cache["suffix"], src_cache["suffix"])
+    out["groups"] = jax.tree_util.tree_map(
+        lambda d, s: c1(d, s, slot), dst_cache["groups"], src_cache["groups"])
+    return out
+
+
+class SlotKVCache:
+    """Device caches for a fixed number of slots + a *pristine* zeroed
+    single-row prefill template (same ``max_len``, so admission is a
+    plain row copy).
+
+    ``prefill_cache`` is the immutable input to every admission prefill:
+    jax prefill is functional, so each admit produces a fresh populated
+    copy and the template stays all-zeros. Feeding the *previous* admit's
+    output back in instead would leak recurrent state (RG-LRU conv
+    history, xLSTM C/n/m, accumulated pos) across requests."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 kv_dtype: str = "bf16"):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.kv_dtype = kv_dtype
+        dt = KV_DTYPES[kv_dtype]
+        self.cache = init_cache(cfg, n_slots, max_len, dtype=dt)
+        self.prefill_cache = init_cache(cfg, 1, max_len, dtype=dt)
+        self._write = jax.jit(write_slot)
+
+    def admit(self, prefilled: Dict, slot: int) -> None:
+        """Scatter a populated single-row cache into ``slot`` (device op;
+        other slots' lanes are untouched)."""
+        self.cache = self._write(self.cache, prefilled, jnp.int32(slot))
+
+    def hbm_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.cache))
+
+
+# ==========================================================================
+# Host-side slot bookkeeping
+# ==========================================================================
+@dataclasses.dataclass
+class SlotState:
+    """One active request occupying one slot."""
+    uid: int
+    prompt_len: int
+    budget: int                       # max_new_tokens for this request
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_prefill: float = 0.0            # prefill wall time at admission
+
+
+class SlotTable:
+    """Alloc/free of slot ids + per-slot request state."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() → slot 0 first
+        self.active: Dict[int, SlotState] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def alloc(self, state: SlotState) -> int:
+        slot = self._free.pop()
+        state.t_admit = time.perf_counter()
+        self.active[slot] = state
+        return slot
+
+    def free(self, slot: int) -> SlotState:
+        state = self.active.pop(slot)
+        self._free.append(slot)
+        return state
+
+    def active_slots(self) -> List[int]:
+        return sorted(self.active)

@@ -9,6 +9,7 @@ def _run(code):
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=560,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     return r.stdout
@@ -37,9 +38,10 @@ def test_sharded_matmul_collectives_counted():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_cost import analyze_text
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("model",))
 M = 512
 with mesh:
     jj = jax.jit(lambda a, b: a @ b,

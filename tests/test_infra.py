@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+try:  # jax ≥ 0.5
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x
+    AxisType = None
 
 from repro.configs import get_config
 from repro.data import DataConfig, data_config_for, host_batch
@@ -41,6 +46,8 @@ def mesh():
     # an abstract 16×16 mesh built from repeated CPU devices is invalid;
     # use AbstractMesh for pure spec logic
     from jax.sharding import AbstractMesh
+    if AxisType is None:  # jax 0.4.x signature: tuple of (name, size)
+        return AbstractMesh((("data", 16), ("model", 16)))
     return AbstractMesh((16, 16), ("data", "model"),
                         axis_types=(AxisType.Auto,) * 2)
 

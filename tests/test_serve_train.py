@@ -99,6 +99,7 @@ def test_train_cli_full_and_qpeft():
              "--seq", "32", "--rank", "8"],
             capture_output=True, text=True, timeout=560,
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu",
                  "HOME": "/root"}, cwd="/root/repo")
         assert r.returncode == 0, r.stderr[-2000:]
         assert "final loss" in r.stdout
@@ -110,7 +111,8 @@ def test_serve_cli_srr():
          "minitron-4b", "--method", "srr", "--rank", "8",
          "--requests", "4", "--new-tokens", "4", "--kv", "int8"],
         capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu", "HOME": "/root"},
         cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "quantized" in r.stdout and "requests" in r.stdout
@@ -123,10 +125,11 @@ def test_compressed_psum_subprocess():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.optim import ef_compressed_psum, init_error_feedback
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("pod",))
 g = jnp.stack([jnp.full((8,), float(i + 1)) for i in range(4)])  # per-pod
 ef = jnp.zeros((4, 8))
 def inner(gi, ei):
@@ -145,6 +148,7 @@ print("EF-PSUM-OK")
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "EF-PSUM-OK" in r.stdout
@@ -157,7 +161,8 @@ def test_dryrun_cli_smallest_cell():
          "--shape", "decode_32k", "--mesh", "single", "--out",
          tempfile.mkdtemp()],
         capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu", "HOME": "/root"},
         cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "1 ok, 0 skip, 0 FAIL" in r.stdout
