@@ -1,0 +1,169 @@
+"""Fused Q+LR decode matmul vs its unfused lowerings.
+
+    PYTHONPATH=src python benchmarks/fused_linear.py [--quick] [--min-speedup X]
+
+The serving hot spot is ``y = x · dequant(Q) + (x · L) · R`` at decode
+shapes (a handful of activation rows against a large quantized weight).
+Three lowerings are timed per (m, k, n, r) shape:
+
+  * ``fp_dense``       — full-precision ``x @ W`` (the no-quantization
+    roofline reference);
+  * ``dequant_matmul`` — materialize ``W' = dequant(Q) + L·R`` densely,
+    then ``x @ W'``: the naive QER serving lowering (what the repo's MLA
+    absorbed decode still does via ``weight_of``, and what LQER/QERA call
+    the unfused baseline);
+  * ``fused``          — ``repro.kernels.ops.qlr_matmul``, exactly what
+    ``linear()`` executes under ``ctx.fused`` — the Pallas kernel on TPU
+    (weight never materializes in HBM), the fused-XLA form elsewhere
+    (blockwise dequant feeding the GEMM + activation-sliver correction,
+    no dense ``L·R``).
+
+Every path runs jitted and warmed; medians over repeated sweeps. CSV to
+``benchmarks/out/fused_linear.csv`` with per-shape speedups. CI's
+bench-gate job runs ``--quick`` and uploads the CSV; ``--min-speedup``
+(default 1.5 under the gate) fails the run if the fused path does not
+beat ``dequant_matmul`` by that factor at the batch-8 decode shape.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import write_csv
+except ImportError:  # run as a loose script with benchmarks/ on sys.path
+    from common import write_csv
+
+from repro.kernels.ops import qlr_matmul
+from repro.quant import MXIntQuantizer
+
+GATE_M = 8  # the decode batch the speedup floor is enforced at
+
+
+def _timeit(fn, args, iters: int) -> float:
+    """Median wall time (ms) of a jitted call, warmed."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+@jax.jit
+def _fp_dense(x, w):
+    return x @ w
+
+
+@jax.jit
+def _dequant_matmul(x, codes, scale, l, r):
+    """The unfused baseline: W' = dequant(Q) + L·R materialized densely,
+    then one GEMM — two full (K, N) HBM round trips per call."""
+    k, n = codes.shape
+    nb = scale.shape[0]
+    w = (codes.astype(jnp.float32).reshape(nb, k // nb, n)
+         * scale[:, None, :]).reshape(k, n)
+    w = w + l @ r
+    return x @ w
+
+
+def _fused(x, codes, scale, l, r):
+    return qlr_matmul(x, codes, scale, l, r)
+
+
+def bench_shape(key, m: int, k: int, n: int, r: int, iters: int):
+    """Rows [(path, m, k, n, r, ms, speedup_vs_dequant), ...]."""
+    kx, kw, kl, kr = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    packed = MXIntQuantizer(bits=3, block_size=32).quantize(w)
+    codes = packed.codes
+    scale = jnp.exp2(packed.exponents.astype(jnp.float32))
+    l = jax.random.normal(kl, (k, r)) * 0.02
+    rr = jax.random.normal(kr, (r, n)) * 0.02
+
+    ms = {
+        "fp_dense": _timeit(_fp_dense, (x, w), iters),
+        "dequant_matmul": _timeit(_dequant_matmul,
+                                  (x, codes, scale, l, rr), iters),
+        "fused": _timeit(_fused, (x, codes, scale, l, rr), iters),
+    }
+    base = ms["dequant_matmul"]
+    return [(path, m, k, n, r, t, base / t) for path, t in ms.items()]
+
+
+def _bench(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small shapes / few iters (the CI bench-gate mode)")
+    p.add_argument("--rank", type=int, default=32)
+    p.add_argument("--iters", type=int, default=None)
+    p.add_argument("--min-speedup", type=float, default=None,
+                   help="fail unless fused beats dequant_matmul by this "
+                        f"factor at the batch-{GATE_M} decode shape")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    if args.quick:
+        # the gated batch-8 row keeps the full (2048²) weight: at 1024²
+        # the dequant materialization is small enough that timer noise
+        # eats into the contrast
+        shapes = [(1, 1024, 1024), (GATE_M, 2048, 2048)]
+        iters = args.iters or 15
+    else:
+        shapes = [(1, 2048, 2048), (GATE_M, 2048, 2048),
+                  (64, 2048, 2048), (GATE_M, 4096, 4096)]
+        iters = args.iters or 40
+
+    backend = jax.default_backend()
+    print(f"[bench] fused Q+LR matmul on backend={backend} "
+          f"(fused path = {'pallas kernel' if backend == 'tpu' else 'fused-XLA'}), "
+          f"rank={args.rank}, {iters} iters/shape")
+
+    key = jax.random.PRNGKey(args.seed)
+    rows = []
+    gate_speedup = None
+    for m, k, n in shapes:
+        shape_rows = bench_shape(jax.random.fold_in(key, m * 131 + k), m, k,
+                                 n, args.rank, iters)
+        rows.extend(shape_rows)
+        by_path = {row[0]: row for row in shape_rows}
+        fused_speed = by_path["fused"][6]
+        if m == GATE_M and gate_speedup is None:
+            gate_speedup = fused_speed
+        print(f"  m={m:3d} k={k} n={n}: "
+              + "  ".join(f"{path} {row[5]:7.3f}ms" for path, row in by_path.items())
+              + f"  → fused {fused_speed:.2f}x vs dequant")
+
+    path = write_csv("fused_linear.csv",
+                     ["path", "m", "k", "n", "r", "ms", "speedup_vs_dequant"],
+                     rows)
+    print(f"[bench] wrote {path}")
+    print(f"[bench] fused/dequant speedup at batch {GATE_M}: "
+          f"{gate_speedup:.2f}x")
+    if args.min_speedup is not None and gate_speedup < args.min_speedup:
+        raise SystemExit(
+            f"[bench-gate] FAIL: fused speedup {gate_speedup:.2f}x at batch "
+            f"{GATE_M} is below the floor {args.min_speedup:.2f}x")
+    return path, rows
+
+
+def run(quick: bool = False):
+    """benchmarks.run protocol: returns (csv_path, rows)."""
+    return _bench(["--quick"] if quick else [])
+
+
+def main(argv=None):
+    _bench(argv)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,7 @@ from benchmarks import (
     fig2_alignment,
     fig5_rank_dist,
     fig7_layerwise,
+    fused_linear,
     serve_throughput,
     table1_ptq,
     table2_downstream,
@@ -38,6 +39,7 @@ BENCHES = [
     ("Fig 5 (k* distribution)", fig5_rank_dist),
     ("Fig 7 (layer-wise error)", fig7_layerwise),
     ("Serving (continuous vs bucketed tok/s)", serve_throughput),
+    ("Fused Q+LR matmul (fused vs dequant-then-matmul)", fused_linear),
 ]
 
 

@@ -94,6 +94,11 @@ def _bench(argv=None):
     p.add_argument("--max-len", type=int, default=96)
     p.add_argument("--prefill-len", type=int, default=32)
     p.add_argument("--kv", default="bf16", choices=["f32", "bf16", "int8"])
+    p.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
+                   help="fused Q+LR matmul path for both schedulers")
+    p.add_argument("--min-speedup", type=float, default=None,
+                   help="fail unless continuous/bucketed tok/s ≥ this "
+                        "ratio (the CI bench-gate floor)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -108,7 +113,7 @@ def _bench(argv=None):
 
     base = dict(max_len=args.max_len, decode_batch=args.batch,
                 max_new_tokens=args.new_tokens, kv_dtype=args.kv,
-                prefill_len=args.prefill_len)
+                prefill_len=args.prefill_len, fused=args.fused)
     rows = []
     row_b, res_b = run_one(params, cfg, ServeConfig(scheduler="bucketed",
                                                     **base), reqs, "bucketed")
@@ -131,6 +136,10 @@ def _bench(argv=None):
     print(f"[bench] continuous/bucketed speedup: {speedup:.2f}x")
     assert row_c["tok_per_s"] > row_b["tok_per_s"], \
         "continuous batching must beat the bucketed baseline"
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        raise SystemExit(
+            f"[bench-gate] FAIL: continuous/bucketed speedup {speedup:.2f}x "
+            f"is below the floor {args.min_speedup:.2f}x")
 
     path = write_csv("serve_throughput.csv",
                      ["scheduler", "tokens", "wall_s", "tok_per_s",

@@ -4,6 +4,14 @@ Validated on CPU with interpret=True against the pure-jnp oracles in
 ref.py; compiled for TPU in deployment (ops.py auto-selects).
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import mxint_lowrank_matmul, mxint_quantize
+from repro.kernels.ops import (
+    mxint_lowrank_matmul,
+    mxint_lowrank_matmul_batched,
+    mxint_quantize,
+    qlr_matmul,
+    qlr_matmul_batched,
+)
 
-__all__ = ["ops", "ref", "mxint_lowrank_matmul", "mxint_quantize"]
+__all__ = ["ops", "ref", "mxint_lowrank_matmul",
+           "mxint_lowrank_matmul_batched", "mxint_quantize",
+           "qlr_matmul", "qlr_matmul_batched"]

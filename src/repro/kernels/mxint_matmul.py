@@ -25,6 +25,19 @@ TPU adaptation note (DESIGN.md §3): the CUDA equivalents (e.g. LQER's
 fused dequant GEMM) pivot on warp-level shuffles; here the same insight —
 "dequantize in fast memory, fuse the correction" — maps to VMEM tiling +
 MXU-aligned blocks instead.
+
+Three entry points, all sharing the same tile geometry:
+
+  * :func:`mxint_lowrank_matmul_2d`       — xl = x·L precomputed outside
+    (one big fused GEMM for the sliver; best when N ≫ bn so xl is reused
+    across many N blocks);
+  * :func:`mxint_lowrank_matmul_fused_2d` — takes L itself and accumulates
+    the (bm, r) sliver in a VMEM scratch across the K grid, applying ·R on
+    the last K step: x never leaves VMEM between the backbone and the
+    correction (single-pass decode shapes);
+  * :func:`mxint_lowrank_matmul_batched_2d` — leading grid axis over a
+    stack of G independent weights (scan groups / MoE expert dispatch):
+    x (G, M, K) · codes (G, K, N), one pallas_call for the whole stack.
 """
 from __future__ import annotations
 
@@ -33,6 +46,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_tile(codes: jax.Array, scale: jax.Array,
+                  mx_block: int) -> jax.Array:
+    """int8 codes tile + per-block scales → f32 (bk, bn) weight tile."""
+    codes = codes.astype(jnp.float32)
+    bk, bn = codes.shape
+    return (codes.reshape(bk // mx_block, mx_block, bn)
+            * scale[:, None, :]).reshape(bk, bn)
 
 
 def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
@@ -44,11 +67,7 @@ def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = codes_ref[...].astype(jnp.float32)        # (bk, bn)
-    scale = scale_ref[...]                            # (bk/32, bn)
-    bk, bn = codes.shape
-    w = (codes.reshape(bk // mx_block, mx_block, bn)
-         * scale[:, None, :]).reshape(bk, bn)
+    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block)
     x = x_ref[...].astype(jnp.float32)                # (bm, bk)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -96,5 +115,137 @@ def mxint_lowrank_matmul_2d(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale, xl, r)
+
+
+def _fused_kernel(x_ref, codes_ref, scale_ref, l_ref, r_ref, o_ref, xl_ref,
+                  *, n_k: int, mx_block: int):
+    """Like ``_kernel`` but builds the xl = x·L sliver *inside* the pass:
+    each K step accumulates the (bm, r) partial into a VMEM scratch, and
+    the last K step multiplies it with the (r, bn) slice of R. The sliver
+    is recomputed per N block — r ≤ 64 keeps that rounding-error cheap
+    relative to saving the separate (M, r) HBM round trip at decode."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        xl_ref[...] = jnp.zeros_like(xl_ref)
+
+    x = x_ref[...].astype(jnp.float32)                # (bm, bk)
+    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    xl_ref[...] += jnp.dot(x, l_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _lowrank():
+        rr = r_ref[...].astype(jnp.float32)           # (r, bn)
+        o_ref[...] += jnp.dot(xl_ref[...], rr,
+                              preferred_element_type=jnp.float32)
+
+
+def mxint_lowrank_matmul_fused_2d(
+    x: jax.Array,        # (M, K)
+    codes: jax.Array,    # (K, N) int8
+    scale: jax.Array,    # (K/32, N) f32
+    l: jax.Array,        # (K, r)
+    r: jax.Array,        # (r, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-pass y = x·dequant(Q) + (x·L)·R with the sliver accumulated
+    in-kernel. Caller guarantees the same divisibility as the 2d entry."""
+    m, k = x.shape
+    _, n = codes.shape
+    mx_block = k // scale.shape[0]
+    assert bk % mx_block == 0, (bk, mx_block)
+    rr = max(r.shape[0], 1)
+    if r.shape[0] == 0:
+        l = jnp.zeros((k, 1), x.dtype)
+        r = jnp.zeros((1, n), x.dtype)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, n_k=n_k, mx_block=mx_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // mx_block, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, rr), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((rr, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, rr), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scale, l, r)
+
+
+def _batched_kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
+                    n_k: int, mx_block: int):
+    """One (g, i, j, k) grid step over a stack of G independent weights.
+    Blocks carry a leading singleton G dim; ``ref[0]`` strips it."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(codes_ref[0], scale_ref[0], mx_block)
+    x = x_ref[0].astype(jnp.float32)                  # (bm, bk)
+    o_ref[0] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _lowrank():
+        xl = xl_ref[0].astype(jnp.float32)            # (bm, r)
+        rr = r_ref[0].astype(jnp.float32)             # (r, bn)
+        o_ref[0] += jnp.dot(xl, rr, preferred_element_type=jnp.float32)
+
+
+def mxint_lowrank_matmul_batched_2d(
+    x: jax.Array,        # (G, M, K)
+    codes: jax.Array,    # (G, K, N) int8
+    scale: jax.Array,    # (G, K/32, N) f32
+    xl: jax.Array,       # (G, M, r) — precomputed x @ L per stack entry
+    r: jax.Array,        # (G, r, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked variant: grid leads with the G axis, so one pallas_call
+    serves every expert / scanned layer in the stack (MoE dispatch)."""
+    g, m, k = x.shape
+    _, _, n = codes.shape
+    mx_block = k // scale.shape[1]
+    assert bk % mx_block == 0, (bk, mx_block)
+    rr = max(r.shape[1], 1)
+    if r.shape[1] == 0:
+        xl = jnp.zeros((g, m, 1), x.dtype)
+        r = jnp.zeros((g, 1, n), x.dtype)
+    n_k = k // bk
+    grid = (g, m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, n_k=n_k, mx_block=mx_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+            pl.BlockSpec((1, bk // mx_block, bn),
+                         lambda gg, i, j, kk: (gg, kk, j)),
+            pl.BlockSpec((1, bm, rr), lambda gg, i, j, kk: (gg, i, 0)),
+            pl.BlockSpec((1, rr, bn), lambda gg, i, j, kk: (gg, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
         interpret=interpret,
     )(x, codes, scale, xl, r)

@@ -3,8 +3,15 @@
 Handles everything the raw kernels don't: batch/sequence flattening,
 padding to tile multiples, the (x · L) sliver, dtype plumbing, and
 interpret-mode fallback so the same call sites run on CPU (validation)
-and TPU (deployment). ``repro.models.linear`` routes here when
-``ctx.use_pallas`` is set.
+and TPU (deployment). ``repro.models.linear`` routes here for the fused
+Q + LR matmul path (``ctx.fused`` / ``ctx.use_pallas``).
+
+``qlr_matmul`` / ``qlr_matmul_batched`` are the *deployment* entry
+points: on TPU (or with ``kernel=True``) they run the Pallas kernel; on
+other backends they lower to an XLA formulation that keeps the low-rank
+correction as an activation sliver and never materializes the dense
+``L·R`` product — the best non-Pallas lowering of the same math, so the
+``fused="auto"`` serving path is fast everywhere.
 """
 from __future__ import annotations
 
@@ -13,7 +20,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.mxint_matmul import mxint_lowrank_matmul_2d
+from repro.kernels.mxint_matmul import (
+    mxint_lowrank_matmul_2d,
+    mxint_lowrank_matmul_batched_2d,
+    mxint_lowrank_matmul_fused_2d,
+)
 from repro.kernels.mxint_quantize import mxint_quantize_2d
 
 
@@ -30,7 +41,8 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "fuse_sliver"))
 def mxint_lowrank_matmul(
     x: jax.Array,        # (..., K)
     codes: jax.Array,    # (K, N) int8
@@ -40,32 +52,144 @@ def mxint_lowrank_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    fuse_sliver: bool = False,
 ) -> jax.Array:
-    """y = x · dequant(codes, scale) + (x · L) · R, any leading dims."""
+    """y = x · dequant(codes, scale) + (x · L) · R, any leading dims.
+
+    ``fuse_sliver`` selects the single-pass kernel that accumulates
+    ``x · L`` in VMEM scratch instead of precomputing it as a separate
+    GEMM — the decode-shape variant (activations fit one M block)."""
     k, n = codes.shape
     lead = x.shape[:-1]
     xf = x.reshape(-1, k)
     m = xf.shape[0]
-
-    # the (M, r) sliver: r ≤ 64 ≪ K, negligible FLOPs, one fused GEMM
-    xl = xf.astype(jnp.float32) @ l.astype(jnp.float32) \
-        if l.shape[-1] > 0 else jnp.zeros((m, 0), jnp.float32)
 
     bk = min(bk, k)
     while k % bk:
         bk //= 2
     bmm = min(bm, max(8, m))
     xp = _pad_to(xf, bmm, 0)
-    xlp = _pad_to(xl, bmm, 0)
     cp = _pad_to(codes, bn, 1)
     sp = _pad_to(scale, bn, 1)
     rp = _pad_to(r, bn, 1)
+    bnn = min(bn, cp.shape[1])
 
-    y = mxint_lowrank_matmul_2d(
-        xp, cp, sp, xlp, rp, bm=bmm, bn=min(bn, cp.shape[1]), bk=bk,
-        interpret=_interpret())
+    if fuse_sliver:
+        y = mxint_lowrank_matmul_fused_2d(
+            xp, cp, sp, l, rp, bm=bmm, bn=bnn, bk=bk,
+            interpret=_interpret())
+    else:
+        # the (M, r) sliver: r ≤ 64 ≪ K, negligible FLOPs, one fused GEMM
+        xl = xf.astype(jnp.float32) @ l.astype(jnp.float32) \
+            if l.shape[-1] > 0 else jnp.zeros((m, 0), jnp.float32)
+        xlp = _pad_to(xl, bmm, 0)
+        y = mxint_lowrank_matmul_2d(
+            xp, cp, sp, xlp, rp, bm=bmm, bn=bnn, bk=bk,
+            interpret=_interpret())
     y = y[:m, :n]
     return y.reshape(*lead, n).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mxint_lowrank_matmul_batched(
+    x: jax.Array,        # (G, M, K)
+    codes: jax.Array,    # (G, K, N) int8
+    scale: jax.Array,    # (G, K/B, N) f32
+    l: jax.Array,        # (G, K, r)
+    r: jax.Array,        # (G, r, N)
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Stacked y[g] = x[g] · dequant(codes[g]) + (x[g] · L[g]) · R[g] —
+    one pallas_call over the whole stack (MoE experts, scan groups)."""
+    g, k, n = codes.shape
+    m = x.shape[1]
+
+    xl = jnp.einsum("gmk,gkr->gmr", x.astype(jnp.float32),
+                    l.astype(jnp.float32)) \
+        if l.shape[-1] > 0 else jnp.zeros((g, m, 0), jnp.float32)
+
+    bk = min(bk, k)
+    while k % bk:
+        bk //= 2
+    bmm = min(bm, max(8, m))
+    xp = _pad_to(x, bmm, 1)
+    xlp = _pad_to(xl, bmm, 1)
+    cp = _pad_to(codes, bn, 2)
+    sp = _pad_to(scale, bn, 2)
+    rp = _pad_to(r, bn, 2)
+
+    y = mxint_lowrank_matmul_batched_2d(
+        xp, cp, sp, xlp, rp, bm=bmm, bn=min(bn, cp.shape[2]), bk=bk,
+        interpret=_interpret())
+    return y[:, :m, :n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deployment dispatch: Pallas kernel on TPU, fused-XLA formulation elsewhere
+# ---------------------------------------------------------------------------
+def dequant_blockwise(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Blockwise dequant via reshape-multiply (no ``jnp.repeat`` copy of
+    the scale plane); leading stack dims pass through. The single XLA
+    lowering of ``dequant`` — ``models.linear.dequant_weight`` and the
+    fused-XLA matmuls below all route here."""
+    lead, (k, n) = codes.shape[:-2], codes.shape[-2:]
+    nb = scale.shape[-2]
+    return (codes.astype(dtype).reshape(lead + (nb, k // nb, n))
+            * scale.astype(dtype)[..., :, None, :]).reshape(lead + (k, n))
+
+
+@jax.jit
+def _qlr_matmul_xla(x, codes, scale, l, r):
+    """XLA lowering of the fused op: backbone matmul against the
+    blockwise-dequantized weight + the rank-r correction as an activation
+    sliver (never the dense (K, N) ``L·R`` product)."""
+    dt = x.dtype
+    y = x @ dequant_blockwise(codes, scale, dt)
+    if l.shape[-1] > 0:
+        y = y + (x @ l.astype(dt)) @ r.astype(dt)
+    return y
+
+
+@jax.jit
+def _qlr_matmul_batched_xla(x, codes, scale, l, r):
+    dt = x.dtype
+    y = jnp.einsum("gmk,gkn->gmn", x, dequant_blockwise(codes, scale, dt))
+    if l.shape[-1] > 0:
+        xl = jnp.einsum("gmk,gkr->gmr", x, l.astype(dt))
+        y = y + jnp.einsum("gmr,grn->gmn", xl, r.astype(dt))
+    return y
+
+
+def qlr_matmul(x, codes, scale, l, r, *, kernel=None) -> jax.Array:
+    """y = x · dequant(codes, scale) + (x · L) · R — deployment entry.
+
+    ``kernel=None`` auto-selects: Pallas on TPU, fused-XLA elsewhere.
+    ``kernel=True`` forces the Pallas kernel (interpret mode off-TPU —
+    numerics validation); ``kernel=False`` forces the XLA path."""
+    if kernel is None:
+        kernel = jax.default_backend() == "tpu"
+    if kernel:
+        # Decode regime (activations fit one M block): accumulate the
+        # x·L sliver inside the kernel pass — x is already VMEM-resident
+        # per K step, so the correction adds zero HBM traffic, vs. a
+        # separate sliver GEMM re-reading x from HBM. At prefill M the
+        # per-N-block sliver recompute would cost real FLOPs, so large M
+        # keeps the precomputed-xl kernel.
+        rows = x.size // x.shape[-1]
+        return mxint_lowrank_matmul(x, codes, scale, l, r,
+                                    fuse_sliver=rows <= 128)
+    return _qlr_matmul_xla(x, codes, scale, l, r)
+
+
+def qlr_matmul_batched(x, codes, scale, l, r, *, kernel=None) -> jax.Array:
+    """Stacked-weight variant of :func:`qlr_matmul` (MoE experts)."""
+    if kernel is None:
+        kernel = jax.default_backend() == "tpu"
+    if kernel:
+        return mxint_lowrank_matmul_batched(x, codes, scale, l, r)
+    return _qlr_matmul_batched_xla(x, codes, scale, l, r)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "mx_block", "bm", "bn"))

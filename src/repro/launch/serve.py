@@ -38,6 +38,10 @@ def main(argv=None):
                    choices=["continuous", "bucketed"])
     p.add_argument("--prefill-len", type=int, default=32,
                    help="compiled prompt pad length (continuous)")
+    p.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
+                   help="fused Q+LR matmul path: auto (kernel on TPU, "
+                        "fused-XLA elsewhere), on (force kernel; interpret "
+                        "off-TPU), off (dequant-then-matmul)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -64,7 +68,8 @@ def main(argv=None):
     eng = Engine(params, cfg, ServeConfig(
         max_len=128, decode_batch=args.batch,
         max_new_tokens=args.new_tokens, kv_dtype=args.kv,
-        scheduler=args.scheduler, prefill_len=args.prefill_len))
+        scheduler=args.scheduler, prefill_len=args.prefill_len,
+        fused=args.fused))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, size=8 + 4 * (i % 3))

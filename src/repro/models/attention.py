@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope
-from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear, weight_of
+from repro.models.linear import (Ctx, dp_axes_of, hint, init_linear, linear,
+                                 weight_of)
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -309,8 +310,13 @@ def attention_seq(
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
     window = cfg.window if local else None
     strat = attn_strategy(ctx, cfg)
-    if ctx.use_pallas:
-        # serving path: VMEM-resident flash kernel (no HBM score traffic)
+    if ctx.use_pallas or (cache is not None and ctx.fused == "on"):
+        # serving path: VMEM-resident flash kernel (no HBM score traffic).
+        # Only explicit opt-ins route here — ``use_pallas`` (set by the
+        # serving engine when its fused mode resolves to the kernel) or
+        # ``fused="on"`` on a cache-populating prefill — so training and
+        # dry-run lowerings keep the configured blockwise strategy, and
+        # ``fused="on"`` validates the full kernel serving path off-TPU.
         from repro.kernels.ops import flash_attention
         out = flash_attention(q, k, v, positions, positions,
                               causal=causal, window=window or 0)

@@ -10,6 +10,14 @@ under jit for all modes, and PTQ is a pure pytree transformation):
   qpeft   : quant/packed4 where (l, r) live in the *trainable* tree and the
             backbone stays in the frozen tree (split by repro.train).
 
+Quantized projections execute through the **fused Q + LR matmul**
+(``repro.kernels.ops.qlr_matmul``) controlled by ``ctx.fused``:
+``"auto"`` (default) runs the Pallas kernel on TPU and the fused-XLA
+lowering elsewhere; ``"on"`` forces the kernel (interpret mode off-TPU —
+numerics validation); ``"off"`` keeps the legacy dequant-then-matmul
+fallback. The dense dequantized weight never round-trips HBM on the
+kernel path.
+
 ``calib`` taps are threaded through a tiny context object: when
 ``ctx.tap`` is set, the layer records streaming input moments (eager mode
 only — calibration never runs under jit).
@@ -33,6 +41,7 @@ class Ctx:
     compute_dtype: Any = jnp.float32
     tap: Optional[Dict[str, CalibStats]] = None   # calibration capture
     use_pallas: bool = False                      # TPU kernel path (serving)
+    fused: str = "auto"                           # Q+LR matmul: auto|on|off
     prefix: str = ""                              # per-layer tap namespace
     autocorr: bool = True                         # capture Σxxᵀ moments
     mesh: Optional[Any] = None                    # enables sharding hints
@@ -104,18 +113,64 @@ def dequant_weight(p: Dict[str, jax.Array], dtype) -> jax.Array:
     """Materialize the quantized backbone (jnp fallback path; the Pallas
     kernel fuses this into the matmul on TPU).
 
+    Dequantizes blockwise via reshape-multiply — ``jnp.repeat`` of the
+    scale plane would materialize a second full (K, N) array before the
+    product even forms.
+
     Codes may carry MXINT padding rows (input dims that aren't multiples
     of the block, e.g. xLSTM's 4/3·d FFN); the adapter ``l`` always has
     the true row count, so slice back to it."""
+    from repro.kernels.ops import dequant_blockwise  # lazy: no import cycle
     if "packed" in p:
         codes = unpack_codes_4bit(p["packed"])
     else:
         codes = p["codes"]
-    scale = p["scale"]
-    block = codes.shape[-2] // scale.shape[-2]
-    w = codes.astype(dtype) * jnp.repeat(scale.astype(dtype), block, axis=-2)
+    w = dequant_blockwise(codes, p["scale"], dtype)
     m = p["l"].shape[-2] if "l" in p else w.shape[-2]
     return w[..., :m, :]
+
+
+def fused_mode(ctx: Ctx) -> str:
+    """Resolve ``ctx.fused`` to the Q+LR execution path.
+
+    Returns one of:
+      "kernel" — the fused Pallas kernel (interpret mode off-TPU);
+      "xla"    — the fused-XLA lowering (blockwise dequant + activation
+                 sliver, no dense L·R materialization);
+      "off"    — the legacy dequant-then-matmul fallback.
+
+    ``fused="auto"`` picks the kernel on TPU (or under ``use_pallas``,
+    the off-TPU kernel-validation switch) and the XLA form elsewhere, so
+    the same model code serves fast on any backend.
+    """
+    if ctx.fused == "off":
+        return "off"
+    if ctx.fused == "on":
+        return "kernel"
+    if ctx.fused != "auto":
+        raise ValueError(f"ctx.fused must be auto|on|off, got {ctx.fused!r}")
+    if ctx.use_pallas or jax.default_backend() == "tpu":
+        return "kernel"
+    return "xla"
+
+
+def _fused_qlr(params: Dict[str, jax.Array], x: jax.Array,
+               mode: str) -> jax.Array:
+    """Route one quantized projection through the fused Q+LR matmul.
+    Handles the packed4 container and MXINT row padding (codes may carry
+    padding rows when the input dim isn't a block multiple)."""
+    from repro.kernels import ops as kops  # lazy: keeps import cycles out
+    if "packed" in params:
+        codes = unpack_codes_4bit(params["packed"])
+    else:
+        codes = params["codes"]
+    l = params["l"]
+    pad = codes.shape[-2] - x.shape[-1]
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        l = jnp.pad(l, [(0, pad), (0, 0)])
+    return kops.qlr_matmul(x, codes, params["scale"], l, params["r"],
+                           kernel=(mode == "kernel"))
 
 
 def linear(ctx: Ctx, params: Dict[str, jax.Array], x: jax.Array,
@@ -128,22 +183,14 @@ def linear(ctx: Ctx, params: Dict[str, jax.Array], x: jax.Array,
     if "w" in params:
         y = x.astype(dt) @ params["w"].astype(dt)
     else:
-        if ctx.use_pallas and "codes" in params:
-            from repro.kernels import ops as kops  # lazy: TPU-only path
-            xk = x.astype(dt)
-            pad = params["codes"].shape[-2] - xk.shape[-1]
-            if pad:  # codes carry MXINT block padding rows
-                xk = jnp.pad(xk, [(0, 0)] * (xk.ndim - 1) + [(0, pad)])
-            lpad = jnp.pad(params["l"], [(0, pad), (0, 0)]) if pad \
-                else params["l"]
-            y = kops.mxint_lowrank_matmul(
-                xk, params["codes"], params["scale"], lpad, params["r"])
+        mode = fused_mode(ctx)
+        if mode != "off":
+            y = _fused_qlr(params, x.astype(dt), mode)
         else:
             w = dequant_weight(params, dt)
             y = x.astype(dt) @ w
             if params["l"].shape[1] > 0:
                 y = y + (x.astype(dt) @ params["l"].astype(dt)) @ params["r"].astype(dt)
-            return y + params["b"].astype(dt) if "b" in params else y
     if "b" in params:
         y = y + params["b"].astype(dt)
     return y

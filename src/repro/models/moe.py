@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import init_mlp, mlp
-from repro.models.linear import Ctx, dp_axes_of, hint, init_linear, linear
+from repro.models.linear import (Ctx, dp_axes_of, fused_mode, hint,
+                                 init_linear, linear)
 
 
 def init_moe(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
@@ -61,6 +62,31 @@ def _expert_ffn(wp: Dict, x: jax.Array) -> jax.Array:
     dt = x.dtype
     h = jax.nn.silu(_apply_w(wp["gate"], x, dt)) * _apply_w(wp["up"], x, dt)
     return _apply_w(wp["down"], h, dt)
+
+
+def _apply_w_batched(p: Dict, x: jax.Array, mode: str) -> jax.Array:
+    """Stacked-expert weight apply on the fused Q+LR path: one batched
+    kernel call over the (E, C, d) dispatch buffer instead of a vmap of
+    per-expert dequant-then-matmul. ``p`` leads with the expert dim."""
+    from repro.kernels import ops as kops
+    codes, l = p["codes"], p["l"]
+    pad = codes.shape[-2] - x.shape[-1]
+    if pad:  # MXINT row padding on the expert input dim
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+        l = jnp.pad(l, ((0, 0), (0, pad), (0, 0)))
+    y = kops.qlr_matmul_batched(x, codes, p["scale"], l, p["r"],
+                                kernel=(mode == "kernel"))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)[:, None, :]
+    return y
+
+
+def _expert_ffn_batched(experts: Dict, x: jax.Array, mode: str) -> jax.Array:
+    """SwiGLU over the whole expert stack; x: (E, C, d)."""
+    dt = x.dtype
+    h = jax.nn.silu(_apply_w_batched(experts["gate"], x, mode)) \
+        * _apply_w_batched(experts["up"], x, mode)
+    return _apply_w_batched(experts["down"], h.astype(dt), mode).astype(dt)
 
 
 def moe_apply(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
@@ -111,7 +137,13 @@ def moe_apply(ctx: Ctx, params: Dict, x: jax.Array, cfg: ModelConfig,
     # the scatter above becomes an all-to-all instead of a broadcast
     buf = hint(ctx, buf, "model", None, None)
 
-    out_buf = jax.vmap(_expert_ffn)(params["experts"], buf)      # (E, C, d)
+    mode = fused_mode(ctx)
+    if mode != "off" and "codes" in params["experts"]["up"]:
+        # fused serving path: one batched Q+LR kernel call per projection
+        # over the whole expert stack (packed4 experts keep the vmap path)
+        out_buf = _expert_ffn_batched(params["experts"], buf, mode)
+    else:
+        out_buf = jax.vmap(_expert_ffn)(params["experts"], buf)  # (E, C, d)
     out_buf = hint(ctx, out_buf, "model", None, None)
 
     gathered = out_buf[flat_expert, safe_pos]                    # (T·k, d)

@@ -12,6 +12,14 @@ Depth is organized as  [prefix | scanned groups | suffix]:
 
 Caches mirror this structure exactly, so decode scans layer-stacked caches
 alongside layer-stacked params.
+
+Serving note: every projection in prefill/decode routes through
+``repro.models.linear.linear``, so a quantized (Q + LR) param tree
+executes the fused Pallas matmul whenever ``ctx.fused`` resolves to the
+kernel path (see ``linear.fused_mode``) — including inside the
+``lax.scan`` decode body, where the per-layer slice of a stacked group
+feeds the kernel directly. Embeddings and the LM head stay
+full-precision by PTQ policy and keep the dense path.
 """
 from __future__ import annotations
 

@@ -22,7 +22,10 @@ scale, under two schedulers:
 Also here: **int8 KV** (``kv_dtype="int8"``) halves cache HBM — the
 quantization-native option that makes 32k-context MHA models fit — and
 per-request latency metrics (TTFT, end-to-end latency) plus scheduler
-occupancy counters.
+occupancy counters. The ``fused`` switch routes every quantized
+projection in prefill *and* per-step decode through the fused Q + LR
+matmul (``repro.kernels.ops.qlr_matmul``), so the dequantized weight
+never round-trips HBM on TPU.
 
 API: ``submit()`` / ``step()`` / ``drain()`` for streaming use;
 ``generate()`` runs a whole batch of requests through either scheduler.
@@ -55,6 +58,7 @@ class ServeConfig:
     scheduler: str = "continuous"    # continuous | bucketed
     prefill_len: Optional[int] = None  # compiled prompt pad length
     seed: int = 0                    # sampling stream for submit()/step()
+    fused: str = "auto"              # Q+LR matmul path: auto | on | off
 
 
 @dataclasses.dataclass
@@ -80,11 +84,23 @@ class Engine:
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None):
         if sc.scheduler not in ("continuous", "bucketed"):
             raise ValueError(f"unknown scheduler {sc.scheduler!r}")
+        if sc.fused not in ("auto", "on", "off"):
+            raise ValueError(f"unknown fused mode {sc.fused!r}")
         self.params = params
         self.cfg = cfg
         self.sc = sc
         self.extra = extra_inputs or {}
-        self.ctx = Ctx(compute_dtype=KV_DTYPES[sc.compute_dtype])
+        # fused="auto" serves the Q+LR decomposition through the Pallas
+        # kernels on TPU and the fused-XLA lowering elsewhere; "on"
+        # forces the kernels (interpret off-TPU — validation runs).
+        # use_pallas follows the resolved mode: whenever the matmul runs
+        # as a kernel, prefill attention takes the flash kernel too —
+        # the engine is inference-only, so the kernels' lack of a VJP
+        # cannot bite here.
+        from repro.models.linear import fused_mode
+        ctx = Ctx(compute_dtype=KV_DTYPES[sc.compute_dtype], fused=sc.fused)
+        ctx.use_pallas = fused_mode(ctx) == "kernel"
+        self.ctx = ctx
         self.prefill_len = sc.prefill_len or sc.max_len
         if self.prefill_len > sc.max_len:
             raise ValueError(

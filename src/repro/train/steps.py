@@ -101,7 +101,9 @@ def _grads_of(loss_fn: Callable, params: Any, batch: Dict,
 def make_train_step(cfg: ModelConfig, opt: AdamW,
                     sc: StepConfig = StepConfig()) -> Callable:
     """Full-parameter LM training step."""
-    ctx = Ctx(compute_dtype=sc.compute_dtype, mesh=sc.mesh)
+    # fused="off": training differentiates through every projection, and
+    # the Pallas serving kernels define no VJP — keep the jnp lowering
+    ctx = Ctx(compute_dtype=sc.compute_dtype, mesh=sc.mesh, fused="off")
 
     def loss_fn(params, batch):
         return lm_loss(ctx, params, batch, cfg, remat=sc.remat)
@@ -122,7 +124,8 @@ def make_qpeft_step(cfg: ModelConfig, opt: AdamW,
                     sc: StepConfig = StepConfig()) -> Callable:
     """Adapter-only training on a frozen quantized backbone (§4.4)."""
     from repro.models.quantize import merge_qpeft, qpeft_grad_scales
-    ctx = Ctx(compute_dtype=sc.compute_dtype, mesh=sc.mesh)
+    # fused="off": grads flow through the (l, r) adapters inside linear()
+    ctx = Ctx(compute_dtype=sc.compute_dtype, mesh=sc.mesh, fused="off")
 
     def step(state: QPEFTState, batch: Dict) -> Tuple[QPEFTState, Dict]:
         frozen = state.frozen

@@ -1,0 +1,230 @@
+"""Numerics tier for the fused Q+LR serving path.
+
+Pins the fused matmul — every entry point (per-weight kernel, in-kernel
+sliver, batched stack, fused-XLA lowering) — to the pure-jnp oracle in
+``kernels/ref.py``, across quantizer families (MXINT, uniform, GPTQ):
+the kernel only assumes the ``codes × per-block-scale`` layout, so any
+symmetric block quantizer must round-trip through it exactly. On top,
+mode-parity tests assert that ``linear()`` / MoE dispatch / the serving
+engine emit identical results whichever ``fused`` mode executes them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (
+    mxint_lowrank_matmul,
+    mxint_lowrank_matmul_batched,
+    qlr_matmul,
+    qlr_matmul_batched,
+)
+from repro.kernels.ref import mxint_lowrank_matmul_ref
+from repro.models.linear import Ctx, fused_mode, linear
+from repro.quant import MXIntQuantizer, UniformQuantizer
+from repro.quant.gptq import GPTQQuantizer
+from repro.quant.mxint import pack_codes_4bit
+
+
+def _quantize(kind: str, bits: int, w: jax.Array, block: int = 32):
+    """(codes, scale) in the kernel layout for any supported quantizer."""
+    if kind == "mxint":
+        p = MXIntQuantizer(bits=bits, block_size=block).quantize(w)
+        return p.codes, jnp.exp2(p.exponents.astype(jnp.float32))
+    if kind == "uniform":
+        p = UniformQuantizer(bits=bits, group_size=block,
+                             symmetric=True).quantize(w)
+        return p.codes, p.scales
+    if kind == "gptq":
+        k = w.shape[0]
+        x = jax.random.normal(jax.random.PRNGKey(3), (4 * k, k))
+        h = x.T @ x / x.shape[0]
+        q = GPTQQuantizer(bits=bits, group_size=block,
+                          symmetric=True).make_bound(h)
+        p = q.quantize(w)
+        return p.codes, p.scales
+    raise ValueError(kind)
+
+
+def _qlr_case(kind: str, bits: int, m=16, k=128, n=96, r=8):
+    key = jax.random.PRNGKey(bits + len(kind))
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    codes, scale = _quantize(kind, bits, w)
+    l = jax.random.normal(jax.random.fold_in(key, 2), (k, r)) * 0.1
+    rr = jax.random.normal(jax.random.fold_in(key, 3), (r, n)) * 0.1
+    return x, codes, scale, l, rr
+
+
+# ---------------------------------------------------------------------------
+# Kernel entry points vs the jnp oracle, across quantizer families
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind,bits", [
+    ("mxint", 2), ("mxint", 3), ("mxint", 4),
+    ("uniform", 3), ("uniform", 4),
+    ("gptq", 3),
+])
+def test_kernel_matches_ref_across_quantizers(kind, bits):
+    x, codes, scale, l, rr = _qlr_case(kind, bits)
+    ref = mxint_lowrank_matmul_ref(x, codes, scale, l, rr)
+    for label, y in [
+        ("kernel", mxint_lowrank_matmul(x, codes, scale, l, rr)),
+        ("kernel+sliver", mxint_lowrank_matmul(x, codes, scale, l, rr,
+                                               fuse_sliver=True)),
+        ("xla", qlr_matmul(x, codes, scale, l, rr, kernel=False)),
+    ]:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=label)
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (8, 256, 128, 16),
+    (1, 512, 256, 0),       # decode row, rank-0
+    (130, 512, 384, 64),    # ragged M
+])
+def test_fused_sliver_kernel_matches_plain(m, k, n, r):
+    """In-kernel sliver accumulation ≡ precomputed-xl kernel."""
+    key = jax.random.PRNGKey(m + k)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    codes, scale = _quantize("mxint", 3, w)
+    l = (jax.random.normal(jax.random.fold_in(key, 2), (k, r))
+         if r else jnp.zeros((k, 0)))
+    rr = (jax.random.normal(jax.random.fold_in(key, 3), (r, n))
+          if r else jnp.zeros((0, n)))
+    y0 = mxint_lowrank_matmul(x, codes, scale, l, rr)
+    y1 = mxint_lowrank_matmul(x, codes, scale, l, rr, fuse_sliver=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("g,m,k,n,r", [(3, 16, 256, 128, 8),
+                                       (2, 8, 96, 64, 0)])
+def test_batched_kernel_matches_ref(g, m, k, n, r):
+    key = jax.random.PRNGKey(g * m)
+    x = jax.random.normal(key, (g, m, k))
+    qz = MXIntQuantizer(bits=3, block_size=32)
+    packs = [qz.quantize(jax.random.normal(jax.random.fold_in(key, i), (k, n)))
+             for i in range(g)]
+    codes = jnp.stack([p.codes for p in packs])
+    scale = jnp.stack([jnp.exp2(p.exponents.astype(jnp.float32))
+                       for p in packs])
+    l = (jax.random.normal(jax.random.fold_in(key, 7), (g, k, r))
+         if r else jnp.zeros((g, k, 0)))
+    rr = (jax.random.normal(jax.random.fold_in(key, 8), (g, r, n))
+          if r else jnp.zeros((g, 0, n)))
+    for kernel in (True, False):
+        y = (mxint_lowrank_matmul_batched(x, codes, scale, l, rr) if kernel
+             else qlr_matmul_batched(x, codes, scale, l, rr, kernel=False))
+        for i in range(g):
+            ref = mxint_lowrank_matmul_ref(x[i], codes[i], scale[i],
+                                           l[i], rr[i])
+            np.testing.assert_allclose(np.asarray(y[i]), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# linear() mode parity
+# ---------------------------------------------------------------------------
+def _linear_params(key, m, n, r, container="codes", bits=3):
+    w = jax.random.normal(key, (m, n))
+    p0 = MXIntQuantizer(bits=bits, block_size=32).quantize(w)
+    p = {"scale": jnp.exp2(p0.exponents.astype(jnp.float32)),
+         "l": jax.random.normal(jax.random.fold_in(key, 1), (m, r)) * 0.1,
+         "r": jax.random.normal(jax.random.fold_in(key, 2), (r, n)) * 0.1,
+         "b": jax.random.normal(jax.random.fold_in(key, 3), (n,))}
+    if container == "packed":
+        p["packed"] = pack_codes_4bit(p0.codes)
+    else:
+        p["codes"] = p0.codes
+    return p
+
+
+@pytest.mark.parametrize("m,container,bits", [
+    (96, "codes", 3),
+    (80, "codes", 3),      # MXINT row padding (80 → 96)
+    (96, "packed", 4),
+    (80, "packed", 4),     # padding + packed4 container
+])
+def test_linear_fused_modes_agree(m, container, bits):
+    key = jax.random.PRNGKey(m + bits)
+    params = _linear_params(key, m, 64, 8, container, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (2, 5, m))
+    y_off = linear(Ctx(fused="off"), params, x)
+    y_auto = linear(Ctx(fused="auto"), params, x)
+    y_on = linear(Ctx(fused="on"), params, x)
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_auto),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_on),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fused_mode_resolution():
+    assert fused_mode(Ctx(fused="off")) == "off"
+    assert fused_mode(Ctx(fused="on")) == "kernel"
+    assert fused_mode(Ctx(fused="auto", use_pallas=True)) == "kernel"
+    expected = "kernel" if jax.default_backend() == "tpu" else "xla"
+    assert fused_mode(Ctx()) == expected
+    with pytest.raises(ValueError):
+        fused_mode(Ctx(fused="always"))
+
+
+# ---------------------------------------------------------------------------
+# MoE fused expert dispatch parity
+# ---------------------------------------------------------------------------
+def test_moe_fused_dispatch_parity():
+    from repro.configs import get_config
+    from repro.core.api import PTQConfig
+    from repro.models import moe as moe_mod
+    from repro.models.quantize import quantize_model_params
+    from repro.quant.base import QuantizerConfig
+
+    cfg = get_config("deepseek-moe-16b").reduced()
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    ptq = PTQConfig(method="srr", scaling="identity", rank=4,
+                    quantizer=QuantizerConfig(kind="mxint", bits=3,
+                                              block_size=32))
+    qp, _ = quantize_model_params(p, None, ptq)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model))
+    y_off, aux_off = moe_mod.moe_apply(Ctx(fused="off"), qp, x, cfg)
+    y_on, aux_on = moe_mod.moe_apply(Ctx(fused="on"), qp, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_on),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_off), float(aux_on), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: fused decode emits the same tokens
+# ---------------------------------------------------------------------------
+def test_engine_fused_token_parity():
+    from repro.configs import get_config
+    from repro.core.api import PTQConfig
+    from repro.models import init_lm
+    from repro.models.quantize import quantize_model_params
+    from repro.quant.base import QuantizerConfig
+    from repro.serve import Engine, Request, ServeConfig
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ptq = PTQConfig(method="srr", scaling="identity", rank=8,
+                    quantizer=QuantizerConfig(kind="mxint", bits=3,
+                                              block_size=32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+
+    rng = np.random.default_rng(0)
+    def reqs():
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=5 + 3 * i)
+                        .astype(np.int32), max_new_tokens=4)
+                for i in range(3)]
+
+    outs = {}
+    for mode in ("off", "auto"):
+        sc = ServeConfig(max_len=48, decode_batch=2, max_new_tokens=4,
+                         prefill_len=16, fused=mode)
+        eng = Engine(qparams, cfg, sc)
+        rng = np.random.default_rng(0)
+        outs[mode] = eng.generate(reqs())
+    for a, b in zip(outs["off"], outs["auto"]):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
