@@ -1,0 +1,212 @@
+"""Flash-decode attention vs its unfused lowerings over the slot cache.
+
+    PYTHONPATH=src python benchmarks/decode_attention.py [--quick] [--min-speedup X]
+
+With every quantized projection fused (PR 2), serving decode is
+dominated by the attention read over the slot KV cache. Three lowerings
+are timed per (batch, seq, kv_dtype) shape:
+
+  * ``f32_dense``      — f32 cache, sequence-major einsum: the
+    no-quantization roofline reference (4× the int8 cache bytes);
+  * ``xla_int8_cache`` — the pre-PR serving lowering: sequence-major
+    (B, S, KV, hd) cache, dequantized *densely* into f32 each step, then
+    the score/value einsums (which also force XLA to relayout the cache
+    to bring the batched-GEMM dims adjacent — two full HBM round trips
+    over the largest live tensor per token);
+  * ``fused``          — ``repro.kernels.ops.decode_attention_op``,
+    exactly what ``attention_step`` executes under ``ctx.fused``: the
+    Pallas flash-decode kernel on TPU (head-major cache streamed once,
+    int8 dequant in VMEM), the fused-XLA lowering elsewhere (head-major
+    batched GEMMs straight over the codes, scales folded into the
+    score/probability planes — no dense cache, no relayout).
+
+Every path runs jitted and warmed; medians over repeated sweeps. CSV to
+``benchmarks/out/decode_attention.csv``. CI's bench-gate job runs
+``--quick`` and enforces ``--min-speedup`` (1.3 under the gate): fused
+must beat ``xla_int8_cache`` by that factor at the batch-8 long-context
+int8 decode shape.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import write_csv
+except ImportError:  # run as a loose script with benchmarks/ on sys.path
+    from common import write_csv
+
+from repro.kernels.ops import decode_attention_op
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+GATE_B = 8  # the decode batch the speedup floor is enforced at
+
+
+def _timeit(fn, args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+@jax.jit
+def _xla_seq_major(q, k, v, q_pos, k_pos):
+    """Pre-PR decode attention over a sequence-major dense cache."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+@jax.jit
+def _xla_int8_cache(q, kc, ks, vc, vs, q_pos, k_pos):
+    """The unfused baseline: dequantize the whole sequence-major int8
+    cache into f32, then the dense einsums — what ``attention_step`` did
+    before the head-major refactor."""
+    k = kc.astype(jnp.float32) * ks[..., None]
+    v = vc.astype(jnp.float32) * vs[..., None]
+    return _xla_seq_major(q, k, v, q_pos, k_pos)
+
+
+@jax.jit
+def _xla_bf16_cache(q, k, v, q_pos, k_pos):
+    """bf16 variant of the unfused baseline (cast instead of dequant)."""
+    return _xla_seq_major(q, k.astype(jnp.float32), v.astype(jnp.float32),
+                          q_pos, k_pos)
+
+
+def _fused_int8(q, kc, ks, vc, vs, q_pos, k_pos):
+    return decode_attention_op(q[:, 0], kc, vc, q_pos, k_pos,
+                               k_scale=ks, v_scale=vs)
+
+
+def _fused_float(q, k, v, q_pos, k_pos):
+    return decode_attention_op(q[:, 0], k, v, q_pos, k_pos)
+
+
+def bench_shape(key, b: int, s_len: int, kv: int, g: int, hd: int,
+                kv_dtype: str, iters: int):
+    """Rows [(path, b, s, kv_dtype, kv, g, hd, ms, speedup), ...]."""
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, 1, kv, g, hd))
+    k = jax.random.normal(kk, (b, s_len, kv, hd))        # sequence-major
+    v = jax.random.normal(kv_, (b, s_len, kv, hd))
+    q_pos = jnp.full((b,), s_len - 1, jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(s_len)[None],
+                             (b, s_len)).astype(jnp.int32)
+    # head-major copies — the layout the refactored cache stores
+    khm, vhm = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+    ms = {"f32_dense": _timeit(_xla_seq_major, (q, k, v, q_pos, k_pos),
+                               iters)}
+    if kv_dtype == "int8":
+        amax = jnp.max(jnp.abs(k), axis=-1)
+        ks = jnp.maximum(amax, 1e-8) / 127.0
+        kc = jnp.clip(jnp.round(k / ks[..., None]), -127, 127).astype(jnp.int8)
+        amax = jnp.max(jnp.abs(v), axis=-1)
+        vs = jnp.maximum(amax, 1e-8) / 127.0
+        vc = jnp.clip(jnp.round(v / vs[..., None]), -127, 127).astype(jnp.int8)
+        kchm, vchm = kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3)
+        kshm, vshm = ks.transpose(0, 2, 1), vs.transpose(0, 2, 1)
+        ms["xla_cache"] = _timeit(_xla_int8_cache,
+                                  (q, kc, ks, vc, vs, q_pos, k_pos), iters)
+        ms["fused"] = _timeit(_fused_int8,
+                              (q, kchm, kshm, vchm, vshm, q_pos, k_pos),
+                              iters)
+    else:  # bf16
+        kb, vb = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+        ms["xla_cache"] = _timeit(_xla_bf16_cache, (q, kb, vb, q_pos, k_pos),
+                                  iters)
+        ms["fused"] = _timeit(
+            _fused_float,
+            (q, khm.astype(jnp.bfloat16), vhm.astype(jnp.bfloat16),
+             q_pos, k_pos), iters)
+    base = ms["xla_cache"]
+    return [(path, b, s_len, kv_dtype, kv, g, hd, t, base / t)
+            for path, t in ms.items()]
+
+
+def _bench(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="few shapes / few iters (the CI bench-gate mode)")
+    p.add_argument("--iters", type=int, default=None)
+    p.add_argument("--min-speedup", type=float, default=None,
+                   help="fail unless fused beats xla_cache by this factor "
+                        f"at the batch-{GATE_B} long-context int8 shape")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    kv, g, hd = 4, 8, 128
+    if args.quick:
+        shapes = [(1, 4096, "int8"), (GATE_B, 8192, "int8"),
+                  (GATE_B, 4096, "bf16")]
+        iters = args.iters or 8
+    else:
+        shapes = [(b, s, d) for d in ("int8", "bf16")
+                  for b in (1, GATE_B) for s in (1024, 4096, 8192)]
+        iters = args.iters or 20
+
+    backend = jax.default_backend()
+    print(f"[bench] decode attention on backend={backend} "
+          f"(fused path = {'pallas flash-decode' if backend == 'tpu' else 'fused-XLA'}), "
+          f"KV={kv} G={g} hd={hd}, {iters} iters/shape")
+
+    key = jax.random.PRNGKey(args.seed)
+    rows = []
+    gate_speedup = None
+    gate_s = max(s for _, s, d in shapes if d == "int8")
+    for b, s_len, kv_dtype in shapes:
+        shape_rows = bench_shape(jax.random.fold_in(key, b * 131 + s_len),
+                                 b, s_len, kv, g, hd, kv_dtype, iters)
+        rows.extend(shape_rows)
+        by_path = {row[0]: row for row in shape_rows}
+        fused_speed = by_path["fused"][8]
+        if b == GATE_B and s_len == gate_s and kv_dtype == "int8":
+            gate_speedup = fused_speed
+        print(f"  b={b:3d} s={s_len:5d} kv={kv_dtype:4s}: "
+              + "  ".join(f"{path} {row[7]:8.3f}ms"
+                          for path, row in by_path.items())
+              + f"  → fused {fused_speed:.2f}x vs xla_cache")
+
+    path = write_csv("decode_attention.csv",
+                     ["path", "b", "s", "kv_dtype", "kv_heads", "groups",
+                      "head_dim", "ms", "speedup_vs_xla_cache"],
+                     rows)
+    print(f"[bench] wrote {path}")
+    print(f"[bench] fused/xla_cache speedup at batch {GATE_B}, "
+          f"s={gate_s}, int8 KV: {gate_speedup:.2f}x")
+    if args.min_speedup is not None and gate_speedup < args.min_speedup:
+        raise SystemExit(
+            f"[bench-gate] FAIL: fused decode-attention speedup "
+            f"{gate_speedup:.2f}x at batch {GATE_B} is below the floor "
+            f"{args.min_speedup:.2f}x")
+    return path, rows
+
+
+def run(quick: bool = False):
+    """benchmarks.run protocol: returns (csv_path, rows)."""
+    return _bench(["--quick"] if quick else [])
+
+
+def main(argv=None):
+    _bench(argv)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,7 @@ import time
 import traceback
 
 from benchmarks import (
+    decode_attention,
     fig2_alignment,
     fig5_rank_dist,
     fig7_layerwise,
@@ -40,6 +41,7 @@ BENCHES = [
     ("Fig 7 (layer-wise error)", fig7_layerwise),
     ("Serving (continuous vs bucketed tok/s)", serve_throughput),
     ("Fused Q+LR matmul (fused vs dequant-then-matmul)", fused_linear),
+    ("Decode attention (flash-decode vs XLA-over-cache)", decode_attention),
 ]
 
 

@@ -5,6 +5,7 @@ ref.py; compiled for TPU in deployment (ops.py auto-selects).
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (
+    decode_attention_op,
     mxint_lowrank_matmul,
     mxint_lowrank_matmul_batched,
     mxint_quantize,
@@ -12,6 +13,7 @@ from repro.kernels.ops import (
     qlr_matmul_batched,
 )
 
-__all__ = ["ops", "ref", "mxint_lowrank_matmul",
+__all__ = ["ops", "ref", "decode_attention_op",
+           "mxint_lowrank_matmul",
            "mxint_lowrank_matmul_batched", "mxint_quantize",
            "qlr_matmul", "qlr_matmul_batched"]

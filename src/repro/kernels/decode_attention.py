@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: flash-decode attention over the slot KV cache.
+
+Why: after PR 2 every quantized projection runs fused, so serving decode
+is dominated by the attention read over the cache. The XLA lowering
+dequantized the whole int8 cache into f32 *and* (with the old
+sequence-major layout) transposed it to bring the batch/head dims
+adjacent before the score matmul — two full HBM round trips over the
+largest live tensor, every token. This kernel reads the cache exactly
+once, in its storage dtype:
+
+  * single-query online-softmax attention, blocked along the sequence
+    (slot) axis; running (m, l, acc) stats live in VMEM scratch across
+    the S grid steps — the (G, S) score plane never touches HBM;
+  * the cache is **head-major** ``(B, KV, S, hd)`` so each (batch, head)
+    grid step streams a contiguous (bs, hd) tile — no transpose;
+  * int8 KV dequantization is fused *inside*: codes stream HBM→VMEM as
+    int8 (1 byte/elt) and the per-(slot, head) scale is applied to the
+    (G, bs) score columns / probability columns instead of the (bs, hd)
+    tile — the dense f32 cache never exists anywhere;
+  * per-row masking from explicit ``q_pos`` (B,) / ``k_pos`` (B, S)
+    position maps — co-batched rows decode at unrelated positions
+    (continuous batching) — plus an optional sliding window;
+  * GQA via the (KV, G) head layout: one grid step scores all G query
+    heads of a KV group against the group's single K/V stream.
+
+Grid: (B, KV, S/bs) with the sequence axis innermost. VMEM per step ≈
+k/v tiles (2·bs·hd·{1,4} B) + scores (G·bs·4) + acc (G·hd·4) ≪ 16 MiB
+at bs = 256. Forward-only by design (serving needs no VJP).
+
+Oracle: ``ref.decode_attention_ref``; dispatcher: ``ops.decode_attention_op``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, *rest,
+                   n_s: int, window: int, scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if quantized:
+        # dequant fused on the (G, bs) score columns — G·bs multiplies
+        # instead of bs·hd, and the f32 K tile never materializes
+        s = s * ks_ref[0, 0][None, :]
+    s = s * scale
+
+    qp = qp_ref[0, 0]                                # scalar position
+    kp = kp_ref[0]                                   # (bs,) slot positions
+    mask = (kp >= 0) & (kp <= qp)
+    if window > 0:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (G, bs)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    if quantized:
+        p = p * vs_ref[0, 0][None, :]                # fold V scales into p
+    v = v_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_prev * corr + pv
+
+    @pl.when(si == n_s - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_bkgd(
+    q: jax.Array,              # (B, KV, G, hd)
+    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, or int8 codes
+    v: jax.Array,              # (B, KV, S, hd)
+    q_pos: jax.Array,          # (B,) int32 per-row positions
+    k_pos: jax.Array,          # (B, S) int32 per-(row, slot) map; -1 empty
+    k_scale: jax.Array | None = None,   # (B, KV, S) f32 — int8 KV only
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,           # 0 ⇒ no sliding window
+    scale: float | None = None,
+    bs: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call; caller guarantees S % bs == 0. Returns
+    (B, KV, G, hd) in q.dtype."""
+    b, kv, g, hd = q.shape
+    s_len = k.shape[2]
+    bs = min(bs, s_len)
+    n_s = s_len // bs
+    quantized = k_scale is not None
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _decode_kernel, n_s=n_s, window=window, scale=float(scale),
+        quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, hh, ss: (bb, 0)),        # q_pos
+        pl.BlockSpec((1, bs), lambda bb, hh, ss: (bb, ss)),      # k_pos
+        pl.BlockSpec((1, 1, g, hd), lambda bb, hh, ss: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
+        pl.BlockSpec((1, 1, bs, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
+    ]
+    args = [q_pos.reshape(b, 1).astype(jnp.int32),
+            k_pos.astype(jnp.int32), q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bs), lambda bb, hh, ss: (bb, hh, ss)),
+            pl.BlockSpec((1, 1, bs), lambda bb, hh, ss: (bb, hh, ss)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_s),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, hh, ss: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),    # running accumulator
+        ],
+        interpret=interpret,
+    )(*args)

@@ -38,6 +38,11 @@ Three entry points, all sharing the same tile geometry:
   * :func:`mxint_lowrank_matmul_batched_2d` — leading grid axis over a
     stack of G independent weights (scan groups / MoE expert dispatch):
     x (G, M, K) · codes (G, K, N), one pallas_call for the whole stack.
+
+The 2d/fused entries also accept the **packed4** container (uint8, two
+4-bit codes per byte, ``packed=True``): nibbles are unpacked in the
+kernel body (:func:`_unpack_tile`), so the codes' HBM stream halves
+again vs int8 — the container is never pre-expanded in HBM.
 """
 from __future__ import annotations
 
@@ -49,9 +54,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _unpack_tile(packed: jax.Array) -> jax.Array:
+    """packed4 (bk/2, bn) uint8 tile → int8 (bk, bn) codes, in VMEM.
+
+    Row pairs interleave as [lo0, hi0, lo1, hi1, ...] — the layout
+    :func:`repro.quant.mxint.pack_codes_4bit` writes — via a stack +
+    reshape on the sublane axis (lane dim untouched, so Mosaic keeps the
+    tile resident). Reading the packed container instead of pre-expanded
+    int8 halves the codes' HBM stream."""
+    u = packed.astype(jnp.int32)
+    lo = (u & 0xF).astype(jnp.int8)
+    hi = ((u >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)     # sign-extend 4-bit 2's comp
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    m2, bn = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(m2 * 2, bn)
+
+
 def _dequant_tile(codes: jax.Array, scale: jax.Array,
-                  mx_block: int) -> jax.Array:
-    """int8 codes tile + per-block scales → f32 (bk, bn) weight tile."""
+                  mx_block: int, packed: bool = False) -> jax.Array:
+    """Codes tile (int8, or packed4 uint8) + per-block scales → f32
+    (bk, bn) weight tile."""
+    if packed:
+        codes = _unpack_tile(codes)
     codes = codes.astype(jnp.float32)
     bk, bn = codes.shape
     return (codes.reshape(bk // mx_block, mx_block, bn)
@@ -59,7 +84,7 @@ def _dequant_tile(codes: jax.Array, scale: jax.Array,
 
 
 def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
-            n_k: int, mx_block: int):
+            n_k: int, mx_block: int, packed: bool):
     """One (i, j, k) grid step: o[i,j] += x[i,k] @ dequant(codes[k,j])."""
     k = pl.program_id(2)
 
@@ -67,7 +92,7 @@ def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block)
+    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block, packed)
     x = x_ref[...].astype(jnp.float32)                # (bm, bk)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -80,7 +105,7 @@ def _kernel(x_ref, codes_ref, scale_ref, xl_ref, r_ref, o_ref, *,
 
 def mxint_lowrank_matmul_2d(
     x: jax.Array,        # (M, K)
-    codes: jax.Array,    # (K, N) int8
+    codes: jax.Array,    # (K, N) int8, or packed4 (K/2, N) uint8
     scale: jax.Array,    # (K/32, N) f32
     xl: jax.Array,       # (M, r) — precomputed x @ L
     r: jax.Array,        # (r, N)
@@ -88,12 +113,14 @@ def mxint_lowrank_matmul_2d(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Core pallas_call; caller guarantees M % bm == K % bk == N % bn == 0
-    and bk % mx_block == 0."""
+    and bk % mx_block == 0. ``packed`` reads the two-codes-per-byte
+    container and unpacks nibbles in the kernel body."""
     m, k = x.shape
-    _, n = codes.shape
+    n = codes.shape[1]
     mx_block = k // scale.shape[0]
     assert bk % mx_block == 0, (bk, mx_block)
     rr = max(r.shape[0], 1)
@@ -102,13 +129,15 @@ def mxint_lowrank_matmul_2d(
         r = jnp.zeros((1, n), x.dtype)
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
+    cdiv = 2 if packed else 1    # packed rows hold two codes each
 
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, mx_block=mx_block),
+        functools.partial(_kernel, n_k=n_k, mx_block=mx_block,
+                          packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // cdiv, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bk // mx_block, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bm, rr), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((rr, bn), lambda i, j, kk: (0, j)),
@@ -120,7 +149,7 @@ def mxint_lowrank_matmul_2d(
 
 
 def _fused_kernel(x_ref, codes_ref, scale_ref, l_ref, r_ref, o_ref, xl_ref,
-                  *, n_k: int, mx_block: int):
+                  *, n_k: int, mx_block: int, packed: bool):
     """Like ``_kernel`` but builds the xl = x·L sliver *inside* the pass:
     each K step accumulates the (bm, r) partial into a VMEM scratch, and
     the last K step multiplies it with the (r, bn) slice of R. The sliver
@@ -134,7 +163,7 @@ def _fused_kernel(x_ref, codes_ref, scale_ref, l_ref, r_ref, o_ref, xl_ref,
         xl_ref[...] = jnp.zeros_like(xl_ref)
 
     x = x_ref[...].astype(jnp.float32)                # (bm, bk)
-    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block)
+    w = _dequant_tile(codes_ref[...], scale_ref[...], mx_block, packed)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
     xl_ref[...] += jnp.dot(x, l_ref[...].astype(jnp.float32),
                            preferred_element_type=jnp.float32)
@@ -148,7 +177,7 @@ def _fused_kernel(x_ref, codes_ref, scale_ref, l_ref, r_ref, o_ref, xl_ref,
 
 def mxint_lowrank_matmul_fused_2d(
     x: jax.Array,        # (M, K)
-    codes: jax.Array,    # (K, N) int8
+    codes: jax.Array,    # (K, N) int8, or packed4 (K/2, N) uint8
     scale: jax.Array,    # (K/32, N) f32
     l: jax.Array,        # (K, r)
     r: jax.Array,        # (r, N)
@@ -156,12 +185,14 @@ def mxint_lowrank_matmul_fused_2d(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Single-pass y = x·dequant(Q) + (x·L)·R with the sliver accumulated
-    in-kernel. Caller guarantees the same divisibility as the 2d entry."""
+    in-kernel. Caller guarantees the same divisibility as the 2d entry;
+    ``packed`` unpacks the two-codes-per-byte container in-kernel."""
     m, k = x.shape
-    _, n = codes.shape
+    n = codes.shape[1]
     mx_block = k // scale.shape[0]
     assert bk % mx_block == 0, (bk, mx_block)
     rr = max(r.shape[0], 1)
@@ -170,13 +201,15 @@ def mxint_lowrank_matmul_fused_2d(
         r = jnp.zeros((1, n), x.dtype)
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
+    cdiv = 2 if packed else 1
 
     return pl.pallas_call(
-        functools.partial(_fused_kernel, n_k=n_k, mx_block=mx_block),
+        functools.partial(_fused_kernel, n_k=n_k, mx_block=mx_block,
+                          packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // cdiv, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bk // mx_block, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bk, rr), lambda i, j, kk: (kk, 0)),
             pl.BlockSpec((rr, bn), lambda i, j, kk: (0, j)),

@@ -6,11 +6,14 @@ interpret-mode fallback so the same call sites run on CPU (validation)
 and TPU (deployment). ``repro.models.linear`` routes here for the fused
 Q + LR matmul path (``ctx.fused`` / ``ctx.use_pallas``).
 
-``qlr_matmul`` / ``qlr_matmul_batched`` are the *deployment* entry
-points: on TPU (or with ``kernel=True``) they run the Pallas kernel; on
-other backends they lower to an XLA formulation that keeps the low-rank
-correction as an activation sliver and never materializes the dense
-``L·R`` product — the best non-Pallas lowering of the same math, so the
+``qlr_matmul`` / ``qlr_matmul_batched`` / ``decode_attention_op`` are
+the *deployment* entry points: on TPU (or with ``kernel=True``) they run
+the Pallas kernel; on other backends they lower to an XLA formulation
+that keeps the low-rank correction as an activation sliver and never
+materializes the dense ``L·R`` product (matmuls), or feeds the int8 KV
+codes straight into the score/value GEMMs with the scales folded into
+the score planes and never materializes the dequantized cache (decode
+attention) — the best non-Pallas lowering of the same math, so the
 ``fused="auto"`` serving path is fast everywhere.
 """
 from __future__ import annotations
@@ -45,7 +48,7 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
                    static_argnames=("bm", "bn", "bk", "fuse_sliver"))
 def mxint_lowrank_matmul(
     x: jax.Array,        # (..., K)
-    codes: jax.Array,    # (K, N) int8
+    codes: jax.Array,    # (K, N) int8, or packed4 (K/2, N) uint8
     scale: jax.Array,    # (K/B, N) f32
     l: jax.Array,        # (K, r)
     r: jax.Array,        # (r, N)
@@ -58,8 +61,14 @@ def mxint_lowrank_matmul(
 
     ``fuse_sliver`` selects the single-pass kernel that accumulates
     ``x · L`` in VMEM scratch instead of precomputing it as a separate
-    GEMM — the decode-shape variant (activations fit one M block)."""
-    k, n = codes.shape
+    GEMM — the decode-shape variant (activations fit one M block).
+
+    A uint8 ``codes`` array is the packed4 container (two codes per
+    byte); the nibbles are unpacked *inside* the kernel, so the packed
+    path streams half the code bytes from HBM."""
+    packed = codes.dtype == jnp.uint8
+    k = codes.shape[0] * (2 if packed else 1)
+    n = codes.shape[1]
     lead = x.shape[:-1]
     xf = x.reshape(-1, k)
     m = xf.shape[0]
@@ -77,7 +86,7 @@ def mxint_lowrank_matmul(
     if fuse_sliver:
         y = mxint_lowrank_matmul_fused_2d(
             xp, cp, sp, l, rp, bm=bmm, bn=bnn, bk=bk,
-            interpret=_interpret())
+            packed=packed, interpret=_interpret())
     else:
         # the (M, r) sliver: r ≤ 64 ≪ K, negligible FLOPs, one fused GEMM
         xl = xf.astype(jnp.float32) @ l.astype(jnp.float32) \
@@ -85,7 +94,7 @@ def mxint_lowrank_matmul(
         xlp = _pad_to(xl, bmm, 0)
         y = mxint_lowrank_matmul_2d(
             xp, cp, sp, xlp, rp, bm=bmm, bn=bnn, bk=bk,
-            interpret=_interpret())
+            packed=packed, interpret=_interpret())
     y = y[:m, :n]
     return y.reshape(*lead, n).astype(x.dtype)
 
@@ -167,9 +176,16 @@ def qlr_matmul(x, codes, scale, l, r, *, kernel=None) -> jax.Array:
 
     ``kernel=None`` auto-selects: Pallas on TPU, fused-XLA elsewhere.
     ``kernel=True`` forces the Pallas kernel (interpret mode off-TPU —
-    numerics validation); ``kernel=False`` forces the XLA path."""
+    numerics validation); ``kernel=False`` forces the XLA path.
+
+    uint8 ``codes`` = the packed4 container: the kernel unpacks nibbles
+    in VMEM (half the HBM code traffic); the XLA path unpacks up front
+    (XLA has no sub-byte dot, so int8 expansion is its best lowering)."""
     if kernel is None:
         kernel = jax.default_backend() == "tpu"
+    if not kernel and codes.dtype == jnp.uint8:
+        from repro.quant.mxint import unpack_codes_4bit
+        codes = unpack_codes_4bit(codes)
     if kernel:
         # Decode regime (activations fit one M block): accumulate the
         # x·L sliver inside the kernel pass — x is already VMEM-resident
@@ -211,6 +227,99 @@ def mxint_quantize(
         wp, bits=bits, mx_block=mx_block, bm=bmm,
         bn=min(bn, wp.shape[1]), interpret=_interpret())
     return codes[:, :n], exps[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: Pallas flash-decode on TPU, fused-XLA lowering elsewhere
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("window", "scale"))
+def _decode_attention_xla(q, k, v, q_pos, k_pos, k_scale, v_scale,
+                          window=0, scale=None):
+    """Fused-XLA lowering of single-query attention over the head-major
+    ``(B, KV, S, hd)`` cache. int8 codes feed the score/value matmuls
+    directly and the per-(slot, head) scales are applied to the (B, KV,
+    G, S) score / probability planes — the dense f32 cache is never
+    materialized, and the head-major layout means the batched GEMMs run
+    without transposing the cache (the old sequence-major einsum
+    relayouted the whole cache every step)."""
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    if k_scale is not None:
+        s = s * k_scale.astype(jnp.float32)[:, :, None, :]
+    s = s * scale
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])        # (B, S)
+    if window > 0:
+        mask = mask & (q_pos[:, None] - k_pos < window)
+    neg = -0.7 * float(jnp.finfo(jnp.float32).max)
+    s = jnp.where(mask[:, None, None, :], s, neg)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.astype(jnp.float32)[:, :, None, :]
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "scale", "bs", "interpret"))
+def _decode_attention_pallas(q, k, v, q_pos, k_pos, k_scale, v_scale,
+                             window=0, scale=None, bs=256, interpret=False):
+    """Pad the slot axis to the kernel block and run the flash-decode
+    kernel (pad slots carry k_pos = -1, so they mask out). The block is
+    rounded up to the 32-row sublane tile (the int8 minimum; also
+    satisfies f32's 8) — interpret mode accepts any block shape, Mosaic
+    on real TPU does not."""
+    from repro.kernels.decode_attention import flash_decode_bkgd
+    s_len = k.shape[2]
+    bs = min(bs, max(s_len, 1))
+    bs = -(-bs // 32) * 32
+    pad = (-s_len) % bs
+    if pad:
+        widths4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths4)
+        v = jnp.pad(v, widths4)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
+    return flash_decode_bkgd(q, k, v, q_pos, k_pos, k_scale, v_scale,
+                             window=window, scale=scale, bs=bs,
+                             interpret=interpret)
+
+
+def decode_attention_op(
+    q: jax.Array,              # (B, KV, G, hd)
+    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, or int8 codes
+    v: jax.Array,
+    q_pos: jax.Array,          # (B,) per-row positions
+    k_pos: jax.Array,          # (B, S) per-(row, slot) map; -1 ⇒ empty
+    *,
+    k_scale: jax.Array = None,  # (B, KV, S) f32 — int8 KV only
+    v_scale: jax.Array = None,
+    window: int = 0,
+    scale: float = None,
+    kernel: bool = None,
+) -> jax.Array:
+    """Single-query attention over the slot cache — deployment entry.
+
+    ``kernel=None`` auto-selects: the Pallas flash-decode kernel on TPU,
+    the fused-XLA lowering elsewhere. ``kernel=True`` forces the kernel
+    (interpret mode off-TPU — numerics validation); ``kernel=False``
+    forces the XLA path. Both read int8 KV codes directly and fold the
+    scales into the score/probability planes; neither materializes the
+    dequantized cache. ``scale`` overrides the 1/√hd score scale (the
+    MLA latent path scores in the latent dim but scales by the head
+    dim). Returns (B, KV, G, hd) in q.dtype."""
+    if kernel is None:
+        kernel = jax.default_backend() == "tpu"
+    fn = _decode_attention_pallas if kernel else _decode_attention_xla
+    kw = {"interpret": _interpret()} if kernel else {}
+    return fn(q, k, v, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32),
+              k_scale, v_scale, window=window, scale=scale, **kw)
 
 
 @functools.partial(jax.jit,

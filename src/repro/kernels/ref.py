@@ -53,6 +53,36 @@ def mxint_quantize_ref(w: jax.Array, bits: int = 3,
     return (codes.reshape(m, n).astype(jnp.int8), exp.astype(jnp.int8))
 
 
+def decode_attention_ref(
+    q: jax.Array,       # (B, KV, G, hd)
+    k: jax.Array,       # (B, KV, S, hd) head-major; f32/bf16 or int8 codes
+    v: jax.Array,
+    q_pos: jax.Array,   # (B,) per-row positions
+    k_pos: jax.Array,   # (B, S) per-(row, slot) positions; -1 empty
+    k_scale: jax.Array | None = None,   # (B, KV, S) — int8 KV only
+    v_scale: jax.Array | None = None,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense-softmax oracle for the flash-decode kernel: dequantize the
+    whole cache, one masked softmax per row. Returns (B, KV, G, hd)."""
+    hd = q.shape[-1]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), kf) * scale
+    mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])        # (B, S)
+    if window > 0:
+        mask = mask & (q_pos[:, None] - k_pos < window)
+    neg = -0.7 * float(jnp.finfo(jnp.float32).max)
+    s = jnp.where(mask[:, None, None, :], s, neg)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, vf).astype(q.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array,       # (H, Sq, hd)
     k: jax.Array,       # (H, Sk, hd)

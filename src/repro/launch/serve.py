@@ -39,9 +39,13 @@ def main(argv=None):
     p.add_argument("--prefill-len", type=int, default=32,
                    help="compiled prompt pad length (continuous)")
     p.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
-                   help="fused Q+LR matmul path: auto (kernel on TPU, "
-                        "fused-XLA elsewhere), on (force kernel; interpret "
-                        "off-TPU), off (dequant-then-matmul)")
+                   help="fused serving path — Q+LR matmuls AND decode "
+                        "attention over the slot cache: auto (Pallas "
+                        "kernels on TPU, fused-XLA elsewhere), on (force "
+                        "kernels; interpret off-TPU), off (dequant-then-"
+                        "matmul / dequantize-the-cache baselines). With "
+                        "--kv int8 the flash-decode path reads the codes "
+                        "directly; the dense f32 cache never materializes")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 

@@ -5,14 +5,26 @@ Sequence-parallel memory safety: training/prefill attention is *blockwise*
 score matrix never materializes — mandatory for the 32k prefill shapes.
 Decode (Sq = 1) uses direct attention over the cache.
 
-Caches (slot-based, continuous-batching ready):
-  full attn : {"k": (B, S_max, KV, hd), "v": …, "pos": (B,)} append-at-pos
+Caches (slot-based, continuous-batching ready, **head-major**):
+  full attn : {"k": (B, KV, S_max, hd), "v": …, "pos": (B,)} append-at-pos
   local attn: ring buffer of ``window`` slots + per-(row, slot) absolute
               positions
   MLA       : compressed {"ckv": (B, S_max, r_kv), "kpe": (B, S_max, pe)}
               with the *absorbed* decode formulation (q folded through the
               up-projections, so the per-step cost scales with r_kv, not
               H·hd·S).
+
+K/V pages are stored head-major — (B, KV, S, hd), int8 scales
+(B, KV, S) — because decode reads them thousands of times per prefill
+write: the score/value GEMMs batch over (B, KV), so head-major streams
+contiguous (S, hd) tiles with **no cache relayout** (the old
+sequence-major layout made XLA transpose the whole cache every step,
+the single largest decode HBM term), and it is the layout the Pallas
+flash-decode kernel (``kernels.decode_attention``) tiles over. Decode
+attention dispatches through ``kernels.ops.decode_attention_op`` under
+``ctx.fused`` (kernel on TPU, fused-XLA elsewhere — int8 codes feed the
+matmuls directly, scales fold into the score/probability planes);
+``fused="off"`` keeps the legacy dequantize-then-einsum lowering.
 
 Every batch row carries its *own* write position (``pos``: (B,)) and its
 own per-slot validity/position map (``slot_pos``: (B, slots), -1 ⇒ empty
@@ -31,8 +43,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope
-from repro.models.linear import (Ctx, dp_axes_of, hint, init_linear, linear,
-                                 weight_of)
+from repro.models.linear import (Ctx, dp_axes_of, fused_mode, hint,
+                                 init_linear, linear, weight_of)
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -133,25 +145,26 @@ def blockwise_attention(
 
 def decode_attention(
     q: jax.Array,              # (B, 1, KV, G, hd)
-    k: jax.Array,              # (B, S, KV, hd)
+    k: jax.Array,              # (B, KV, S, hd) head-major cache pages
     v: jax.Array,
     q_pos: jax.Array,          # (B,) per-row absolute positions
     k_pos: jax.Array,          # (B, S) per-(row, slot) positions; -1 invalid
     window: Optional[int] = None,
 ) -> jax.Array:
-    """Single-token attention over a cache (no chunking needed).
-
-    Each batch row masks against its own slot map, so co-batched rows may
-    sit at arbitrary, unrelated positions (continuous batching)."""
+    """Single-token attention over a dequantized cache (the legacy
+    ``fused="off"`` lowering; ``kernels.ops.decode_attention_op`` is the
+    deployment path). Each batch row masks against its own slot map, so
+    co-batched rows may sit at arbitrary, unrelated positions
+    (continuous batching)."""
     hd = q.shape[-1]
-    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+    s = jnp.einsum("bqkgd,bksd->bkgqs", q, k,
                    preferred_element_type=jnp.float32) / (hd ** 0.5)
     mask = (k_pos >= 0) & (k_pos <= q_pos[:, None])      # (B, S)
     if window is not None:
         mask = mask & (q_pos[:, None] - k_pos < window)
     s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+    out = jnp.einsum("bkgqs,bksd->bqkgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
 
@@ -174,22 +187,26 @@ def init_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
 
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
                     dtype=jnp.float32) -> Dict:
-    """``dtype=jnp.int8`` enables quantized KV: codes + per-(b, slot, head)
+    """Head-major K/V pages: (B, KV, slots, hd) — see the module
+    docstring for why decode wants this layout.
+
+    ``dtype=jnp.int8`` enables quantized KV: codes + per-(b, head, slot)
     f32 scales. Halves (vs bf16) the dominant decode HBM footprint — the
     quantization-native serving option that lets e.g. qwen-32B's 32k×128
     MHA cache fit a single v5e pod. Dequantization fuses into the
-    attention matmuls under XLA."""
+    decode-attention kernel / XLA score matmuls
+    (``kernels.ops.decode_attention_op``)."""
     slots = min(cfg.window, max_len) if local else max_len
     kv, hd = cfg.n_kv_heads, cfg.head_dim_
     cache = {
-        "k": jnp.zeros((batch, slots, kv, hd), dtype),
-        "v": jnp.zeros((batch, slots, kv, hd), dtype),
+        "k": jnp.zeros((batch, kv, slots, hd), dtype),
+        "v": jnp.zeros((batch, kv, slots, hd), dtype),
         "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
     if dtype == jnp.int8:
-        cache["k_scale"] = jnp.zeros((batch, slots, kv), jnp.float32)
-        cache["v_scale"] = jnp.zeros((batch, slots, kv), jnp.float32)
+        cache["k_scale"] = jnp.zeros((batch, kv, slots), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, kv, slots), jnp.float32)
     return cache
 
 
@@ -263,9 +280,13 @@ def _populate_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
     is empty (slot_pos = -1). Rows may have different lengths, which is
     what lets the serving engine right-pad prompts to one compiled
     prefill shape.
+
+    ``k``/``v`` arrive sequence-major from the projection (B, S, KV, hd);
+    the gather runs in that layout and one transpose lands them in the
+    cache's head-major pages — paid once per prefill, never at decode.
     """
     b, s = k.shape[:2]
-    slots = cache["k"].shape[1]
+    slots = cache["k"].shape[2]
     j = jnp.arange(slots)[None, :]                      # (1, slots)
     last = lengths[:, None] - 1                         # (B, 1)
     p = j + slots * jnp.floor_divide(last - j, slots)   # (B, slots)
@@ -281,14 +302,14 @@ def _populate_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
         kc, ksc = kv_quantize(k)
         vc, vsc = kv_quantize(v)
         m3 = valid[..., None]
-        cache["k_scale"] = jnp.where(m3, gather(ksc), 0.0)
-        cache["v_scale"] = jnp.where(m3, gather(vsc), 0.0)
+        cache["k_scale"] = jnp.where(m3, gather(ksc), 0.0).transpose(0, 2, 1)
+        cache["v_scale"] = jnp.where(m3, gather(vsc), 0.0).transpose(0, 2, 1)
         k, v = kc, vc
     m4 = valid[..., None, None]
     cache["k"] = jnp.where(m4, gather(k).astype(cache["k"].dtype),
-                           jnp.zeros((), cache["k"].dtype))
+                           jnp.zeros((), cache["k"].dtype)).transpose(0, 2, 1, 3)
     cache["v"] = jnp.where(m4, gather(v).astype(cache["v"].dtype),
-                           jnp.zeros((), cache["v"].dtype))
+                           jnp.zeros((), cache["v"].dtype)).transpose(0, 2, 1, 3)
     cache["slot_pos"] = jnp.where(valid, p, -1).astype(jnp.int32)
     cache["pos"] = lengths.astype(jnp.int32)
     return cache
@@ -351,24 +372,38 @@ def attention_step(
     positions = pos[:, None].astype(jnp.int32)  # (B, 1) per-row RoPE phase
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
 
-    slots = cache["k"].shape[1]
+    slots = cache["k"].shape[2]
     slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
     rows = jnp.arange(b)
     new_cache = dict(cache)
     if "k_scale" in cache:  # int8 KV: quantize the appended token
         kc, ksc = kv_quantize(k)
         vc, vsc = kv_quantize(v)
-        new_cache["k_scale"] = cache["k_scale"].at[rows, slot].set(ksc[:, 0])
-        new_cache["v_scale"] = cache["v_scale"].at[rows, slot].set(vsc[:, 0])
+        new_cache["k_scale"] = cache["k_scale"].at[rows, :, slot].set(ksc[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[rows, :, slot].set(vsc[:, 0])
         k, v = kc, vc
-    knew = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
-    vnew = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    knew = cache["k"].at[rows, :, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vnew = cache["v"].at[rows, :, slot].set(v[:, 0].astype(cache["v"].dtype))
     spos = cache["slot_pos"].at[rows, slot].set(pos)
     new_cache.update(k=knew, v=vnew, slot_pos=spos, pos=pos + 1)
 
     window = cfg.window if local else None
-    kd, vd = _cache_kv(new_cache, x.dtype)
-    out = decode_attention(q, kd, vd, pos, spos, window=window)
+    mode = fused_mode(ctx)
+    if mode == "off":
+        # legacy lowering: dequantize the whole cache, dense softmax
+        kd, vd = _cache_kv(new_cache, x.dtype)
+        out = decode_attention(q, kd, vd, pos, spos, window=window)
+    else:
+        # deployment path: flash-decode kernel (TPU / interpret under
+        # ``fused="on"``) or the fused-XLA lowering — the cache is read
+        # once, in its storage dtype, straight from the head-major pages
+        from repro.kernels.ops import decode_attention_op
+        out = decode_attention_op(
+            q[:, 0], new_cache["k"], new_cache["v"], pos, spos,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=window or 0, kernel=(mode == "kernel"))[:, None]
+        out = out.astype(x.dtype)
     h_ax = "model" if attn_strategy(ctx, cfg) == "heads" else None
     out = hint(ctx, out, dp_axes_of(ctx), None, h_ax, None, None)
     out = out.reshape(b, 1, cfg.n_heads * hd)
@@ -515,12 +550,39 @@ def mla_seq(
     return y, cache
 
 
+def absorb_mla_weights(mixer: Dict, dtype=jnp.float32) -> Dict:
+    """Precompute the dense up-projections for absorbed MLA decode.
+
+    ``mla_step`` folds q through W_uk and the attention output through
+    W_uv every token; with a quantized mixer, materializing those via
+    ``weight_of`` *inside* the compiled step re-runs dequant + the dense
+    L·R product per decode step. The serving engine calls this once per
+    (params, engine) session and threads the result through the params
+    tree — ``mla_step`` picks up the ``w_uk_dense``/``w_uv_dense`` keys
+    and skips the per-step materialization. Works on scan-stacked mixers
+    too (leading group dims pass through ``weight_of``)."""
+    out = dict(mixer)
+    out["w_uk_dense"] = weight_of(mixer["w_uk"], dtype)
+    out["w_uv_dense"] = weight_of(mixer["w_uv"], dtype)
+    return out
+
+
 def mla_step(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     prefix: str = "attn",
 ) -> Tuple[jax.Array, Dict]:
     """Absorbed-formulation decode: score/value in the r_kv latent space.
-    Per-row positions: each row appends at its own ``pos``."""
+    Per-row positions: each row appends at its own ``pos``.
+
+    The dense absorbed projections come from ``w_uk_dense``/``w_uv_dense``
+    when the engine pre-absorbed them (:func:`absorb_mla_weights`);
+    otherwise they materialize in-step (training-grade fallback). When
+    ``ctx.fused`` resolves to the kernel, the latent score/value
+    attention routes through ``kernels.ops.decode_attention_op``
+    (KV = 1, G = H, the latent dim as head_dim) — the flash-decode
+    kernel on TPU; the XLA modes keep the in-place two-einsum latent
+    formulation (the latent cache is float, so there is no dequant to
+    fuse off-kernel)."""
     b = x.shape[0]
     hd, pe, h, r = cfg.head_dim_, cfg.rope_head_dim, cfg.n_heads, cfg.kv_lora_rank
     pos = cache["pos"]                        # (B,)
@@ -534,21 +596,47 @@ def mla_step(
     smax = ckv.shape[1]
 
     # absorb: q' = q_nope @ W_uk per head → latent space
-    w_uk = weight_of(params["w_uk"], jnp.float32).reshape(r, h, hd)
+    w_uk = params.get("w_uk_dense")
+    if w_uk is None:
+        w_uk = weight_of(params["w_uk"], jnp.float32)
+    w_uk = w_uk.astype(jnp.float32).reshape(r, h, hd)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))  # (B,1,H,r)
+                       w_uk)  # (B,1,H,r)
     q_lat = hint(ctx, q_lat, dp_axes_of(ctx), None, "model", None)
-    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
-              + jnp.einsum("bqhp,bsp->bhqs", q_pe.astype(jnp.float32),
-                           kpe.astype(jnp.float32)))
-    scores = scores / ((hd + pe) ** 0.5)
-    k_pos = jnp.arange(smax)
-    mask = k_pos[None, :] <= pos[:, None]     # (B, smax) per-row causality
-    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv.astype(jnp.float32))
-    w_uv = weight_of(params["w_uv"], jnp.float32).reshape(r, h, hd)
-    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv.astype(jnp.float32))
+    scale = 1.0 / ((hd + pe) ** 0.5)
+    if fused_mode(ctx) == "kernel":
+        # latent-space flash decode: one fused score over [ckv ‖ kpe]
+        # (KV = 1, G = H); V is ckv padded to the score width and sliced
+        # back. The concat/pad copies cost one cache pass, bought back
+        # by the (B, H, S) probability plane never leaving VMEM — a win
+        # only on the kernel path, so the XLA modes keep the two-einsum
+        # form below, which reads ckv/kpe in place with no copies.
+        from repro.kernels.ops import decode_attention_op
+        q_cat = jnp.concatenate(
+            [q_lat, q_pe.astype(jnp.float32)], -1)[:, 0][:, None]  # (B,1,H,r+pe)
+        k_cat = jnp.concatenate(
+            [ckv, kpe], -1).astype(jnp.float32)[:, None]           # (B,1,S,r+pe)
+        v_cat = jnp.pad(ckv.astype(jnp.float32),
+                        ((0, 0), (0, 0), (0, pe)))[:, None]
+        k_pos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
+        out_lat = decode_attention_op(
+            q_cat, k_cat, v_cat, pos, k_pos, scale=scale,
+            kernel=True)[:, 0][:, None, :, :r]
+    else:
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+                  + jnp.einsum("bqhp,bsp->bhqs", q_pe.astype(jnp.float32),
+                               kpe.astype(jnp.float32)))
+        scores = scores * scale
+        k_pos = jnp.arange(smax)
+        mask = k_pos[None, :] <= pos[:, None]     # (B, smax) per-row causality
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv.astype(jnp.float32))
+    w_uv = params.get("w_uv_dense")
+    if w_uv is None:
+        w_uv = weight_of(params["w_uv"], jnp.float32)
+    w_uv = w_uv.astype(jnp.float32).reshape(r, h, hd)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv)
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
     y = linear(ctx, params["wo"], out, f"{prefix}.wo")
     return y, {"ckv": ckv, "kpe": kpe, "pos": pos + 1}

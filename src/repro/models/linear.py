@@ -158,14 +158,25 @@ def _fused_qlr(params: Dict[str, jax.Array], x: jax.Array,
                mode: str) -> jax.Array:
     """Route one quantized projection through the fused Q+LR matmul.
     Handles the packed4 container and MXINT row padding (codes may carry
-    padding rows when the input dim isn't a block multiple)."""
+    padding rows when the input dim isn't a block multiple).
+
+    On the kernel path the packed4 container is passed through *as
+    packed uint8* — the Pallas kernel unpacks nibbles in VMEM, so the
+    codes stream HBM at 0.5 byte/code. The XLA path pre-expands to int8
+    (no sub-byte dot in XLA)."""
     from repro.kernels import ops as kops  # lazy: keeps import cycles out
     if "packed" in params:
-        codes = unpack_codes_4bit(params["packed"])
+        if mode == "kernel":
+            codes = params["packed"]
+            rows = codes.shape[-2] * 2
+        else:
+            codes = unpack_codes_4bit(params["packed"])
+            rows = codes.shape[-2]
     else:
         codes = params["codes"]
+        rows = codes.shape[-2]
     l = params["l"]
-    pad = codes.shape[-2] - x.shape[-1]
+    pad = rows - x.shape[-1]
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
         l = jnp.pad(l, [(0, pad), (0, 0)])

@@ -108,14 +108,16 @@ def pack_codes_4bit(codes: jax.Array) -> jax.Array:
 
 
 def unpack_codes_4bit(packed: jax.Array) -> jax.Array:
-    """Inverse of :func:`pack_codes_4bit` → int8 codes in [-8, 7]."""
+    """Inverse of :func:`pack_codes_4bit` → int8 codes in [-8, 7].
+
+    Rows live on axis -2; leading stack dims (scan groups, MoE expert
+    stacks) pass through. Interleave via stack+reshape — a scatter into
+    ``out[0::2]`` would materialize an extra full-size zero array."""
     lo = (packed & 0xF).astype(jnp.int8)
     hi = ((packed >> 4) & 0xF).astype(jnp.int8)
     # sign-extend 4-bit two's complement
     lo = jnp.where(lo > 7, lo - 16, lo)
     hi = jnp.where(hi > 7, hi - 16, hi)
-    m2, n = packed.shape
-    out = jnp.zeros((m2 * 2, n), dtype=jnp.int8)
-    out = out.at[0::2].set(lo)
-    out = out.at[1::2].set(hi)
-    return out
+    lead, (m2, n) = packed.shape[:-2], packed.shape[-2:]
+    # (…, m2, 2, n) → rows interleave as [lo0, hi0, lo1, hi1, …]
+    return jnp.stack([lo, hi], axis=-2).reshape(lead + (m2 * 2, n))

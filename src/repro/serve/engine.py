@@ -24,8 +24,15 @@ quantization-native option that makes 32k-context MHA models fit — and
 per-request latency metrics (TTFT, end-to-end latency) plus scheduler
 occupancy counters. The ``fused`` switch routes every quantized
 projection in prefill *and* per-step decode through the fused Q + LR
-matmul (``repro.kernels.ops.qlr_matmul``), so the dequantized weight
-never round-trips HBM on TPU.
+matmul (``repro.kernels.ops.qlr_matmul``) **and** per-step decode
+attention through the flash-decode path
+(``repro.kernels.ops.decode_attention_op``: Pallas kernel on TPU,
+fused-XLA elsewhere — int8 KV codes are read straight from the
+head-major cache pages and dequantized in VMEM / on the score planes),
+so neither the dequantized weight nor the dequantized cache ever
+round-trips HBM. MLA models additionally get their absorbed decode
+projections (W_uk / W_uv) materialized once per engine session instead
+of once per token (see ``absorbed_params`` below).
 
 API: ``submit()`` / ``step()`` / ``drain()`` for streaming use;
 ``generate()`` runs a whole batch of requests through either scheduler.
@@ -42,8 +49,61 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Ctx, decode_step, init_cache, prefill
+from repro.models.attention import absorb_mla_weights
 from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.slots import KV_DTYPES, SlotKVCache
+
+
+# --------------------------------------------------------------------------
+# MLA absorbed-weight cache: ``mla_step`` folds q / the attention output
+# through W_uk / W_uv each token; materializing those dense projections
+# from the quantized Q+LR params *inside* the compiled decode step would
+# re-run dequant + the L·R product per token. Absorb once per params
+# tree instead, keyed on identity (repeat Engine constructions over the
+# same quantized model — A/B benchmark sweeps — reuse the absorption).
+# --------------------------------------------------------------------------
+# single entry: consecutive engines over the same params (mode/kv-dtype
+# A/B sweeps) share the absorption; a new params tree evicts the old one
+# immediately, so at most one model's absorbed weights stay resident.
+# Deliberate trade-off: the entry outlives its engines (that is what
+# makes A/B sweeps hit), retaining at most one model until the next
+# absorption or a non-MLA engine construction; call
+# release_absorbed_params() to free it eagerly.
+_absorb_cache: Optional[tuple] = None  # (params, absorbed)
+
+
+def _absorb_mla_tree(p):
+    """Copy of the params tree with every MLA mixer (any dict carrying
+    ``w_uk``/``w_uv``) augmented with its dense absorbed projections.
+    Scan-stacked group mixers pass through with their leading dim."""
+    if isinstance(p, dict):
+        if "w_uk" in p and "w_uv" in p:
+            return absorb_mla_weights(p)
+        return {k: _absorb_mla_tree(v) for k, v in p.items()}
+    if isinstance(p, list):
+        return [_absorb_mla_tree(v) for v in p]
+    if isinstance(p, tuple):
+        return tuple(_absorb_mla_tree(v) for v in p)
+    return p
+
+
+def absorbed_params(params):
+    """Identity-cached :func:`_absorb_mla_tree` (single entry)."""
+    global _absorb_cache
+    if _absorb_cache is not None and _absorb_cache[0] is params:
+        return _absorb_cache[1]
+    out = _absorb_mla_tree(params)
+    _absorb_cache = (params, out)
+    return out
+
+
+def release_absorbed_params() -> None:
+    """Drop the cached absorption so the old model's params + dense
+    W_uk/W_uv become collectable. Called when an engine is built over a
+    non-MLA model (the cache can only be stale then); live MLA engines
+    keep their own reference to the absorbed tree."""
+    global _absorb_cache
+    _absorb_cache = None
 
 
 @dataclasses.dataclass
@@ -86,7 +146,14 @@ class Engine:
             raise ValueError(f"unknown scheduler {sc.scheduler!r}")
         if sc.fused not in ("auto", "on", "off"):
             raise ValueError(f"unknown fused mode {sc.fused!r}")
-        self.params = params
+        # absorb MLA decode weights once per engine session (identity-
+        # cached across engines; switching to a non-MLA model frees any
+        # previous model's cached absorption)
+        if cfg.attn_kind == "mla":
+            self.params = absorbed_params(params)
+        else:
+            self.params = params
+            release_absorbed_params()
         self.cfg = cfg
         self.sc = sc
         self.extra = extra_inputs or {}

@@ -233,18 +233,18 @@ def spec_for_cache(
             return True
         return False
 
-    if leaf in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale") \
-            and ndim - b_dim >= 3:
-        # (B, S, KV, hd): prefer KV heads; else shard the SEQUENCE dim
-        # (flash-decode: scores stay local, only softmax stats and the
-        # (B,1,H,hd) partial outputs all-reduce — sharding head_dim would
-        # all-reduce full score rows instead)
-        if ndim - b_dim == 4:
-            if not try_dim(b_dim + 2):
-                try_dim(b_dim + 1)
-        else:  # per-(b, slot, head) int8 KV scales
-            if not try_dim(b_dim + 2):
-                try_dim(b_dim + 1)
+    if leaf in ("k", "v", "k_scale", "v_scale") and ndim - b_dim >= 3:
+        # head-major slot cache — k/v (B, KV, S, hd), scales (B, KV, S):
+        # prefer KV heads (axis right after batch); else shard the
+        # SEQUENCE dim (flash-decode: scores stay local, only softmax
+        # stats and the (B,1,H,hd) partial outputs all-reduce — sharding
+        # head_dim would all-reduce full score rows instead)
+        if not try_dim(b_dim + 1):
+            try_dim(b_dim + 2)
+    elif leaf in ("cross_k", "cross_v") and ndim - b_dim >= 3:
+        # cross-attention memories stay sequence-major (B, S, KV, hd)
+        if not try_dim(b_dim + 2):
+            try_dim(b_dim + 1)
     elif leaf in ("ckv", "kpe") and ndim - b_dim == 3:
         try_dim(b_dim + 1)            # (B, S, r_kv): sequence dim
     elif leaf in ("c", "n", "h", "cell", "state", "conv") or ndim >= 2:

@@ -1,0 +1,244 @@
+"""Numerics tier for the flash-decode attention serving path.
+
+Pins ``kernels.ops.decode_attention_op`` — both entries (Pallas kernel
+in interpret mode on CPU CI, fused-XLA lowering) — to the dense-softmax
+oracle in ``kernels/ref.py`` across KV dtypes (f32 / bf16 / int8 codes +
+scales), ragged per-row slot maps, sliding window on/off, and GQA group
+counts. On top: mode-parity for ``attention_step`` / ``mla_step`` (the
+model-layer call sites) and engine-level token parity across
+``fused=auto|on|off`` for every KV cache dtype.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import decode_attention_op
+from repro.kernels.ref import decode_attention_ref
+from repro.models.attention import (absorb_mla_weights, attention_step,
+                                    attention_seq, decode_attention,
+                                    init_attention, init_attn_cache,
+                                    init_mla, init_mla_cache,
+                                    mla_seq, mla_step)
+from repro.models.linear import Ctx
+
+
+def _case(key, b, kv, g, hd, s, ragged=True):
+    q = jax.random.normal(key, (b, kv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, hd))
+    # per-row positions: co-batched rows at unrelated decode depths
+    q_pos = jnp.asarray([s - 1 - (3 * i) % max(s // 2, 1) for i in range(b)],
+                        jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    if ragged:  # empty slots mid-cache (continuous batching / ring wrap)
+        k_pos = k_pos.at[0, s // 3: s // 3 + 2].set(-1)
+        if b > 1:
+            k_pos = k_pos.at[1, : s // 4].set(-1)
+    return q, k, v, q_pos, k_pos
+
+
+def _int8(k, v):
+    amax = jnp.max(jnp.abs(k), axis=-1)
+    ks = jnp.maximum(amax, 1e-8) / 127.0
+    kc = jnp.clip(jnp.round(k / ks[..., None]), -127, 127).astype(jnp.int8)
+    amax = jnp.max(jnp.abs(v), axis=-1)
+    vs = jnp.maximum(amax, 1e-8) / 127.0
+    vc = jnp.clip(jnp.round(v / vs[..., None]), -127, 127).astype(jnp.int8)
+    return kc, ks, vc, vs
+
+
+# ---------------------------------------------------------------------------
+# decode_attention_op (Pallas interpret + fused-XLA) vs the jnp oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv,g", [(1, 1), (2, 4), (4, 2)])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("kernel", [True, False])
+def test_decode_op_matches_ref_float(kv, g, window, kernel):
+    key = jax.random.PRNGKey(kv * 10 + g)
+    q, k, v, q_pos, k_pos = _case(key, 3, kv, g, 32, 100)
+    y = decode_attention_op(q, k, v, q_pos, k_pos, window=window,
+                            kernel=kernel)
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("kernel", [True, False])
+def test_decode_op_kv_dtypes(dtype, kernel):
+    key = jax.random.PRNGKey(7)
+    q, k, v, q_pos, k_pos = _case(key, 2, 2, 2, 64, 96)
+    y = decode_attention_op(q, k.astype(dtype), v.astype(dtype),
+                            q_pos, k_pos, kernel=kernel)
+    ref = decode_attention_ref(q, k.astype(dtype), v.astype(dtype),
+                               q_pos, k_pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("kernel", [True, False])
+def test_decode_op_int8_kv(window, kernel):
+    key = jax.random.PRNGKey(11)
+    q, k, v, q_pos, k_pos = _case(key, 3, 2, 4, 64, 130)  # S pads to block
+    kc, ks, vc, vs = _int8(k, v)
+    y = decode_attention_op(q, kc, vc, q_pos, k_pos, k_scale=ks, v_scale=vs,
+                            window=window, kernel=kernel)
+    ref = decode_attention_ref(q, kc, vc, q_pos, k_pos, k_scale=ks,
+                               v_scale=vs, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_op_custom_scale():
+    """The MLA latent path scores in the latent dim but scales by the
+    head dim — the op must honor an explicit scale."""
+    key = jax.random.PRNGKey(13)
+    q, k, v, q_pos, k_pos = _case(key, 2, 1, 4, 24, 40, ragged=False)
+    for kernel in (True, False):
+        y = decode_attention_op(q, k, v, q_pos, k_pos, scale=0.125,
+                                kernel=kernel)
+        ref = decode_attention_ref(q, k, v, q_pos, k_pos, scale=0.125)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_legacy_decode_attention_matches_ref():
+    """The ``fused="off"`` head-major einsum lowering stays pinned too."""
+    key = jax.random.PRNGKey(17)
+    q, k, v, q_pos, k_pos = _case(key, 2, 2, 3, 32, 64)
+    # q for the legacy entry is (B, 1, KV, G, hd)
+    y = decode_attention(q[:, None], k, v, q_pos, k_pos)[:, 0]
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention_step mode parity (GQA + sliding-window, every KV dtype)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("local", [False, True])
+def test_attention_step_mode_parity(kv_dtype, local):
+    from repro.configs import get_config
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model)) * 0.3
+    xt = jax.random.normal(jax.random.PRNGKey(2), (2, 1, cfg.d_model)) * 0.3
+
+    outs = {}
+    for mode in ("off", "auto", "on"):
+        ctx = Ctx(fused=mode)
+        cache = init_attn_cache(cfg, 2, 24, local, kv_dtype)
+        _, cache = attention_seq(ctx, params, x, cfg, local=local,
+                                 cache=cache,
+                                 lengths=jnp.asarray([12, 7], jnp.int32))
+        y, cache = attention_step(ctx, params, xt, cache, cfg, local=local)
+        y2, _ = attention_step(ctx, params, xt, cache, cfg, local=local)
+        outs[mode] = (np.asarray(y), np.asarray(y2))
+    for mode in ("auto", "on"):
+        for a, b in zip(outs["off"], outs[mode]):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"mode={mode}")
+
+
+# ---------------------------------------------------------------------------
+# MLA: latent-path parity + absorbed-weight cache
+# ---------------------------------------------------------------------------
+def _mla_case():
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    params = init_mla(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.3
+    xt = jax.random.normal(jax.random.PRNGKey(2), (2, 1, cfg.d_model)) * 0.3
+    return cfg, params, x, xt
+
+
+def test_mla_step_mode_parity():
+    cfg, params, x, xt = _mla_case()
+    outs = {}
+    for mode in ("off", "auto", "on"):
+        ctx = Ctx(fused=mode)
+        cache = init_mla_cache(cfg, 2, 16)
+        _, cache = mla_seq(ctx, params, x, cfg, cache=cache)
+        y, _ = mla_step(ctx, params, xt, cache, cfg)
+        outs[mode] = np.asarray(y)
+    np.testing.assert_allclose(outs["off"], outs["auto"], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["off"], outs["on"], rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_weights_parity():
+    """Pre-absorbed dense up-projections ≡ per-step weight_of
+    materialization, for fp and quantized (Q+LR) mixers."""
+    from repro.core.api import PTQConfig
+    from repro.models.quantize import quantize_model_params
+    from repro.quant.base import QuantizerConfig
+
+    cfg, params, x, xt = _mla_case()
+    ptq = PTQConfig(method="srr", scaling="identity", rank=4,
+                    quantizer=QuantizerConfig(kind="mxint", bits=3,
+                                              block_size=32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+    for p in (params, qparams):
+        absorbed = absorb_mla_weights(p)
+        assert "w_uk_dense" in absorbed and "w_uv_dense" in absorbed
+        ctx = Ctx(fused="auto")
+        cache = init_mla_cache(cfg, 2, 16)
+        _, cache = mla_seq(ctx, p, x, cfg, cache=cache)
+        y_plain, _ = mla_step(ctx, p, xt, dict(cache), cfg)
+        y_abs, _ = mla_step(ctx, absorbed, xt, dict(cache), cfg)
+        np.testing.assert_allclose(np.asarray(y_plain), np.asarray(y_abs),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_engine_absorb_cache_identity():
+    """absorbed_params is identity-cached per params tree: two engines
+    over the same quantized model share one absorption."""
+    from repro.serve.engine import absorbed_params
+    cfg, params, _, _ = _mla_case()
+    a = absorbed_params(params)
+    b = absorbed_params(params)
+    assert a is b
+    assert a["w_uk_dense"] is b["w_uk_dense"]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level token parity across fused modes × KV dtypes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", ["f32", "bf16", "int8"])
+def test_engine_fused_token_parity_kv_dtypes(kv_dtype):
+    from repro.configs import get_config
+    from repro.core.api import PTQConfig
+    from repro.models import init_lm
+    from repro.models.quantize import quantize_model_params
+    from repro.quant.base import QuantizerConfig
+    from repro.serve import Engine, Request, ServeConfig
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ptq = PTQConfig(method="srr", scaling="identity", rank=8,
+                    quantizer=QuantizerConfig(kind="mxint", bits=3,
+                                              block_size=32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=5 + 3 * i)
+                        .astype(np.int32), max_new_tokens=4)
+                for i in range(3)]
+
+    outs = {}
+    for mode in ("off", "auto", "on"):
+        sc = ServeConfig(max_len=48, decode_batch=2, max_new_tokens=4,
+                         prefill_len=16, kv_dtype=kv_dtype, fused=mode)
+        eng = Engine(qparams, cfg, sc)
+        outs[mode] = eng.generate(reqs())
+    for mode in ("auto", "on"):
+        for a, b in zip(outs["off"], outs[mode]):
+            assert a.uid == b.uid
+            np.testing.assert_array_equal(
+                a.tokens, b.tokens,
+                err_msg=f"kv={kv_dtype} fused={mode} diverged from off")

@@ -102,14 +102,19 @@ def test_batch_spec_adapts_to_small_batches(mesh):
 def test_cache_spec_heads_else_sequence(mesh):
     """Divisible KV heads take the model axis; otherwise the SEQUENCE dim
     does (flash-decode: softmax-stat psums only — sharding head_dim would
-    all-reduce full score rows; see EXPERIMENTS.md §Perf It-3)."""
+    all-reduce full score rows; see EXPERIMENTS.md §Perf It-3). Slot K/V
+    pages are head-major (B, KV, S, hd); cross-attention memories stay
+    sequence-major (B, S, KV, hd)."""
     spec2 = spec_for_cache(
-        (jax.tree_util.DictKey("k"),), (128, 32768, 32, 128), mesh, 128)
-    assert spec2[2] == "model" and spec2[1] is None   # heads preferred
+        (jax.tree_util.DictKey("k"),), (128, 32, 32768, 128), mesh, 128)
+    assert spec2[1] == "model" and spec2[2] is None   # heads preferred
     spec = spec_for_cache(
-        (jax.tree_util.DictKey("k"),), (128, 32768, 40, 128), mesh, 128)
-    assert spec[1] == "model"                         # S fallback (40 ∤ 16)
-    assert spec[2] is None and spec[3] is None
+        (jax.tree_util.DictKey("k"),), (128, 40, 32768, 128), mesh, 128)
+    assert spec[2] == "model"                         # S fallback (40 ∤ 16)
+    assert spec[1] is None and spec[3] is None
+    xspec = spec_for_cache(
+        (jax.tree_util.DictKey("cross_k"),), (128, 1500, 32, 128), mesh, 128)
+    assert xspec[2] == "model" and xspec[1] is None   # seq-major memories
 
 
 # ---------------------------------------------------------------------------
