@@ -18,6 +18,7 @@ behaviour, assumption validity) is exercised on these stand-ins.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 from typing import Dict, List, Optional, Sequence
@@ -40,6 +41,22 @@ def write_csv(name: str, header: Sequence[str], rows: List[Sequence]) -> str:
         w = csv.writer(f)
         w.writerow(header)
         w.writerows(rows)
+    return path
+
+
+def write_summary(name: str, data: Dict) -> str:
+    """Machine-readable run summary: ``benchmarks/out/BENCH_<name>.json``.
+
+    Written alongside the CSV by every perf benchmark. Convention:
+    ``data["gate"]`` maps gate-metric names to speedup floats — CI's
+    bench-gate (``benchmarks/gate.py``) reads those instead of parsing
+    stdout, and the JSON artifacts make the perf trajectory diffable
+    across PRs. Everything else in ``data`` is free-form context
+    (backend, shapes, per-lane medians)."""
+    path = out_path(f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
     return path
 
 

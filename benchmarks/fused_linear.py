@@ -34,9 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.common import write_csv
+    from benchmarks.common import write_csv, write_summary
 except ImportError:  # run as a loose script with benchmarks/ on sys.path
-    from common import write_csv
+    from common import write_csv, write_summary
 
 from repro.kernels.ops import qlr_matmul
 from repro.quant import MXIntQuantizer
@@ -145,6 +145,13 @@ def _bench(argv=None):
     path = write_csv("fused_linear.csv",
                      ["path", "m", "k", "n", "r", "ms", "speedup_vs_dequant"],
                      rows)
+    write_summary("fused_linear", {
+        "backend": backend,
+        "rank": args.rank,
+        "gate": {f"fused_vs_dequant_b{GATE_M}": gate_speedup},
+        "lanes": [{"path": r[0], "m": r[1], "k": r[2], "n": r[3],
+                   "ms": r[5], "speedup_vs_dequant": r[6]} for r in rows],
+    })
     print(f"[bench] wrote {path}")
     print(f"[bench] fused/dequant speedup at batch {GATE_M}: "
           f"{gate_speedup:.2f}x")

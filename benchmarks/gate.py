@@ -1,0 +1,91 @@
+"""CI perf-regression gate over the machine-readable bench summaries.
+
+    PYTHONPATH=src python benchmarks/gate.py [--require NAME ...]
+
+Every perf benchmark writes ``benchmarks/out/BENCH_<name>.json`` beside
+its CSV (``benchmarks.common.write_summary``); the ``gate`` dict inside
+maps gate-metric names to measured speedups. This script is the single
+place the floors live: it loads every summary present, checks each
+metric it knows a floor for, and fails the run on any regression. CI's
+bench-gate job runs the benchmarks *without* their inline
+``--min-speedup`` flags and then runs this — so the JSON artifacts it
+uploads are exactly what was enforced, and the perf trajectory stays
+diffable across PRs.
+
+Floors (raise them when a PR durably improves the measurement — don't
+delete the gate):
+
+  * continuous batching ≥ 1.2× bucketed tok/s (PR 1 measured ≈1.4×);
+  * fused Q+LR matmul ≥ 1.5× dequant-then-matmul at batch 8 (PR 2);
+  * fused decode attention ≥ 1.3× XLA-over-int8-cache at the batch-8
+    long-context shape (PR 3 measured ≈1.5–1.8× on CPU);
+  * fused decode attention over the **int4 packed cache** ≥ 1.3× the
+    same XLA-over-int8-cache baseline — the cache a server would run
+    without the packed container, at twice the HBM (PR 4 measured
+    ≈1.9× on CPU: fused int4 matches or beats fused int8 wall-clock
+    while halving the cache bytes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+# summary name → [(gate metric, floor), ...]
+FLOORS = {
+    "serve_throughput": [("continuous_vs_bucketed", 1.2)],
+    "fused_linear": [("fused_vs_dequant_b8", 1.5)],
+    "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
+                         ("fused_vs_xla_cache_int4_b8", 1.3)],
+}
+
+
+def check(names=None) -> int:
+    """Check all floors whose summaries exist; ``names`` makes the given
+    summaries mandatory (missing file = failure). Returns #failures."""
+    failures = 0
+    for name, floors in FLOORS.items():
+        path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            if names and name in names:
+                print(f"[gate] FAIL {name}: required summary {path} missing "
+                      f"— did the benchmark run?")
+                failures += 1
+            else:
+                print(f"[gate] skip {name}: no summary at {path}")
+            continue
+        with open(path) as f:
+            gate = json.load(f).get("gate", {})
+        for metric, floor in floors:
+            got = gate.get(metric)
+            if got is None:
+                print(f"[gate] FAIL {name}.{metric}: not in summary "
+                      f"(gate keys: {sorted(gate)})")
+                failures += 1
+            elif got < floor:
+                print(f"[gate] FAIL {name}.{metric}: {got:.2f}x is below "
+                      f"the floor {floor:.2f}x")
+                failures += 1
+            else:
+                print(f"[gate] ok   {name}.{metric}: {got:.2f}x "
+                      f"(floor {floor:.2f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--require", nargs="*", default=sorted(FLOORS),
+                   help="summaries that must exist (default: all known)")
+    args = p.parse_args(argv)
+    failures = check(set(args.require))
+    if failures:
+        print(f"[gate] {failures} floor(s) violated")
+        return 1
+    print("[gate] all floors hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,9 +26,9 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.common import write_csv
+    from benchmarks.common import write_csv, write_summary
 except ImportError:  # run as a loose script with benchmarks/ on sys.path
-    from common import write_csv
+    from common import write_csv, write_summary
 
 from repro.configs import get_config
 from repro.models import init_lm
@@ -93,7 +93,8 @@ def _bench(argv=None):
     p.add_argument("--new-tokens", type=int, default=16)
     p.add_argument("--max-len", type=int, default=96)
     p.add_argument("--prefill-len", type=int, default=32)
-    p.add_argument("--kv", default="bf16", choices=["f32", "bf16", "int8"])
+    p.add_argument("--kv", default="bf16",
+                   choices=["f32", "bf16", "int8", "int4"])
     p.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
                    help="fused Q+LR matmul path for both schedulers")
     p.add_argument("--min-speedup", type=float, default=None,
@@ -147,6 +148,13 @@ def _bench(argv=None):
                      [[r[k] for k in ("scheduler", "tokens", "wall_s",
                                       "tok_per_s", "p50_ms", "p95_ms",
                                       "occupancy")] for r in rows])
+    write_summary("serve_throughput", {
+        "backend": jax.default_backend(),
+        "arch": args.arch,
+        "kv_dtype": args.kv,
+        "gate": {"continuous_vs_bucketed": speedup},
+        "lanes": rows,
+    })
     print(f"[bench] wrote {path}")
     return path, rows
 

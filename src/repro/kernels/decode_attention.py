@@ -17,6 +17,12 @@ once, in its storage dtype:
     int8 (1 byte/elt) and the per-(slot, head) scale is applied to the
     (G, bs) score columns / probability columns instead of the (bs, hd)
     tile — the dense f32 cache never exists anywhere;
+  * **int4 KV** reuses the packed4 nibble container: uint8 pages
+    ``(B, KV, S/2, hd)`` hold two slots per byte (slot 2j = low nibble —
+    the ``pack_codes_4bit`` layout, packed along the *slot* axis) and are
+    unpacked in-kernel (:func:`~repro.kernels.mxint_matmul._unpack_tile`
+    on the (bs/2, hd) tile), so codes stream HBM→VMEM at 0.5 byte/elt —
+    the KV HBM footprint halves again vs int8;
   * per-row masking from explicit ``q_pos`` (B,) / ``k_pos`` (B, S)
     position maps — co-batched rows decode at unrelated positions
     (continuous batching) — plus an optional sliding window;
@@ -38,11 +44,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.mxint_matmul import _unpack_tile
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
 def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, *rest,
-                   n_s: int, window: int, scale: float, quantized: bool):
+                   n_s: int, window: int, scale: float, quantized: bool,
+                   packed: bool):
     if quantized:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -56,7 +65,13 @@ def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, *rest,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
-    k = k_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+    k = k_ref[0, 0]                                  # (bs, hd) / (bs/2, hd)
+    if packed:
+        # int4 KV: the (bs/2, hd) uint8 tile expands to (bs, hd) int8
+        # codes in VMEM — slot pairs interleave on the sublane axis, the
+        # layout pack_codes_4bit writes along the slot dim
+        k = _unpack_tile(k)
+    k = k.astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
     if quantized:
@@ -74,12 +89,22 @@ def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, *rest,
 
     m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)                           # (G, bs)
+    # a lane whose running max is still NEG_INF has seen no valid slot
+    # yet: exp(NEG_INF - NEG_INF) = 1 would credit every masked column
+    # with unit probability, and a lane that stays empty through all S
+    # blocks would emit an unweighted V-mean instead of zeros. Zero p
+    # while m_new sits at the sentinel (real scores are bounded far
+    # above NEG_INF/2); corr is then exp(0)·{l,acc}=0 — harmless.
+    p = jnp.where(m_new > 0.5 * NEG_INF,
+                  jnp.exp(s - m_new), 0.0)           # (G, bs)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
     if quantized:
         p = p * vs_ref[0, 0][None, :]                # fold V scales into p
-    v = v_ref[0, 0].astype(jnp.float32)              # (bs, hd)
+    v = v_ref[0, 0]                                  # (bs, hd) / (bs/2, hd)
+    if packed:
+        v = _unpack_tile(v)
+    v = v.astype(jnp.float32)
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     m_ref[...] = m_new
@@ -94,11 +119,12 @@ def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, *rest,
 
 def flash_decode_bkgd(
     q: jax.Array,              # (B, KV, G, hd)
-    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, or int8 codes
-    v: jax.Array,              # (B, KV, S, hd)
+    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, int8 codes, or
+                               # packed4 uint8 (B, KV, S/2, hd)
+    v: jax.Array,              # same container as k
     q_pos: jax.Array,          # (B,) int32 per-row positions
     k_pos: jax.Array,          # (B, S) int32 per-(row, slot) map; -1 empty
-    k_scale: jax.Array | None = None,   # (B, KV, S) f32 — int8 KV only
+    k_scale: jax.Array | None = None,   # (B, KV, S) f32 — int8/int4 KV only
     v_scale: jax.Array | None = None,
     *,
     window: int = 0,           # 0 ⇒ no sliding window
@@ -106,11 +132,23 @@ def flash_decode_bkgd(
     bs: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Core pallas_call; caller guarantees S % bs == 0. Returns
-    (B, KV, G, hd) in q.dtype."""
+    """Core pallas_call; S % bs == 0 is a hard contract (checked — a
+    truncated tail would silently drop the newest cache slots). uint8
+    ``k``/``v`` is the packed4 container: two slots per byte along the
+    slot axis, unpacked in-kernel. Returns (B, KV, G, hd) in q.dtype."""
     b, kv, g, hd = q.shape
-    s_len = k.shape[2]
+    packed = k.dtype == jnp.uint8
+    s_len = k.shape[2] * (2 if packed else 1)
+    if packed and k_scale is None:
+        raise ValueError("packed4 (uint8) KV pages require k/v scales")
     bs = min(bs, s_len)
+    if s_len % bs:
+        raise ValueError(
+            f"flash_decode_bkgd: S={s_len} is not a multiple of bs={bs} — "
+            f"pad the slot axis (see ops._decode_attention_pallas) instead "
+            f"of letting the grid drop the tail")
+    if packed and bs % 2:
+        raise ValueError(f"packed4 KV needs an even block, got bs={bs}")
     n_s = s_len // bs
     quantized = k_scale is not None
     if scale is None:
@@ -118,13 +156,14 @@ def flash_decode_bkgd(
 
     kernel = functools.partial(
         _decode_kernel, n_s=n_s, window=window, scale=float(scale),
-        quantized=quantized)
+        quantized=quantized, packed=packed)
+    cdiv = 2 if packed else 1    # packed slot rows hold two codes each
     in_specs = [
         pl.BlockSpec((1, 1), lambda bb, hh, ss: (bb, 0)),        # q_pos
         pl.BlockSpec((1, bs), lambda bb, hh, ss: (bb, ss)),      # k_pos
         pl.BlockSpec((1, 1, g, hd), lambda bb, hh, ss: (bb, hh, 0, 0)),
-        pl.BlockSpec((1, 1, bs, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
-        pl.BlockSpec((1, 1, bs, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
+        pl.BlockSpec((1, 1, bs // cdiv, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
+        pl.BlockSpec((1, 1, bs // cdiv, hd), lambda bb, hh, ss: (bb, hh, ss, 0)),
     ]
     args = [q_pos.reshape(b, 1).astype(jnp.int32),
             k_pos.astype(jnp.int32), q, k, v]

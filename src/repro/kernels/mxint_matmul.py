@@ -60,13 +60,15 @@ def _unpack_tile(packed: jax.Array) -> jax.Array:
     Row pairs interleave as [lo0, hi0, lo1, hi1, ...] — the layout
     :func:`repro.quant.mxint.pack_codes_4bit` writes — via a stack +
     reshape on the sublane axis (lane dim untouched, so Mosaic keeps the
-    tile resident). Reading the packed container instead of pre-expanded
-    int8 halves the codes' HBM stream."""
+    tile resident). Sign extension is shift-based (shl + arithmetic shr
+    in the i32 working type, 2 ops/nibble) instead of a compare-select
+    pair — this runs per (K, N) tile of every fused matmul and per
+    (bs, hd) K/V tile of every int4 flash-decode step. Reading the
+    packed container instead of pre-expanded int8 halves the codes' HBM
+    stream."""
     u = packed.astype(jnp.int32)
-    lo = (u & 0xF).astype(jnp.int8)
-    hi = ((u >> 4) & 0xF).astype(jnp.int8)
-    lo = jnp.where(lo > 7, lo - 16, lo)     # sign-extend 4-bit 2's comp
-    hi = jnp.where(hi > 7, hi - 16, hi)
+    lo = ((u << 28) >> 28).astype(jnp.int8)  # sign-extend 4-bit 2's comp
+    hi = ((u << 24) >> 28).astype(jnp.int8)
     m2, bn = packed.shape
     return jnp.stack([lo, hi], axis=1).reshape(m2 * 2, bn)
 

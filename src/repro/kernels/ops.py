@@ -241,8 +241,15 @@ def _decode_attention_xla(q, k, v, q_pos, k_pos, k_scale, v_scale,
     G, S) score / probability planes — the dense f32 cache is never
     materialized, and the head-major layout means the batched GEMMs run
     without transposing the cache (the old sequence-major einsum
-    relayouted the whole cache every step)."""
+    relayouted the whole cache every step). packed4 (uint8) pages are
+    expanded to int8 codes first — XLA has no sub-byte dot, so the 1
+    byte/elt code plane is its best lowering; the scales still fold into
+    the score/probability planes. A row with no valid slot emits zeros
+    (matching the kernel and the oracle), not a uniform V-mean."""
     hd = q.shape[-1]
+    if k.dtype == jnp.uint8:    # packed4: two slots per byte on axis -2
+        from repro.quant.mxint import unpack_codes_4bit
+        k, v = unpack_codes_4bit(k), unpack_codes_4bit(v)
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
     s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
@@ -257,6 +264,7 @@ def _decode_attention_xla(q, k, v, q_pos, k_pos, k_scale, v_scale,
     neg = -0.7 * float(jnp.finfo(jnp.float32).max)
     s = jnp.where(mask[:, None, None, :], s, neg)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, None], p, 0.0)
     if v_scale is not None:
         p = p * v_scale.astype(jnp.float32)[:, :, None, :]
     out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32),
@@ -271,15 +279,18 @@ def _decode_attention_pallas(q, k, v, q_pos, k_pos, k_scale, v_scale,
     """Pad the slot axis to the kernel block and run the flash-decode
     kernel (pad slots carry k_pos = -1, so they mask out). The block is
     rounded up to the 32-row sublane tile (the int8 minimum; also
-    satisfies f32's 8) — interpret mode accepts any block shape, Mosaic
-    on real TPU does not."""
+    satisfies f32's 8) — 64 for packed4 pages so the byte tile (bs/2
+    sublanes) still meets the uint8 minimum — interpret mode accepts any
+    block shape, Mosaic on real TPU does not."""
     from repro.kernels.decode_attention import flash_decode_bkgd
-    s_len = k.shape[2]
+    packed = k.dtype == jnp.uint8
+    s_len = k.shape[2] * (2 if packed else 1)
     bs = min(bs, max(s_len, 1))
-    bs = -(-bs // 32) * 32
-    pad = (-s_len) % bs
+    tile = 64 if packed else 32
+    bs = -(-bs // tile) * tile
+    pad = (-s_len) % bs          # even when packed: s_len and bs both are
     if pad:
-        widths4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        widths4 = ((0, 0), (0, 0), (0, pad // (2 if packed else 1)), (0, 0))
         k = jnp.pad(k, widths4)
         v = jnp.pad(v, widths4)
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
@@ -293,12 +304,13 @@ def _decode_attention_pallas(q, k, v, q_pos, k_pos, k_scale, v_scale,
 
 def decode_attention_op(
     q: jax.Array,              # (B, KV, G, hd)
-    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, or int8 codes
+    k: jax.Array,              # (B, KV, S, hd) — f32/bf16, int8 codes, or
+                               # packed4 uint8 (B, KV, S/2, hd)
     v: jax.Array,
     q_pos: jax.Array,          # (B,) per-row positions
     k_pos: jax.Array,          # (B, S) per-(row, slot) map; -1 ⇒ empty
     *,
-    k_scale: jax.Array = None,  # (B, KV, S) f32 — int8 KV only
+    k_scale: jax.Array = None,  # (B, KV, S) f32 — int8/int4 KV only
     v_scale: jax.Array = None,
     window: int = 0,
     scale: float = None,
@@ -311,9 +323,14 @@ def decode_attention_op(
     (interpret mode off-TPU — numerics validation); ``kernel=False``
     forces the XLA path. Both read int8 KV codes directly and fold the
     scales into the score/probability planes; neither materializes the
-    dequantized cache. ``scale`` overrides the 1/√hd score scale (the
-    MLA latent path scores in the latent dim but scales by the head
-    dim). Returns (B, KV, G, hd) in q.dtype."""
+    dequantized cache. uint8 ``k``/``v`` is the **packed4 int4 cache**
+    (two slots per byte along the slot axis, scales still (B, KV, S)):
+    the kernel unpacks nibbles in VMEM, so codes stream HBM at 0.5
+    byte/elt; the XLA lowering expands to int8 codes first (no sub-byte
+    dot in XLA) and still never builds the dense float cache. ``scale``
+    overrides the 1/√hd score scale (the MLA latent path scores in the
+    latent dim but scales by the head dim). Returns (B, KV, G, hd) in
+    q.dtype."""
     if kernel is None:
         kernel = jax.default_backend() == "tpu"
     fn = _decode_attention_pallas if kernel else _decode_attention_xla

@@ -55,18 +55,24 @@ def mxint_quantize_ref(w: jax.Array, bits: int = 3,
 
 def decode_attention_ref(
     q: jax.Array,       # (B, KV, G, hd)
-    k: jax.Array,       # (B, KV, S, hd) head-major; f32/bf16 or int8 codes
+    k: jax.Array,       # (B, KV, S, hd) head-major; f32/bf16, int8 codes,
+                        # or packed4 uint8 (B, KV, S/2, hd)
     v: jax.Array,
     q_pos: jax.Array,   # (B,) per-row positions
     k_pos: jax.Array,   # (B, S) per-(row, slot) positions; -1 empty
-    k_scale: jax.Array | None = None,   # (B, KV, S) — int8 KV only
+    k_scale: jax.Array | None = None,   # (B, KV, S) — int8/int4 KV only
     v_scale: jax.Array | None = None,
     window: int = 0,
     scale: float | None = None,
 ) -> jax.Array:
     """Dense-softmax oracle for the flash-decode kernel: dequantize the
-    whole cache, one masked softmax per row. Returns (B, KV, G, hd)."""
+    whole cache, one masked softmax per row. A row with no valid slot
+    (all masked) emits zeros, not a uniform V-mean. Returns
+    (B, KV, G, hd)."""
     hd = q.shape[-1]
+    if k.dtype == jnp.uint8:    # packed4: two slots per byte on axis -2
+        from repro.quant.mxint import unpack_codes_4bit
+        k, v = unpack_codes_4bit(k), unpack_codes_4bit(v)
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
     if k_scale is not None:
         kf = kf * k_scale.astype(jnp.float32)[..., None]
@@ -80,6 +86,7 @@ def decode_attention_ref(
     neg = -0.7 * float(jnp.finfo(jnp.float32).max)
     s = jnp.where(mask[:, None, None, :], s, neg)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, None], p, 0.0)
     return jnp.einsum("bkgs,bksd->bkgd", p, vf).astype(q.dtype)
 
 

@@ -106,7 +106,8 @@ def main(argv=None):
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--remat", default="none", choices=["none", "full"])
     p.add_argument("--microbatch", type=int, default=0)
-    p.add_argument("--kv", default="int8", choices=["int8", "bf16"])
+    p.add_argument("--kv", default="int8",
+                   choices=["int8", "bf16", "int4"])
     p.add_argument("--rank", type=int, default=64)
     p.add_argument("--no-donate", action="store_true")
     p.add_argument("--qchunk", type=int, default=512)

@@ -3,8 +3,9 @@
 Full paper pipeline on a reduced model: init → calibrate → SRR-quantize
 (W ≈ Q + LR) → serve requests through the continuous-batching engine.
 ``--method qer`` / ``--method w-only`` serve the baselines instead;
-``--kv int8`` exercises the quantized KV cache; ``--scheduler bucketed``
-falls back to the prompt-length-bucketed baseline scheduler.
+``--kv int8`` exercises the quantized KV cache (``--kv int4`` the
+packed4 nibble cache — half the int8 HBM again); ``--scheduler
+bucketed`` falls back to the prompt-length-bucketed baseline scheduler.
 """
 from __future__ import annotations
 
@@ -30,7 +31,8 @@ def main(argv=None):
                    choices=["srr", "qer", "w-only", "none"])
     p.add_argument("--rank", type=int, default=16)
     p.add_argument("--bits", type=int, default=3)
-    p.add_argument("--kv", default="f32", choices=["f32", "bf16", "int8"])
+    p.add_argument("--kv", default="f32",
+                   choices=["f32", "bf16", "int8", "int4"])
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--new-tokens", type=int, default=16)
     p.add_argument("--batch", type=int, default=4)
@@ -44,8 +46,10 @@ def main(argv=None):
                         "kernels on TPU, fused-XLA elsewhere), on (force "
                         "kernels; interpret off-TPU), off (dequant-then-"
                         "matmul / dequantize-the-cache baselines). With "
-                        "--kv int8 the flash-decode path reads the codes "
-                        "directly; the dense f32 cache never materializes")
+                        "--kv int8/int4 the flash-decode path reads the "
+                        "codes directly (int4: packed two-per-byte, "
+                        "unpacked in VMEM); the dense f32 cache never "
+                        "materializes")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 

@@ -41,7 +41,7 @@ class DryrunOptions:
     """Perf-iteration knobs (EXPERIMENTS.md §Perf records their effect)."""
     remat: str = "none"            # none | full
     microbatch: int = 0
-    kv_dtype: str = "int8"         # decode cache: int8 | bf16
+    kv_dtype: str = "int8"         # decode cache: int8 | bf16 | int4
     rank: int = 64                 # adapter rank for serve paths
     compute_dtype: Any = jnp.bfloat16
     donate: bool = True
@@ -93,7 +93,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig,
 
 def abstract_cache(cfg: ModelConfig, shape: ShapeConfig,
                    opts: DryrunOptions):
-    dt = jnp.int8 if opts.kv_dtype == "int8" else jnp.bfloat16
+    # "int4" is the packed4 sentinel: the model layer allocates uint8
+    # nibble pages (half the int8 cache bytes) for it
+    dt = {"int8": jnp.int8, "int4": "int4"}.get(opts.kv_dtype,
+                                                jnp.bfloat16)
     slots = shape.seq_len
     if shape.kind == "prefill" and cfg.n_vision_tokens:
         slots += cfg.n_vision_tokens  # vision tokens prepend to the prompt

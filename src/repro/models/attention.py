@@ -14,8 +14,9 @@ Caches (slot-based, continuous-batching ready, **head-major**):
               up-projections, so the per-step cost scales with r_kv, not
               H·hd·S).
 
-K/V pages are stored head-major — (B, KV, S, hd), int8 scales
-(B, KV, S) — because decode reads them thousands of times per prefill
+K/V pages are stored head-major — (B, KV, S, hd), int8/int4 scales
+(B, KV, S); int4 packs two slots per uint8 byte along the slot axis,
+(B, KV, S/2, hd) — because decode reads them thousands of times per prefill
 write: the score/value GEMMs batch over (B, KV), so head-major streams
 contiguous (S, hd) tiles with **no cache relayout** (the old
 sequence-major layout made XLA transpose the whole cache every step,
@@ -164,6 +165,9 @@ def decode_attention(
         mask = mask & (q_pos[:, None] - k_pos < window)
     s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # a row with no valid slot emits zeros (matching the fused paths),
+    # not the uniform V-mean an all-NEG_INF softmax would produce
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, None, None], p, 0.0)
     out = jnp.einsum("bkgqs,bksd->bqkgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
@@ -185,6 +189,9 @@ def init_attention(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
     }
 
 
+INT4 = "int4"   # kv-cache dtype sentinel: packed4 nibble container
+
+
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
                     dtype=jnp.float32) -> Dict:
     """Head-major K/V pages: (B, KV, slots, hd) — see the module
@@ -193,29 +200,44 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
     ``dtype=jnp.int8`` enables quantized KV: codes + per-(b, head, slot)
     f32 scales. Halves (vs bf16) the dominant decode HBM footprint — the
     quantization-native serving option that lets e.g. qwen-32B's 32k×128
-    MHA cache fit a single v5e pod. Dequantization fuses into the
-    decode-attention kernel / XLA score matmuls
-    (``kernels.ops.decode_attention_op``)."""
+    MHA cache fit a single v5e pod. ``dtype="int4"`` (:data:`INT4`)
+    halves it again: uint8 pages (B, KV, slots/2, hd) hold two 4-bit
+    codes per byte packed along the *slot* axis (slot 2j = low nibble,
+    the ``pack_codes_4bit`` layout), scales stay per-(b, head, slot) —
+    at fixed HBM that doubles the servable slots or context vs int8.
+    The slot count is rounded up to even so byte pairs never straddle
+    the ring boundary; the extra slot is masked (slot_pos = -1) until
+    written. Dequantization fuses into the decode-attention kernel / XLA
+    score matmuls (``kernels.ops.decode_attention_op``)."""
+    packed4 = dtype == INT4
     slots = min(cfg.window, max_len) if local else max_len
+    if packed4:
+        slots += slots % 2
     kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    pages = ((batch, kv, slots // 2, hd), jnp.uint8) if packed4 \
+        else ((batch, kv, slots, hd), dtype)
     cache = {
-        "k": jnp.zeros((batch, kv, slots, hd), dtype),
-        "v": jnp.zeros((batch, kv, slots, hd), dtype),
+        "k": jnp.zeros(*pages),
+        "v": jnp.zeros(*pages),
         "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
-    if dtype == jnp.int8:
+    if dtype == jnp.int8 or packed4:
         cache["k_scale"] = jnp.zeros((batch, kv, slots), jnp.float32)
         cache["v_scale"] = jnp.zeros((batch, kv, slots), jnp.float32)
     return cache
 
 
-def kv_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(B, S, KV, hd) → int8 codes + per-(B, S, KV) f32 scale."""
+def kv_quantize(x: jax.Array, qmax: int = 127) -> Tuple[jax.Array, jax.Array]:
+    """(B, S, KV, hd) → int codes in [-qmax, qmax] + per-(B, S, KV) f32
+    scale. ``qmax=127`` is the int8 cache; ``qmax=7`` the int4 one
+    (symmetric, matching the int8 convention — the packed container
+    could carry -8, but an asymmetric grid buys < 7% range for a
+    scale-zero-point asymmetry the fused score planes don't model)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.maximum(amax, 1e-8) / qmax
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                     -127, 127).astype(jnp.int8)
+                     -qmax, qmax).astype(jnp.int8)
     return codes, scale
 
 
@@ -224,10 +246,15 @@ def kv_dequantize(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
 
 
 def _cache_kv(cache: Dict, dtype) -> Tuple[jax.Array, jax.Array]:
-    """Read the cache's K/V in compute dtype (dequantizing int8 codes)."""
+    """Read the cache's K/V in compute dtype (dequantizing int8 codes /
+    unpacking + dequantizing packed4 int4 pages)."""
     if "k_scale" in cache:
-        return (kv_dequantize(cache["k"], cache["k_scale"], dtype),
-                kv_dequantize(cache["v"], cache["v_scale"], dtype))
+        k, v = cache["k"], cache["v"]
+        if k.dtype == jnp.uint8:    # packed4: slots on axis -2
+            from repro.quant.mxint import unpack_codes_4bit
+            k, v = unpack_codes_4bit(k), unpack_codes_4bit(v)
+        return (kv_dequantize(k, cache["k_scale"], dtype),
+                kv_dequantize(v, cache["v_scale"], dtype))
     return cache["k"].astype(dtype), cache["v"].astype(dtype)
 
 
@@ -284,10 +311,12 @@ def _populate_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
     ``k``/``v`` arrive sequence-major from the projection (B, S, KV, hd);
     the gather runs in that layout and one transpose lands them in the
     cache's head-major pages — paid once per prefill, never at decode.
+    int4 caches additionally pack slot pairs two-per-byte after the
+    transpose (the slot axis is then axis -2, the pack axis).
     """
     b, s = k.shape[:2]
-    slots = cache["k"].shape[2]
-    j = jnp.arange(slots)[None, :]                      # (1, slots)
+    slots = cache["slot_pos"].shape[1]     # logical count (packed4 pages
+    j = jnp.arange(slots)[None, :]         # hold two slots per byte row)
     last = lengths[:, None] - 1                         # (B, 1)
     p = j + slots * jnp.floor_divide(last - j, slots)   # (B, slots)
     valid = p >= 0
@@ -298,18 +327,26 @@ def _populate_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
         return jnp.take_along_axis(src, ix, axis=1)
 
     cache = dict(cache)
-    if "k_scale" in cache:  # int8 KV
-        kc, ksc = kv_quantize(k)
-        vc, vsc = kv_quantize(v)
+    packed4 = cache["k"].dtype == jnp.uint8
+    if "k_scale" in cache:  # int8 / packed4-int4 KV
+        kc, ksc = kv_quantize(k, 7 if packed4 else 127)
+        vc, vsc = kv_quantize(v, 7 if packed4 else 127)
         m3 = valid[..., None]
         cache["k_scale"] = jnp.where(m3, gather(ksc), 0.0).transpose(0, 2, 1)
         cache["v_scale"] = jnp.where(m3, gather(vsc), 0.0).transpose(0, 2, 1)
         k, v = kc, vc
-    m4 = valid[..., None, None]
-    cache["k"] = jnp.where(m4, gather(k).astype(cache["k"].dtype),
-                           jnp.zeros((), cache["k"].dtype)).transpose(0, 2, 1, 3)
-    cache["v"] = jnp.where(m4, gather(v).astype(cache["v"].dtype),
-                           jnp.zeros((), cache["v"].dtype)).transpose(0, 2, 1, 3)
+
+    def to_pages(src, page_dtype):  # (B, S, KV, hd) → head-major pages
+        m4 = valid[..., None, None]
+        hm = jnp.where(m4, gather(src), jnp.zeros((), src.dtype)
+                       ).transpose(0, 2, 1, 3)          # (B, KV, slots, hd)
+        if packed4:
+            from repro.quant.mxint import pack_codes_4bit
+            return pack_codes_4bit(hm)                  # (B, KV, slots/2, hd)
+        return hm.astype(page_dtype)
+
+    cache["k"] = to_pages(k, cache["k"].dtype)
+    cache["v"] = to_pages(v, cache["v"].dtype)
     cache["slot_pos"] = jnp.where(valid, p, -1).astype(jnp.int32)
     cache["pos"] = lengths.astype(jnp.int32)
     return cache
@@ -360,6 +397,22 @@ def attention_seq(
     return y, cache
 
 
+def _write_nibble(pages: jax.Array, codes: jax.Array, rows: jax.Array,
+                  slot: jax.Array) -> jax.Array:
+    """Write one token's int4 codes into the packed4 pages, per row.
+
+    ``pages`` (B, KV, S/2, hd) uint8, ``codes`` (B, KV, hd) int8 in
+    [-7, 7], ``slot`` (B,) logical slot per row. Only the addressed
+    nibble of the byte at slot//2 changes; its pair nibble is preserved
+    — the read-modify-write stays a single-byte-row scatter, the same
+    shape as the int8 single-slot write."""
+    byte = pages[rows, :, slot // 2]                     # (B, KV, hd)
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo = (slot % 2 == 0)[:, None, None]
+    new = jnp.where(lo, (byte & 0xF0) | u, (byte & 0x0F) | (u << 4))
+    return pages.at[rows, :, slot // 2].set(new.astype(jnp.uint8))
+
+
 def attention_step(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     local: bool = False, prefix: str = "attn",
@@ -372,18 +425,24 @@ def attention_step(
     positions = pos[:, None].astype(jnp.int32)  # (B, 1) per-row RoPE phase
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
 
-    slots = cache["k"].shape[2]
+    slots = cache["slot_pos"].shape[1]        # logical count (≠ page rows
+    # for packed4, whose uint8 pages hold two slots per byte)
     slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
     rows = jnp.arange(b)
     new_cache = dict(cache)
-    if "k_scale" in cache:  # int8 KV: quantize the appended token
-        kc, ksc = kv_quantize(k)
-        vc, vsc = kv_quantize(v)
+    packed4 = cache["k"].dtype == jnp.uint8
+    if "k_scale" in cache:  # int8/int4 KV: quantize the appended token
+        kc, ksc = kv_quantize(k, 7 if packed4 else 127)
+        vc, vsc = kv_quantize(v, 7 if packed4 else 127)
         new_cache["k_scale"] = cache["k_scale"].at[rows, :, slot].set(ksc[:, 0])
         new_cache["v_scale"] = cache["v_scale"].at[rows, :, slot].set(vsc[:, 0])
         k, v = kc, vc
-    knew = cache["k"].at[rows, :, slot].set(k[:, 0].astype(cache["k"].dtype))
-    vnew = cache["v"].at[rows, :, slot].set(v[:, 0].astype(cache["v"].dtype))
+    if packed4:
+        knew = _write_nibble(cache["k"], k[:, 0], rows, slot)
+        vnew = _write_nibble(cache["v"], v[:, 0], rows, slot)
+    else:
+        knew = cache["k"].at[rows, :, slot].set(k[:, 0].astype(cache["k"].dtype))
+        vnew = cache["v"].at[rows, :, slot].set(v[:, 0].astype(cache["v"].dtype))
     spos = cache["slot_pos"].at[rows, slot].set(pos)
     new_cache.update(k=knew, v=vnew, slot_pos=spos, pos=pos + 1)
 

@@ -107,9 +107,10 @@ def init_block(key: jax.Array, cfg: ModelConfig, kind: str, use_moe: bool,
 
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                      dtype, cross: bool = False) -> Dict:
-    # int8 applies to the (dominant) GQA KV cache only; recurrent states,
-    # MLA latents and cross-attention memories stay in a float dtype
-    fdtype = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    # int8 / packed4-int4 ("int4") applies to the (dominant) GQA KV cache
+    # only; recurrent states, MLA latents and cross-attention memories
+    # stay in a float dtype
+    fdtype = jnp.bfloat16 if dtype in (jnp.int8, "int4") else dtype
     if kind in ("attn", "local"):
         if cfg.attn_kind == "mla" and kind == "attn":
             c = attn.init_mla_cache(cfg, batch, max_len, fdtype)

@@ -98,12 +98,14 @@ class MXIntQuantizer:
 def pack_codes_4bit(codes: jax.Array) -> jax.Array:
     """Pack int8 codes in [-8, 7] two-per-byte (even rows = low nibble).
 
-    Input (m, n) int8 with m even; output (m//2, n) uint8.
+    Rows live on axis -2; leading stack dims (scan groups, MoE expert
+    stacks, the (B, KV) dims of a head-major KV cache) pass through.
+    Input (..., m, n) int8 with m even; output (..., m//2, n) uint8.
     """
-    if codes.shape[0] % 2:
+    if codes.shape[-2] % 2:
         raise ValueError("row count must be even to pack 4-bit pairs")
     u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
-    lo, hi = u[0::2], u[1::2]
+    lo, hi = u[..., 0::2, :], u[..., 1::2, :]
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
@@ -111,13 +113,15 @@ def unpack_codes_4bit(packed: jax.Array) -> jax.Array:
     """Inverse of :func:`pack_codes_4bit` → int8 codes in [-8, 7].
 
     Rows live on axis -2; leading stack dims (scan groups, MoE expert
-    stacks) pass through. Interleave via stack+reshape — a scatter into
+    stacks, KV-cache head dims) pass through. Sign extension is
+    shift-based — ``(x << 4) >> 4`` as int8 for the low nibble, an
+    arithmetic ``>> 4`` of the reinterpreted byte for the high one —
+    two ops per nibble instead of a compare-and-select over the full
+    array (this runs per decode step over the whole int4 KV cache on
+    the XLA path). Interleave via stack+reshape — a scatter into
     ``out[0::2]`` would materialize an extra full-size zero array."""
-    lo = (packed & 0xF).astype(jnp.int8)
-    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
-    # sign-extend 4-bit two's complement
-    lo = jnp.where(lo > 7, lo - 16, lo)
-    hi = jnp.where(hi > 7, hi - 16, hi)
+    lo = (packed << 4).astype(jnp.int8) >> 4
+    hi = packed.astype(jnp.int8) >> 4
     lead, (m2, n) = packed.shape[:-2], packed.shape[-2:]
     # (…, m2, 2, n) → rows interleave as [lo0, hi0, lo1, hi1, …]
     return jnp.stack([lo, hi], axis=-2).reshape(lead + (m2 * 2, n))

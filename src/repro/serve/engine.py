@@ -21,7 +21,10 @@ scale, under two schedulers:
 
 Also here: **int8 KV** (``kv_dtype="int8"``) halves cache HBM — the
 quantization-native option that makes 32k-context MHA models fit — and
-per-request latency metrics (TTFT, end-to-end latency) plus scheduler
+**int4 KV** (``kv_dtype="int4"``) halves it again via the packed4
+nibble container (two slots per byte, unpacked inside the flash-decode
+kernel), doubling the servable slots or context at fixed memory; plus
+per-request latency metrics (TTFT, end-to-end latency) and scheduler
 occupancy counters. The ``fused`` switch routes every quantized
 projection in prefill *and* per-step decode through the fused Q + LR
 matmul (``repro.kernels.ops.qlr_matmul``) **and** per-step decode
@@ -112,7 +115,7 @@ class ServeConfig:
     decode_batch: int = 8            # decode lanes (= slots, continuous)
     max_new_tokens: int = 64
     eos_id: int = -1                 # -1: never stop early
-    kv_dtype: str = "bf16"           # bf16 | f32 | int8
+    kv_dtype: str = "bf16"           # bf16 | f32 | int8 | int4
     temperature: float = 0.0         # 0 = greedy
     compute_dtype: str = "f32"
     scheduler: str = "continuous"    # continuous | bucketed
@@ -146,6 +149,9 @@ class Engine:
             raise ValueError(f"unknown scheduler {sc.scheduler!r}")
         if sc.fused not in ("auto", "on", "off"):
             raise ValueError(f"unknown fused mode {sc.fused!r}")
+        if sc.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {sc.kv_dtype!r} "
+                             f"(choose from {sorted(KV_DTYPES)})")
         # absorb MLA decode weights once per engine session (identity-
         # cached across engines; switching to a non-MLA model frees any
         # previous model's cached absorption)
@@ -224,6 +230,13 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _req_budget(self, r: Request) -> int:
+        """Per-request token budget; ``is not None`` (not truthiness) so
+        an explicit max_new_tokens=0 stays 0 — mirror of the scheduler's
+        next_admission fix."""
+        return (r.max_new_tokens if r.max_new_tokens is not None
+                else self.sc.max_new_tokens)
+
     def _validate(self, req: Request) -> None:
         plen = len(req.prompt)
         eff = plen + self._n_vis
@@ -295,6 +308,11 @@ class Engine:
 
         slot = self.sched.admit(state)
         state.t_prefill = t1 - t0
+        if state.budget <= 0:
+            # degenerate max_new_tokens=0: the prefill token is dropped so
+            # both schedulers agree on "0 new tokens" (bucketed truncates
+            # to the budget); the slot frees on the same step
+            return [self._finish(slot)]
         self.slots.admit(pf_cache, slot)
         self._tok = self._tok.at[slot, 0].set(first)
         if self.sched.record_token(slot, first):
@@ -308,9 +326,9 @@ class Engine:
         return Result(
             uid=state.uid, tokens=toks,
             prefill_s=getattr(state, "t_prefill", 0.0),
-            decode_s=now - state.t_first_token,
+            decode_s=now - state.t_first_token if state.t_first_token else 0.0,
             ttft_s=(state.t_first_token - state.t_submit
-                    if state.t_submit else 0.0),
+                    if state.t_submit and state.t_first_token else 0.0),
             latency_s=now - state.t_submit if state.t_submit else 0.0)
 
     def step(self) -> List[Result]:
@@ -400,7 +418,7 @@ class Engine:
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
 
-        budget = max((r.max_new_tokens or sc.max_new_tokens) for r in reqs)
+        budget = max(self._req_budget(r) for r in reqs)
         budget = min(budget, sc.max_len - plen - self._n_vis)
         out = np.zeros((b, budget), np.int32)
         done = np.zeros((b,), bool)
@@ -417,7 +435,7 @@ class Engine:
             self._bucket_slot_steps += sum(
                 1 for i, r in enumerate(reqs)
                 if not done[i]
-                and step < (r.max_new_tokens or sc.max_new_tokens))
+                and step < self._req_budget(r))
             key, sub = jax.random.split(key)
             tok, cache = self._decode(self.params, tok, cache, sub)
         jax.block_until_ready(tok)
@@ -428,7 +446,7 @@ class Engine:
             toks = out[i, :n]
             if sc.eos_id >= 0 and (toks == sc.eos_id).any():
                 toks = toks[: int(np.argmax(toks == sc.eos_id)) + 1]
-            lim = r.max_new_tokens or sc.max_new_tokens
+            lim = self._req_budget(r)
             since = r.t_submit or t0     # queue wait counts toward latency
             results.append(Result(uid=r.uid, tokens=toks[:lim],
                                   prefill_s=t1 - t0, decode_s=t2 - t1,

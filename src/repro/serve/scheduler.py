@@ -68,7 +68,10 @@ class ContinuousScheduler:
         if not self.queue or self.table.n_free == 0:
             return None
         req = self.queue.popleft()
-        budget = req.max_new_tokens or self.default_budget
+        # `is not None`, not truthiness: an explicit max_new_tokens=0 is
+        # a real (degenerate) budget, not a request for the default
+        budget = (req.max_new_tokens if req.max_new_tokens is not None
+                  else self.default_budget)
         state = SlotState(uid=req.uid, prompt_len=len(req.prompt),
                           budget=budget, t_submit=getattr(req, "t_submit", 0.0))
         return req, state

@@ -16,8 +16,10 @@ pytree, both compiled once:
   * ``SlotTable``    — host-side alloc/free bookkeeping mapping slots to
     request state (uid, budget, output tokens, timing).
 
-Supports ``bf16 | f32 | int8`` KV: the copy is dtype-agnostic (it walks
-whatever leaves the cache has, including int8 codes + f32 scales).
+Supports ``bf16 | f32 | int8 | int4`` KV: the copy is dtype-agnostic (it
+walks whatever leaves the cache has, including int8 codes + f32 scales
+and the int4 path's packed uint8 nibble pages — a packed page row is
+still one leaf row, so slot admission never unpacks anything).
 
 Cache pytree layout (see ``transformer.init_cache``): ``prefix`` /
 ``suffix`` hold per-layer dicts whose leaves have batch at axis 0;
@@ -36,7 +38,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import init_cache
 
-KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "int8": jnp.int8}
+# "int4" is a sentinel (there is no sub-byte jnp dtype): the model layer
+# allocates packed uint8 nibble pages for it (models.attention.INT4)
+KV_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "int8": jnp.int8,
+             "int4": "int4"}
 
 
 def _copy_row(batch_axis: int):

@@ -234,11 +234,14 @@ def spec_for_cache(
         return False
 
     if leaf in ("k", "v", "k_scale", "v_scale") and ndim - b_dim >= 3:
-        # head-major slot cache — k/v (B, KV, S, hd), scales (B, KV, S):
-        # prefer KV heads (axis right after batch); else shard the
-        # SEQUENCE dim (flash-decode: scores stay local, only softmax
-        # stats and the (B,1,H,hd) partial outputs all-reduce — sharding
-        # head_dim would all-reduce full score rows instead)
+        # head-major slot cache — k/v (B, KV, S, hd), scales (B, KV, S);
+        # int4 k/v pages are packed uint8 (B, KV, S/2, hd), where axis
+        # b_dim+2 counts byte rows (= slot pairs, so a sequence shard
+        # never splits a byte): prefer KV heads (axis right after
+        # batch); else shard the SEQUENCE dim (flash-decode: scores stay
+        # local, only softmax stats and the (B,1,H,hd) partial outputs
+        # all-reduce — sharding head_dim would all-reduce full score
+        # rows instead)
         if not try_dim(b_dim + 1):
             try_dim(b_dim + 2)
     elif leaf in ("cross_k", "cross_v") and ndim - b_dim >= 3:

@@ -48,6 +48,21 @@ def _int8(k, v):
     return kc, ks, vc, vs
 
 
+def _int4(k, v):
+    """Packed4 containers: int4 codes two-per-byte along the slot axis
+    of the head-major pages, per-(B, KV, S) scales."""
+    from repro.quant.mxint import pack_codes_4bit
+
+    def q4(x):
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        sc = jnp.maximum(amax, 1e-8) / 7.0
+        c = jnp.clip(jnp.round(x / sc[..., None]), -7, 7).astype(jnp.int8)
+        return pack_codes_4bit(c), sc
+
+    (kp, ks), (vp, vs) = q4(k), q4(v)
+    return kp, ks, vp, vs
+
+
 # ---------------------------------------------------------------------------
 # decode_attention_op (Pallas interpret + fused-XLA) vs the jnp oracle
 # ---------------------------------------------------------------------------
@@ -92,6 +107,55 @@ def test_decode_op_int8_kv(window, kernel):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("kernel", [True, False])
+def test_decode_op_int4_packed_kv(window, kernel):
+    """Packed4 pages (two slots per uint8 byte on the slot axis) must
+    match the oracle through both op entries — the kernel unpacks
+    nibbles in VMEM, the XLA path expands to int8 codes up front."""
+    key = jax.random.PRNGKey(19)
+    q, k, v, q_pos, k_pos = _case(key, 3, 2, 4, 64, 130)  # S pads to block
+    kp, ks, vp, vs = _int4(k, v)
+    assert kp.dtype == jnp.uint8 and kp.shape == (3, 2, 65, 64)
+    y = decode_attention_op(q, kp, vp, q_pos, k_pos, k_scale=ks, v_scale=vs,
+                            window=window, kernel=kernel)
+    ref = decode_attention_ref(q, kp, vp, q_pos, k_pos, k_scale=ks,
+                               v_scale=vs, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_op_int4_within_quant_tolerance_of_float():
+    """The packed path is the real cache quantized to 4 bits: its output
+    must sit within the int4 quantization error envelope of the float
+    attention, not just match its own oracle."""
+    key = jax.random.PRNGKey(23)
+    q, k, v, q_pos, k_pos = _case(key, 2, 2, 2, 32, 64)
+    kp, ks, vp, vs = _int4(k, v)
+    exact = decode_attention_ref(q, k, v, q_pos, k_pos)
+    y = decode_attention_op(q, kp, vp, q_pos, k_pos, k_scale=ks, v_scale=vs,
+                            kernel=True)
+    err = np.abs(np.asarray(y) - np.asarray(exact)).max()
+    assert err < 0.25 * np.abs(np.asarray(exact)).max()
+
+
+def test_decode_op_int4_unpack_matches_int8_codes():
+    """Pack → op ≡ unpack → op: the packed container is purely a layout,
+    never a second quantizer."""
+    from repro.quant.mxint import unpack_codes_4bit
+    key = jax.random.PRNGKey(29)
+    q, k, v, q_pos, k_pos = _case(key, 2, 1, 2, 32, 96)
+    kp, ks, vp, vs = _int4(k, v)
+    for kernel in (True, False):
+        y_packed = decode_attention_op(q, kp, vp, q_pos, k_pos, k_scale=ks,
+                                       v_scale=vs, kernel=kernel)
+        y_codes = decode_attention_op(q, unpack_codes_4bit(kp),
+                                      unpack_codes_4bit(vp), q_pos, k_pos,
+                                      k_scale=ks, v_scale=vs, kernel=kernel)
+        np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_codes),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_decode_op_custom_scale():
     """The MLA latent path scores in the latent dim but scales by the
     head dim — the op must honor an explicit scale."""
@@ -117,9 +181,90 @@ def test_legacy_decode_attention_matches_ref():
 
 
 # ---------------------------------------------------------------------------
+# Masking numerics: empty lanes and window-masked prefixes
+# ---------------------------------------------------------------------------
+def test_decode_op_empty_lane_emits_zeros():
+    """Regression: a row with no valid slot used to leave the kernel's
+    running max at NEG_INF, making p = exp(NEG_INF − NEG_INF) = 1 per
+    masked column — an unweighted V-mean — while the XLA path emitted a
+    uniform softmax. All three lowerings (kernel, fused-XLA, oracle) now
+    agree on zeros."""
+    key = jax.random.PRNGKey(31)
+    q, k, v, q_pos, k_pos = _case(key, 3, 2, 2, 32, 96, ragged=False)
+    k_pos = k_pos.at[1].set(-1)                 # row 1: fully-empty lane
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos)
+    assert np.abs(np.asarray(ref)[1]).max() == 0.0
+    for kernel in (True, False):
+        y = np.asarray(decode_attention_op(q, k, v, q_pos, k_pos,
+                                           kernel=kernel))
+        assert np.abs(y[1]).max() == 0.0, f"kernel={kernel}"
+        # the non-empty rows stay pinned to the oracle
+        np.testing.assert_allclose(y, np.asarray(ref), rtol=2e-4, atol=2e-4)
+    # multi-block grid: the empty lane must stay zero across S steps
+    from repro.kernels.decode_attention import flash_decode_bkgd
+    y = np.asarray(flash_decode_bkgd(q, k, v, q_pos, k_pos, bs=32,
+                                     interpret=True))
+    assert np.abs(y[1]).max() == 0.0
+    np.testing.assert_allclose(y, np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_legacy_decode_attention_empty_lane_emits_zeros():
+    """The fused="off" einsum lowering agrees on the empty-lane
+    semantics (retired continuous-batching slots ride along masked)."""
+    key = jax.random.PRNGKey(37)
+    q, k, v, q_pos, k_pos = _case(key, 2, 2, 2, 32, 64, ragged=False)
+    k_pos = k_pos.at[0].set(-1)
+    y = np.asarray(decode_attention(q[:, None], k, v, q_pos, k_pos)[:, 0])
+    assert np.abs(y[0]).max() == 0.0
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos)
+    np.testing.assert_allclose(y, np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_kernel_window_masked_prefix_blocks():
+    """A sliding window that masks *entire leading sequence blocks* (the
+    shape where the old p = 1 pollution entered l/acc before the running
+    max turned finite) stays pinned to the oracle. bs=32 over S=128
+    forces 4 grid steps with the first 3 fully window-masked."""
+    from repro.kernels.decode_attention import flash_decode_bkgd
+    key = jax.random.PRNGKey(41)
+    s, window = 128, 16
+    q, k, v, q_pos, k_pos = _case(key, 2, 2, 2, 32, s, ragged=False)
+    q_pos = jnp.full((2,), s - 1, jnp.int32)     # slots 0..111 all outside
+    y = flash_decode_bkgd(q, k, v, q_pos, k_pos, window=window, bs=32,
+                          interpret=True)
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    # the dispatcher entries (single-block here) agree too
+    for kernel in (True, False):
+        y2 = decode_attention_op(q, k, v, q_pos, k_pos, window=window,
+                                 kernel=kernel)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_rejects_unaligned_block():
+    """Regression: flash_decode_bkgd used to compute n_s = S // bs and
+    silently drop the tail slots when S % bs != 0 — now a ValueError."""
+    from repro.kernels.decode_attention import flash_decode_bkgd
+    key = jax.random.PRNGKey(43)
+    q, k, v, q_pos, k_pos = _case(key, 2, 1, 2, 32, 48, ragged=False)
+    with pytest.raises(ValueError, match="not a multiple"):
+        flash_decode_bkgd(q, k, v, q_pos, k_pos, bs=32, interpret=True)
+    # aligned call still works (the dispatcher pads before calling)
+    y = flash_decode_bkgd(q, k[:, :, :32], v[:, :, :32], q_pos,
+                          k_pos[:, :32], bs=32, interpret=True)
+    ref = decode_attention_ref(q, k[:, :, :32], v[:, :, :32], q_pos,
+                               k_pos[:, :32])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
 # attention_step mode parity (GQA + sliding-window, every KV dtype)
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("kv_dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("kv_dtype",
+                         [jnp.float32, jnp.bfloat16, jnp.int8, "int4"])
 @pytest.mark.parametrize("local", [False, True])
 def test_attention_step_mode_parity(kv_dtype, local):
     from repro.configs import get_config
@@ -142,6 +287,33 @@ def test_attention_step_mode_parity(kv_dtype, local):
         for a, b in zip(outs["off"], outs[mode]):
             np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
                                        err_msg=f"mode={mode}")
+
+
+def test_attention_step_int4_within_quant_tolerance():
+    """The int4 cache's step output tracks the f32 cache within the 4-bit
+    quantization envelope (≲ amax/7 per element ⇒ low-% relative error),
+    and the packed pages really halve the int8 cache's K/V bytes."""
+    from repro.configs import get_config
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model)) * 0.3
+    xt = jax.random.normal(jax.random.PRNGKey(2), (2, 1, cfg.d_model)) * 0.3
+    outs, caches = {}, {}
+    for dt in (jnp.float32, jnp.int8, "int4"):
+        ctx = Ctx(fused="auto")
+        cache = init_attn_cache(cfg, 2, 24, False, dt)
+        _, cache = attention_seq(ctx, params, x, cfg, cache=cache,
+                                 lengths=jnp.asarray([12, 7], jnp.int32))
+        y, cache = attention_step(ctx, params, xt, cache, cfg)
+        outs[dt], caches[dt] = np.asarray(y), cache
+    ref = np.abs(outs[jnp.float32]).max()
+    assert np.abs(outs["int4"] - outs[jnp.float32]).max() < 0.2 * ref
+    # int8 stays the tighter approximation
+    assert (np.abs(outs[jnp.int8] - outs[jnp.float32]).max()
+            < np.abs(outs["int4"] - outs[jnp.float32]).max())
+    kv_bytes = lambda c: (c["k"].size * c["k"].dtype.itemsize  # noqa: E731
+                          + c["v"].size * c["v"].dtype.itemsize)
+    assert kv_bytes(caches["int4"]) * 2 == kv_bytes(caches[jnp.int8])
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +379,7 @@ def test_engine_absorb_cache_identity():
 # ---------------------------------------------------------------------------
 # Engine-level token parity across fused modes × KV dtypes
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("kv_dtype", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("kv_dtype", ["f32", "bf16", "int8", "int4"])
 def test_engine_fused_token_parity_kv_dtypes(kv_dtype):
     from repro.configs import get_config
     from repro.core.api import PTQConfig

@@ -64,6 +64,40 @@ def test_eos_retirement_frees_slot_for_queued_request(tiny):
             assert r.tokens[-1] == eos  # truncated at EOS, slot freed
 
 
+def test_zero_budget_stays_zero_not_default():
+    """Regression: next_admission used `req.max_new_tokens or default`,
+    so an explicit max_new_tokens=0 silently became the default budget;
+    the check must be `is not None`."""
+    from repro.serve.scheduler import ContinuousScheduler
+    sched = ContinuousScheduler(n_slots=1, eos_id=-1, default_budget=64)
+    sched.submit(Request(uid=0, prompt=np.zeros((3,), np.int32),
+                         max_new_tokens=0))
+    sched.submit(Request(uid=1, prompt=np.zeros((3,), np.int32),
+                         max_new_tokens=None))
+    req, state = sched.next_admission()
+    assert req.uid == 0 and state.budget == 0
+    sched.admit(state)
+    sched.retire(0)
+    _, state = sched.next_admission()
+    assert state.budget == 64          # None still means the default
+
+
+def test_engine_zero_budget_request(tiny):
+    """A max_new_tokens=0 request yields 0 tokens and frees its slot on
+    the admission step — not the engine-default budget — and both
+    schedulers agree on the zero-token semantics."""
+    cfg, params = tiny
+    budget = {0: 0, 1: 3, 2: 3}
+    res = _engine(cfg, params, max_new_tokens=6).generate(
+        _reqs(cfg, 3, budget=budget))
+    assert [len(r.tokens) for r in res] == [0, 3, 3]
+    res_b = _engine(cfg, params, max_new_tokens=6,
+                    scheduler="bucketed").generate(
+        _reqs(cfg, 3, budget=budget))
+    for rc, rb in zip(res, res_b):
+        np.testing.assert_array_equal(rc.tokens, rb.tokens)
+
+
 def test_more_requests_than_slots_all_complete(tiny):
     cfg, params = tiny
     eng = _engine(cfg, params, decode_batch=2)
@@ -113,6 +147,34 @@ def test_int8_kv_matches_bf16_greedy(tiny):
     res_i8 = _engine(cfg, params, kv_dtype="int8").generate(_reqs(cfg, 4))
     for rb, ri in zip(res_bf, res_i8):
         np.testing.assert_array_equal(rb.tokens, ri.tokens)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "int4"])
+def test_window_local_slot_reuse_fused_parity(tiny, kv_dtype):
+    """Sliding-window × continuous-batching interplay: more requests
+    than slots on a window-local arch (recurrentgemma's rglru/local
+    pattern), so retired slots are reused mid-flight and the local
+    layer's ring buffer wraps (max_len ≫ window). Greedy tokens must be
+    identical across fused=auto|on|off for every KV dtype — including
+    int4, whose ring writes go through the packed nibble pages."""
+    del tiny
+    cfg = get_config("recurrentgemma-9b").reduced()
+    assert "local" in cfg.block_pattern and cfg.window == 16
+    params = init_lm(jax.random.PRNGKey(3), cfg)
+    budget = {0: 26, 1: 3, 2: 7, 3: 4, 4: 5}   # uid 0 wraps the ring
+
+    outs = {}
+    for mode in ("off", "auto", "on"):
+        eng = _engine(cfg, params, decode_batch=2, max_len=48,
+                      kv_dtype=kv_dtype, fused=mode, max_new_tokens=26)
+        outs[mode] = eng.generate(_reqs(cfg, 5, budget=budget))
+        assert [len(r.tokens) for r in outs[mode]] == [26, 3, 7, 4, 5]
+    for mode in ("auto", "on"):
+        for a, b in zip(outs["off"], outs[mode]):
+            assert a.uid == b.uid
+            np.testing.assert_array_equal(
+                a.tokens, b.tokens,
+                err_msg=f"kv={kv_dtype} fused={mode} diverged from off")
 
 
 # ---------------------------------------------------------------------------
