@@ -51,8 +51,14 @@ def write_summary(name: str, data: Dict) -> str:
     ``data["gate"]`` maps gate-metric names to speedup floats — CI's
     bench-gate (``benchmarks/gate.py``) reads those instead of parsing
     stdout, and the JSON artifacts make the perf trajectory diffable
-    across PRs. Everything else in ``data`` is free-form context
-    (backend, shapes, per-lane medians)."""
+    across PRs. Every summary is stamped with the JAX backend it ran on
+    (``"backend"``, unless the caller already set one): ``gate.py`` keys
+    its floors per backend, so CPU-measured floors don't silently gate a
+    TPU run (whose kernel-vs-XLA ratios sit elsewhere) and vice versa.
+    Everything else in ``data`` is free-form context (shapes, per-lane
+    medians)."""
+    data = dict(data)
+    data.setdefault("backend", jax.default_backend())
     path = out_path(f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)

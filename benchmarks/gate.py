@@ -12,6 +12,14 @@ bench-gate job runs the benchmarks *without* their inline
 uploads are exactly what was enforced, and the perf trajectory stays
 diffable across PRs.
 
+Floors are **keyed per JAX backend** (every summary is stamped with the
+backend it ran on): the CPU numbers gate today's CI; the ``tpu`` table
+is the landing pad for the ROADMAP's hardware-validation item — seeded
+at the CPU floors where a lane exists there, to be re-measured and
+raised on first hardware contact (the int4 lane especially: its HBM
+halving is invisible on a compute-bound CPU). An unknown backend falls
+back to the ``cpu`` table rather than passing silently.
+
 Floors (raise them when a PR durably improves the measurement — don't
 delete the gate):
 
@@ -20,10 +28,12 @@ delete the gate):
   * fused decode attention ≥ 1.3× XLA-over-int8-cache at the batch-8
     long-context shape (PR 3 measured ≈1.5–1.8× on CPU);
   * fused decode attention over the **int4 packed cache** ≥ 1.3× the
-    same XLA-over-int8-cache baseline — the cache a server would run
-    without the packed container, at twice the HBM (PR 4 measured
-    ≈1.9× on CPU: fused int4 matches or beats fused int8 wall-clock
-    while halving the cache bytes).
+    same XLA-over-int8-cache baseline (PR 4 measured ≈1.9× on CPU);
+  * paged prefix cache at 90% prompt overlap removes ≥ 1.8× the
+    prefill work of the same workload with reuse disabled (PR 5; the
+    metric is a deterministic token count, not a timing — the first
+    ``decode_batch`` admissions always miss, which is why the floor
+    sits below the ideal 1/(1-overlap) ≈ 5×).
 """
 from __future__ import annotations
 
@@ -33,20 +43,43 @@ import os
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
-# summary name → [(gate metric, floor), ...]
+# backend → summary name → [(gate metric, floor), ...]. The cpu table
+# gates CI; tpu entries are seeded (see module docstring) and expected
+# to be re-measured upward on hardware.
 FLOORS = {
-    "serve_throughput": [("continuous_vs_bucketed", 1.2)],
-    "fused_linear": [("fused_vs_dequant_b8", 1.5)],
-    "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
-                         ("fused_vs_xla_cache_int4_b8", 1.3)],
+    "cpu": {
+        "serve_throughput": [("continuous_vs_bucketed", 1.2)],
+        "fused_linear": [("fused_vs_dequant_b8", 1.5)],
+        "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
+                             ("fused_vs_xla_cache_int4_b8", 1.3)],
+        "serve_prefix": [("prefix_prefill_skip_90", 1.8)],
+    },
+    "tpu": {
+        "serve_throughput": [("continuous_vs_bucketed", 1.2)],
+        "fused_linear": [("fused_vs_dequant_b8", 1.5)],
+        "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
+                             ("fused_vs_xla_cache_int4_b8", 1.3)],
+        # deterministic work-count metric: backend-independent
+        "serve_prefix": [("prefix_prefill_skip_90", 1.8)],
+    },
 }
+
+
+def floors_for(backend: str):
+    return FLOORS.get(backend, FLOORS["cpu"])
+
+
+def known_names():
+    return sorted({n for table in FLOORS.values() for n in table})
 
 
 def check(names=None) -> int:
     """Check all floors whose summaries exist; ``names`` makes the given
-    summaries mandatory (missing file = failure). Returns #failures."""
+    summaries mandatory (missing file = failure). Each summary is gated
+    against the floor table of the backend it ran on. Returns
+    #failures."""
     failures = 0
-    for name, floors in FLOORS.items():
+    for name in known_names():
         path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
         if not os.path.exists(path):
             if names and name in names:
@@ -57,7 +90,13 @@ def check(names=None) -> int:
                 print(f"[gate] skip {name}: no summary at {path}")
             continue
         with open(path) as f:
-            gate = json.load(f).get("gate", {})
+            data = json.load(f)
+        backend = data.get("backend", "cpu")
+        gate = data.get("gate", {})
+        floors = floors_for(backend).get(name)
+        if floors is None:
+            print(f"[gate] skip {name}: no {backend} floors registered")
+            continue
         for metric, floor in floors:
             got = gate.get(metric)
             if got is None:
@@ -65,18 +104,18 @@ def check(names=None) -> int:
                       f"(gate keys: {sorted(gate)})")
                 failures += 1
             elif got < floor:
-                print(f"[gate] FAIL {name}.{metric}: {got:.2f}x is below "
-                      f"the floor {floor:.2f}x")
+                print(f"[gate] FAIL {name}.{metric} [{backend}]: "
+                      f"{got:.2f}x is below the floor {floor:.2f}x")
                 failures += 1
             else:
-                print(f"[gate] ok   {name}.{metric}: {got:.2f}x "
+                print(f"[gate] ok   {name}.{metric} [{backend}]: {got:.2f}x "
                       f"(floor {floor:.2f}x)")
     return failures
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
-    p.add_argument("--require", nargs="*", default=sorted(FLOORS),
+    p.add_argument("--require", nargs="*", default=known_names(),
                    help="summaries that must exist (default: all known)")
     args = p.parse_args(argv)
     failures = check(set(args.require))

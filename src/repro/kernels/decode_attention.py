@@ -187,3 +187,96 @@ def flash_decode_bkgd(
         ],
         interpret=interpret,
     )(*args)
+
+
+def _paged_decode_kernel(bt_ref, *args, **kw):
+    """Scalar-prefetch wrapper: the block table rode in as prefetch arg
+    0 (it steered the index maps); the body is the shared flash-decode
+    kernel, which never needs it."""
+    del bt_ref
+    _decode_kernel(*args, **kw)
+
+
+def flash_decode_paged(
+    q: jax.Array,              # (B, KV, G, hd)
+    k: jax.Array,              # page pool (P, KV, ps, hd) — f32/bf16, int8
+                               # codes, or packed4 uint8 (P, KV, ps/2, hd)
+    v: jax.Array,              # same container as k
+    q_pos: jax.Array,          # (B,) int32 per-row positions
+    k_pos: jax.Array,          # (B, nb·ps) logical slot positions; -1 empty
+    block_table: jax.Array,    # (B, nb) int32 physical page per block
+    k_scale: jax.Array | None = None,   # (P, KV, ps) f32 — int8/int4 only
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged flash-decode: same online-softmax body as
+    :func:`flash_decode_bkgd`, but the sequence grid axis walks each
+    row's **block table** instead of a contiguous slot axis — the
+    K/V/scale block specs are steered by a scalar-prefetched page-id
+    table (``PrefetchScalarGridSpec``), so grid step (b, h, j) DMAs
+    physical page ``block_table[b, j]`` and the pool never streams
+    pages the row doesn't own. Every table entry must be a valid page id
+    (the serving layer parks unused entries on a private page).
+
+    The kernel block *is* the page: one page per sequence grid step. On
+    real TPU hardware that means the page size must meet the Mosaic
+    sublane tile (32 rows for int8/f32 pages, 64 logical slots for
+    packed4); interpret mode — CPU validation — takes any even size.
+    Returns (B, KV, G, hd) in q.dtype."""
+    b, kv, g, hd = q.shape
+    packed = k.dtype == jnp.uint8
+    ps = k.shape[2] * (2 if packed else 1)
+    nb = block_table.shape[1]
+    if k_pos.shape[1] != nb * ps:
+        raise ValueError(
+            f"flash_decode_paged: k_pos covers {k_pos.shape[1]} slots but "
+            f"the block table addresses {nb}×{ps}")
+    if packed and k_scale is None:
+        raise ValueError("packed4 (uint8) KV pages require k/v scales")
+    quantized = k_scale is not None
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, n_s=nb, window=window, scale=float(scale),
+        quantized=quantized, packed=packed)
+    cdiv = 2 if packed else 1
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, hh, ss, bt: (bb, 0)),       # q_pos
+        pl.BlockSpec((1, ps), lambda bb, hh, ss, bt: (bb, ss)),     # k_pos
+        pl.BlockSpec((1, 1, g, hd), lambda bb, hh, ss, bt: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, 1, ps // cdiv, hd),
+                     lambda bb, hh, ss, bt: (bt[bb, ss], hh, 0, 0)),
+        pl.BlockSpec((1, 1, ps // cdiv, hd),
+                     lambda bb, hh, ss, bt: (bt[bb, ss], hh, 0, 0)),
+    ]
+    args = [q_pos.reshape(b, 1).astype(jnp.int32),
+            k_pos.astype(jnp.int32), q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, ps), lambda bb, hh, ss, bt: (bt[bb, ss], hh, 0)),
+            pl.BlockSpec((1, 1, ps), lambda bb, hh, ss, bt: (bt[bb, ss], hh, 0)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bb, hh, ss, bt: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),    # running accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), *args)

@@ -232,6 +232,36 @@ def mxint_quantize(
 # ---------------------------------------------------------------------------
 # Decode attention: Pallas flash-decode on TPU, fused-XLA lowering elsewhere
 # ---------------------------------------------------------------------------
+def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize the logical head-major view of a paged pool for one
+    batch of block tables: pool ``(P, KV, ps, ...)`` + table ``(B, nb)``
+    → ``(B, KV, nb·ps, ...)``. Works for K/V pages (trailing hd axis,
+    including the packed4 uint8 container — page rows concatenate along
+    the packed slot axis because pages hold whole byte pairs) and for
+    the (P, KV, ps) scale planes. This is the XLA lowering's one gather
+    per step; the Pallas paged kernel never materializes it (the block
+    table steers the DMA instead)."""
+    g = pool[block_table]                      # (B, nb, KV, ps, ...)
+    g = jnp.moveaxis(g, 2, 1)                  # (B, KV, nb, ps, ...)
+    return g.reshape(g.shape[:2] + (g.shape[2] * g.shape[3],) + g.shape[4:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale"))
+def _decode_attention_xla_paged(q, k, v, q_pos, k_pos, block_table,
+                                k_scale, v_scale, window=0, scale=None):
+    """Paged fused-XLA lowering: one gather maps each row's block table
+    over the pools (codes stay in their storage container — packed4
+    stays packed through the gather), then the regular fused-XLA
+    single-query attention runs on the logical view."""
+    k = gather_pages(k, block_table)
+    v = gather_pages(v, block_table)
+    if k_scale is not None:
+        k_scale = gather_pages(k_scale, block_table)
+        v_scale = gather_pages(v_scale, block_table)
+    return _decode_attention_xla(q, k, v, q_pos, k_pos, k_scale, v_scale,
+                                 window=window, scale=scale)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "scale"))
 def _decode_attention_xla(q, k, v, q_pos, k_pos, k_scale, v_scale,
                           window=0, scale=None):
@@ -302,19 +332,35 @@ def _decode_attention_pallas(q, k, v, q_pos, k_pos, k_scale, v_scale,
                              interpret=interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("window", "scale", "interpret"))
+def _decode_attention_pallas_paged(q, k, v, q_pos, k_pos, block_table,
+                                   k_scale, v_scale, window=0, scale=None,
+                                   interpret=False):
+    """The paged kernel needs no slot padding: the logical length is
+    nb·ps by construction, and the kernel block is the page."""
+    from repro.kernels.decode_attention import flash_decode_paged
+    return flash_decode_paged(q, k, v, q_pos, k_pos, block_table,
+                              k_scale, v_scale, window=window, scale=scale,
+                              interpret=interpret)
+
+
 def decode_attention_op(
     q: jax.Array,              # (B, KV, G, hd)
     k: jax.Array,              # (B, KV, S, hd) — f32/bf16, int8 codes, or
-                               # packed4 uint8 (B, KV, S/2, hd)
+                               # packed4 uint8 (B, KV, S/2, hd); with a
+                               # block_table: the page pool (P, KV, ps, hd)
+                               # / (P, KV, ps/2, hd)
     v: jax.Array,
     q_pos: jax.Array,          # (B,) per-row positions
     k_pos: jax.Array,          # (B, S) per-(row, slot) map; -1 ⇒ empty
     *,
     k_scale: jax.Array = None,  # (B, KV, S) f32 — int8/int4 KV only
-    v_scale: jax.Array = None,
+    v_scale: jax.Array = None,  # (with block_table: (P, KV, ps) pools)
     window: int = 0,
     scale: float = None,
     kernel: bool = None,
+    block_table: jax.Array = None,  # (B, nb) page ids — paged cache only
 ) -> jax.Array:
     """Single-query attention over the slot cache — deployment entry.
 
@@ -327,12 +373,27 @@ def decode_attention_op(
     (two slots per byte along the slot axis, scales still (B, KV, S)):
     the kernel unpacks nibbles in VMEM, so codes stream HBM at 0.5
     byte/elt; the XLA lowering expands to int8 codes first (no sub-byte
-    dot in XLA) and still never builds the dense float cache. ``scale``
-    overrides the 1/√hd score scale (the MLA latent path scores in the
-    latent dim but scales by the head dim). Returns (B, KV, G, hd) in
-    q.dtype."""
+    dot in XLA) and still never builds the dense float cache.
+
+    ``block_table`` switches to the **paged** cache: ``k``/``v`` (and
+    the scales) are physical page *pools* and each row reads through its
+    (B, nb) table of page ids. The kernel follows the indirection per
+    sequence grid step (scalar-prefetched table steers the page DMA —
+    nothing is gathered); the XLA lowering pays one gather to the
+    logical view first. ``k_pos`` then covers the logical nb·ps slots.
+
+    ``scale`` overrides the 1/√hd score scale (the MLA latent path
+    scores in the latent dim but scales by the head dim). Returns
+    (B, KV, G, hd) in q.dtype."""
     if kernel is None:
         kernel = jax.default_backend() == "tpu"
+    if block_table is not None:
+        fn = _decode_attention_pallas_paged if kernel \
+            else _decode_attention_xla_paged
+        kw = {"interpret": _interpret()} if kernel else {}
+        return fn(q, k, v, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32),
+                  block_table.astype(jnp.int32), k_scale, v_scale,
+                  window=window, scale=scale, **kw)
     fn = _decode_attention_pallas if kernel else _decode_attention_xla
     kw = {"interpret": _interpret()} if kernel else {}
     return fn(q, k, v, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32),

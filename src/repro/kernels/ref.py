@@ -64,12 +64,24 @@ def decode_attention_ref(
     v_scale: jax.Array | None = None,
     window: int = 0,
     scale: float | None = None,
+    block_table: jax.Array | None = None,  # (B, nb): k/v/scales are then
+                                           # (P, KV, ps[, hd]) page pools
 ) -> jax.Array:
     """Dense-softmax oracle for the flash-decode kernel: dequantize the
     whole cache, one masked softmax per row. A row with no valid slot
-    (all masked) emits zeros, not a uniform V-mean. Returns
+    (all masked) emits zeros, not a uniform V-mean. With ``block_table``
+    the paged pools are first materialized to each row's logical view
+    (page j of the table holds logical slots [j·ps, (j+1)·ps)). Returns
     (B, KV, G, hd)."""
     hd = q.shape[-1]
+    if block_table is not None:
+        def flat(pool):  # (P, KV, ps, ...) → (B, KV, nb·ps, ...)
+            g = jnp.moveaxis(pool[block_table], 2, 1)
+            return g.reshape(g.shape[:2] + (g.shape[2] * g.shape[3],)
+                             + g.shape[4:])
+        k, v = flat(k), flat(v)
+        if k_scale is not None:
+            k_scale, v_scale = flat(k_scale), flat(v_scale)
     if k.dtype == jnp.uint8:    # packed4: two slots per byte on axis -2
         from repro.quant.mxint import unpack_codes_4bit
         k, v = unpack_codes_4bit(k), unpack_codes_4bit(v)

@@ -50,6 +50,18 @@ def main(argv=None):
                         "codes directly (int4: packed two-per-byte, "
                         "unpacked in VMEM); the dense f32 cache never "
                         "materializes")
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV cache: block-granular page pool + "
+                        "per-slot block tables, radix-tree prefix reuse "
+                        "(identical prompt prefixes map cached pages in "
+                        "and skip their prefill), and chunked prefill "
+                        "(prompts longer than --prefill-len stream in "
+                        "prefill_len-sized chunks interleaved with decode)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="logical KV slots per page (even; = flash-decode "
+                        "kernel block in the paged path)")
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable radix-tree prefix reuse (paged only)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -77,7 +89,8 @@ def main(argv=None):
         max_len=128, decode_batch=args.batch,
         max_new_tokens=args.new_tokens, kv_dtype=args.kv,
         scheduler=args.scheduler, prefill_len=args.prefill_len,
-        fused=args.fused))
+        fused=args.fused, paged=args.paged, page_size=args.page_size,
+        prefix_cache=not args.no_prefix_cache))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, size=8 + 4 * (i % 3))
@@ -98,6 +111,13 @@ def main(argv=None):
         print(f"[serve] latency p50 {p50 * 1e3:.0f}ms p95 {p95 * 1e3:.0f}ms "
               f"occupancy {st['occupancy']:.2f} "
               f"eos_retired {st['eos_retired']}")
+        if args.paged:
+            print(f"[serve] paged: {st['prefill_chunks']} prefill chunks, "
+                  f"{st['prefill_tokens_computed']}/"
+                  f"{st['prompt_tokens_total']} prompt tokens computed "
+                  f"(prefix hit rate {st['prefix_hit_rate']:.2f}), "
+                  f"{st['evictions']} evictions, "
+                  f"{st['pages_hot']}/{st['pages_total']} pages hot")
     for r in results[:3]:
         print(f"  req {r.uid}: {r.tokens[:10].tolist()}")
     return 0

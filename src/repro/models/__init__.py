@@ -9,10 +9,11 @@ from repro.models.transformer import (
     layer_layout,
     lm_loss,
     prefill,
+    prefill_chunk,
 )
 
 __all__ = [
     "Ctx", "dequant_weight", "init_linear", "is_linear_params", "linear",
     "apply_block", "decode_step", "forward", "init_cache", "init_lm",
-    "layer_layout", "lm_loss", "prefill",
+    "layer_layout", "lm_loss", "prefill", "prefill_chunk",
 ]

@@ -193,7 +193,8 @@ INT4 = "int4"   # kv-cache dtype sentinel: packed4 nibble container
 
 
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
-                    dtype=jnp.float32) -> Dict:
+                    dtype=jnp.float32, pages: Optional[int] = None,
+                    page_size: Optional[int] = None) -> Dict:
     """Head-major K/V pages: (B, KV, slots, hd) — see the module
     docstring for why decode wants this layout.
 
@@ -208,17 +209,49 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
     The slot count is rounded up to even so byte pairs never straddle
     the ring boundary; the extra slot is masked (slot_pos = -1) until
     written. Dequantization fuses into the decode-attention kernel / XLA
-    score matmuls (``kernels.ops.decode_attention_op``)."""
+    score matmuls (``kernels.ops.decode_attention_op``).
+
+    ``pages``/``page_size`` select the **paged** layout instead (full
+    attention only): K/V become a physical page *pool* shared by every
+    batch row — ``(pages, KV, page_size, hd)``, packed4 ``(pages, KV,
+    page_size/2, hd)``, scales ``(pages, KV, page_size)`` — and each
+    row addresses it through a ``block_table`` (B, ceil(max_len /
+    page_size)) of page ids (``serve.pages`` owns the allocator and
+    guarantees every entry is a valid page). There is no ``slot_pos``
+    map: logical slot j of a row always holds position j, so the decode
+    mask is just ``j <= pos``. ``page_size`` must be even (int4 nibble
+    pairs never straddle a page)."""
     packed4 = dtype == INT4
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    if pages is not None:
+        if local:
+            raise ValueError(
+                "paged KV supports full attention only (a sliding-window "
+                "ring buffer wraps inside blocks, breaking block sharing)")
+        if page_size is None or page_size % 2:
+            raise ValueError(f"paged KV needs an even page_size, got "
+                             f"{page_size}")
+        n_blocks = -(-max_len // page_size)
+        pshape = ((pages, kv, page_size // 2, hd), jnp.uint8) if packed4 \
+            else ((pages, kv, page_size, hd), dtype)
+        cache = {
+            "k": jnp.zeros(*pshape),
+            "v": jnp.zeros(*pshape),
+            "block_table": jnp.zeros((batch, n_blocks), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+        if dtype == jnp.int8 or packed4:
+            cache["k_scale"] = jnp.zeros((pages, kv, page_size), jnp.float32)
+            cache["v_scale"] = jnp.zeros((pages, kv, page_size), jnp.float32)
+        return cache
     slots = min(cfg.window, max_len) if local else max_len
     if packed4:
         slots += slots % 2
-    kv, hd = cfg.n_kv_heads, cfg.head_dim_
-    pages = ((batch, kv, slots // 2, hd), jnp.uint8) if packed4 \
+    pshape = ((batch, kv, slots // 2, hd), jnp.uint8) if packed4 \
         else ((batch, kv, slots, hd), dtype)
     cache = {
-        "k": jnp.zeros(*pages),
-        "v": jnp.zeros(*pages),
+        "k": jnp.zeros(*pshape),
+        "v": jnp.zeros(*pshape),
         "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
@@ -413,61 +446,227 @@ def _write_nibble(pages: jax.Array, codes: jax.Array, rows: jax.Array,
     return pages.at[rows, :, slot // 2].set(new.astype(jnp.uint8))
 
 
+def _paged_page_size(cache: Dict) -> int:
+    """Logical slots per physical page (uint8 pool rows hold two)."""
+    rows = cache["k"].shape[2]
+    return rows * 2 if cache["k"].dtype == jnp.uint8 else rows
+
+
 def attention_step(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     local: bool = False, prefix: str = "attn",
 ) -> Tuple[jax.Array, Dict]:
     """One decode step; x: (B, 1, D). Rows advance independently: each
-    writes at its own slot and masks against its own slot map."""
+    writes at its own slot and masks against its own slot map. A paged
+    cache (``block_table`` present) routes the write and the attention
+    read through the slot's page-table indirection instead."""
     b = x.shape[0]
     hd = cfg.head_dim_
     pos = cache["pos"]                        # (B,)
     positions = pos[:, None].astype(jnp.int32)  # (B, 1) per-row RoPE phase
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
 
-    slots = cache["slot_pos"].shape[1]        # logical count (≠ page rows
-    # for packed4, whose uint8 pages hold two slots per byte)
-    slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
+    paged = "block_table" in cache
     rows = jnp.arange(b)
     new_cache = dict(cache)
     packed4 = cache["k"].dtype == jnp.uint8
+    if paged:
+        # logical slot j always holds position j (full attention only),
+        # so the slot map is implicit: mask is just j <= pos. The write
+        # goes to (page = block_table[row, j // ps], offset = j % ps);
+        # every table entry is a valid page (retired rows point at their
+        # private parked page), so the unconditional write of a dead row
+        # can never corrupt a page another request owns.
+        if local:
+            raise ValueError("paged KV cache supports full attention only")
+        bt = cache["block_table"]             # (B, nb)
+        ps = _paged_page_size(cache)
+        nslots = bt.shape[1] * ps
+        slot = jnp.minimum(pos, nslots - 1)
+        page = jnp.take_along_axis(bt, (slot // ps)[:, None], 1)[:, 0]
+        off = slot % ps
+        wrow, wslot = page, off               # scatter coords in the pool
+    else:
+        slots = cache["slot_pos"].shape[1]    # logical count (≠ page rows
+        # for packed4, whose uint8 pages hold two slots per byte)
+        slot = jnp.mod(pos, slots) if local else jnp.minimum(pos, slots - 1)
+        wrow, wslot = rows, slot
     if "k_scale" in cache:  # int8/int4 KV: quantize the appended token
         kc, ksc = kv_quantize(k, 7 if packed4 else 127)
         vc, vsc = kv_quantize(v, 7 if packed4 else 127)
-        new_cache["k_scale"] = cache["k_scale"].at[rows, :, slot].set(ksc[:, 0])
-        new_cache["v_scale"] = cache["v_scale"].at[rows, :, slot].set(vsc[:, 0])
+        new_cache["k_scale"] = cache["k_scale"].at[wrow, :, wslot].set(ksc[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[wrow, :, wslot].set(vsc[:, 0])
         k, v = kc, vc
     if packed4:
-        knew = _write_nibble(cache["k"], k[:, 0], rows, slot)
-        vnew = _write_nibble(cache["v"], v[:, 0], rows, slot)
+        knew = _write_nibble(cache["k"], k[:, 0], wrow, wslot)
+        vnew = _write_nibble(cache["v"], v[:, 0], wrow, wslot)
     else:
-        knew = cache["k"].at[rows, :, slot].set(k[:, 0].astype(cache["k"].dtype))
-        vnew = cache["v"].at[rows, :, slot].set(v[:, 0].astype(cache["v"].dtype))
-    spos = cache["slot_pos"].at[rows, slot].set(pos)
-    new_cache.update(k=knew, v=vnew, slot_pos=spos, pos=pos + 1)
+        knew = cache["k"].at[wrow, :, wslot].set(k[:, 0].astype(cache["k"].dtype))
+        vnew = cache["v"].at[wrow, :, wslot].set(v[:, 0].astype(cache["v"].dtype))
+    new_cache.update(k=knew, v=vnew, pos=pos + 1)
+    if paged:
+        spos = jnp.broadcast_to(jnp.arange(nslots, dtype=jnp.int32)[None],
+                                (b, nslots))
+        block_table = cache["block_table"]
+    else:
+        spos = cache["slot_pos"].at[rows, slot].set(pos)
+        new_cache["slot_pos"] = spos
+        block_table = None
 
     window = cfg.window if local else None
     mode = fused_mode(ctx)
     if mode == "off":
         # legacy lowering: dequantize the whole cache, dense softmax
-        kd, vd = _cache_kv(new_cache, x.dtype)
+        if paged:
+            from repro.kernels.ops import gather_pages
+            flat = dict(new_cache,
+                        k=gather_pages(knew, block_table),
+                        v=gather_pages(vnew, block_table))
+            if "k_scale" in cache:
+                flat["k_scale"] = gather_pages(new_cache["k_scale"],
+                                               block_table)
+                flat["v_scale"] = gather_pages(new_cache["v_scale"],
+                                               block_table)
+            kd, vd = _cache_kv(flat, x.dtype)
+        else:
+            kd, vd = _cache_kv(new_cache, x.dtype)
         out = decode_attention(q, kd, vd, pos, spos, window=window)
     else:
         # deployment path: flash-decode kernel (TPU / interpret under
         # ``fused="on"``) or the fused-XLA lowering — the cache is read
         # once, in its storage dtype, straight from the head-major pages
+        # (paged: the kernel follows the block-table indirection per
+        # sequence grid step; XLA gathers the pages once)
         from repro.kernels.ops import decode_attention_op
         out = decode_attention_op(
             q[:, 0], new_cache["k"], new_cache["v"], pos, spos,
             k_scale=new_cache.get("k_scale"),
             v_scale=new_cache.get("v_scale"),
-            window=window or 0, kernel=(mode == "kernel"))[:, None]
+            window=window or 0, kernel=(mode == "kernel"),
+            block_table=block_table)[:, None]
         out = out.astype(x.dtype)
     h_ax = "model" if attn_strategy(ctx, cfg) == "heads" else None
     out = hint(ctx, out, dp_axes_of(ctx), None, h_ax, None, None)
     out = out.reshape(b, 1, cfg.n_heads * hd)
     y = linear(ctx, params["wo"], out, f"{prefix}.wo")
     y = hint(ctx, y, dp_axes_of(ctx), None, None)
+    return y, new_cache
+
+
+def attention_chunk(
+    ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+    row: jax.Array, start: jax.Array, length: jax.Array,
+    prefix: str = "attn",
+) -> Tuple[jax.Array, Dict]:
+    """Chunked prefill over a **paged** cache: process one chunk of one
+    slot row's prompt, attending to everything already in the row's
+    pages (earlier chunks and any prefix-cache blocks mapped in by the
+    scheduler) plus the chunk itself, causally.
+
+    ``x``: (1, C, D) — the chunk, right-padded to the compiled chunk
+    length C; ``start``: absolute position of its first token;
+    ``length``: valid tokens (≤ C). row/start/length are traced, so one
+    compile serves every chunk of every admission.
+
+    The chunk's K/V is written into the row's pages *in the storage
+    container* (quantized / packed) at slots ``[start, start+C)``, but
+    the attention reads the chunk **fresh** (compute dtype) and only the
+    *context* from storage — so a single-chunk prompt with no cached
+    prefix runs numerically identical ops to the unpaged one-shot
+    prefill, and multi-chunk context pays exactly the storage-dtype
+    round trip decode would pay anyway. Pad-lane writes (``length < C``)
+    are **dropped**: their page index is steered out of bounds and the
+    scatter runs with ``mode="drop"``. Clamping them into the row's tail
+    block instead would collide with valid slots whenever the final
+    chunk overhangs the block table (``start + C > nb·ps``) — the
+    duplicate-index scatter is unordered, so pad garbage could replace
+    real prompt KV.
+
+    Packed4 note: chunk starts are block-aligned and C is even (engine
+    contract), so nibble *pairs* land whole — the write packs byte pairs
+    up front instead of read-modify-writing single nibbles. A byte whose
+    low slot is valid but whose high slot is pad is still written: the
+    pad nibble sits at ``start+length``, which the first decode write's
+    nibble RMW replaces before any mask admits it."""
+    b, c, _ = x.shape
+    hd = cfg.head_dim_
+    positions = start + jnp.arange(c)
+    q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
+
+    bt_row = cache["block_table"][row]        # (nb,)
+    ps = _paged_page_size(cache)
+    nb = bt_row.shape[0]
+    nslots = nb * ps
+    n_pool = cache["k"].shape[0]              # OOB sentinel for pad drops
+    packed4 = cache["k"].dtype == jnp.uint8
+    quant = "k_scale" in cache
+    new_cache = dict(cache)
+
+    # ---- write the chunk into the row's pages (storage container) ----
+    slots = start + jnp.arange(c)
+    valid = jnp.arange(c) < length            # pad lanes write nowhere
+    off = slots % ps
+    pages = jnp.where(valid, bt_row[jnp.minimum(slots // ps, nb - 1)],
+                      n_pool)                 # (C,)
+    kw, vw = k[0], v[0]                       # (C, KV, hd)
+    if quant:
+        kc, ksc = kv_quantize(k, 7 if packed4 else 127)
+        vc, vsc = kv_quantize(v, 7 if packed4 else 127)
+        new_cache["k_scale"] = cache["k_scale"].at[pages, :, off].set(
+            ksc[0], mode="drop")
+        new_cache["v_scale"] = cache["v_scale"].at[pages, :, off].set(
+            vsc[0], mode="drop")
+        kw, vw = kc[0], vc[0]
+    if packed4:
+        from repro.quant.mxint import pack_codes_4bit
+        kp = pack_codes_4bit(kw.transpose(1, 0, 2))      # (KV, C/2, hd)
+        vp = pack_codes_4bit(vw.transpose(1, 0, 2))
+        blo = start + 2 * jnp.arange(c // 2)  # low slot of each byte pair
+        bvalid = 2 * jnp.arange(c // 2) < length
+        bpages = jnp.where(bvalid, bt_row[jnp.minimum(blo // ps, nb - 1)],
+                           n_pool)
+        boff = (blo % ps) // 2
+        knew = cache["k"].at[bpages, :, boff].set(kp.transpose(1, 0, 2),
+                                                  mode="drop")
+        vnew = cache["v"].at[bpages, :, boff].set(vp.transpose(1, 0, 2),
+                                                  mode="drop")
+    else:
+        knew = cache["k"].at[pages, :, off].set(kw.astype(cache["k"].dtype),
+                                                mode="drop")
+        vnew = cache["v"].at[pages, :, off].set(vw.astype(cache["v"].dtype),
+                                                mode="drop")
+    new_cache.update(k=knew, v=vnew,
+                     pos=cache["pos"].at[row].set(start + length))
+
+    # ---- attention: [stored context ‖ fresh chunk], causal -----------
+    from repro.kernels.ops import gather_pages
+    ctxk = gather_pages(cache["k"], bt_row[None])        # pre-chunk pages
+    ctxv = gather_pages(cache["v"], bt_row[None])        # (1, KV, S', hd)
+    if packed4:
+        from repro.quant.mxint import unpack_codes_4bit
+        ctxk, ctxv = unpack_codes_4bit(ctxk), unpack_codes_4bit(ctxv)
+    if quant:
+        ksg = gather_pages(cache["k_scale"], bt_row[None])   # (1, KV, S)
+        vsg = gather_pages(cache["v_scale"], bt_row[None])
+        ctxk = kv_dequantize(ctxk, ksg, jnp.float32)
+        ctxv = kv_dequantize(ctxv, vsg, jnp.float32)
+    ctxk = ctxk.astype(k.dtype).transpose(0, 2, 1, 3)    # (1, S, KV, hd)
+    ctxv = ctxv.astype(v.dtype).transpose(0, 2, 1, 3)
+    sctx = jnp.arange(nslots)
+    ctx_pos = jnp.where(sctx < start, sctx, -1)          # only < start valid
+    kk = jnp.concatenate([ctxk, k], axis=1)
+    vv = jnp.concatenate([ctxv, v], axis=1)
+    k_pos = jnp.concatenate([ctx_pos, positions])
+    if ctx.use_pallas or ctx.fused == "on":
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, kk, vv, positions, k_pos, causal=True,
+                              window=0)
+    else:
+        out = blockwise_attention(q, kk, vv, positions, k_pos, causal=True,
+                                  ctx=ctx, q_chunk=ctx.attn_q_chunk,
+                                  kv_chunk=ctx.attn_kv_chunk)
+    out = out.reshape(b, c, cfg.n_heads * hd)
+    y = linear(ctx, params["wo"], out, f"{prefix}.wo")
     return y, new_cache
 
 

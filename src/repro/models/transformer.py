@@ -106,16 +106,23 @@ def init_block(key: jax.Array, cfg: ModelConfig, kind: str, use_moe: bool,
 
 
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                     dtype, cross: bool = False) -> Dict:
+                     dtype, cross: bool = False, pages: Optional[int] = None,
+                     page_size: Optional[int] = None) -> Dict:
     # int8 / packed4-int4 ("int4") applies to the (dominant) GQA KV cache
     # only; recurrent states, MLA latents and cross-attention memories
     # stay in a float dtype
     fdtype = jnp.bfloat16 if dtype in (jnp.int8, "int4") else dtype
+    if pages is not None and not (kind == "attn" and cfg.attn_kind != "mla"):
+        raise ValueError(
+            f"paged KV cache supports full GQA attention layers only, "
+            f"got kind={kind!r} (attn_kind={cfg.attn_kind!r}) — recurrent "
+            f"states and MLA latents have no block-granular sharing story")
     if kind in ("attn", "local"):
         if cfg.attn_kind == "mla" and kind == "attn":
             c = attn.init_mla_cache(cfg, batch, max_len, fdtype)
         else:
-            c = attn.init_attn_cache(cfg, batch, max_len, kind == "local", dtype)
+            c = attn.init_attn_cache(cfg, batch, max_len, kind == "local",
+                                     dtype, pages=pages, page_size=page_size)
     elif kind == "rglru":
         c = rglru_mod.init_rglru_cache(cfg, batch, fdtype)
     elif kind == "mlstm":
@@ -137,11 +144,13 @@ def apply_block(
     x: jax.Array,
     cfg: ModelConfig,
     kind: str,
-    mode: str,                      # "seq" (train/prefill) | "step" (decode)
+    mode: str,          # "seq" (train/prefill) | "step" (decode) |
+                        # "chunk" (paged chunked prefill)
     cache: Optional[Dict] = None,
     memory: Optional[jax.Array] = None,  # encoder output (whisper prefill)
     causal: bool = True,
     lengths: Optional[jax.Array] = None,  # (B,) per-row valid prefix (seq)
+    chunk_info: Optional[Tuple] = None,   # (row, start, length) for "chunk"
 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (x_out, aux_loss, cache_out)."""
     aux = jnp.zeros((), jnp.float32)
@@ -151,9 +160,15 @@ def apply_block(
         inner_cache = {k: v for k, v in cache.items()
                        if not k.startswith("cross_")}
 
+    if mode == "chunk" and kind != "attn":
+        raise ValueError(f"chunked prefill needs full-attention layers, "
+                         f"got kind={kind!r}")
     if kind in ("attn", "local"):
         is_mla = cfg.attn_kind == "mla" and kind == "attn"
-        if mode == "seq":
+        if mode == "chunk":
+            y, inner_cache = attn.attention_chunk(
+                ctx, p["mixer"], h, inner_cache, cfg, *chunk_info)
+        elif mode == "seq":
             if is_mla:
                 y, inner_cache = attn.mla_seq(ctx, p["mixer"], h, cfg,
                                               cache=inner_cache,
@@ -460,13 +475,19 @@ def lm_loss(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
 # Cache init / prefill / decode
 # ==========================================================================
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.float32) -> Dict:
+               dtype=jnp.float32, pages: Optional[int] = None,
+               page_size: Optional[int] = None) -> Dict:
+    """``pages``/``page_size`` switch the attention layers to the paged
+    layout: per-layer physical page pools + per-slot block tables (see
+    ``models.attention.init_attn_cache`` and ``serve.pages``). Only
+    all-GQA-attention stacks support it."""
     n_prefix, n_groups, n_suffix = layer_layout(cfg)
     period = len(cfg.block_pattern)
     cross = cfg.is_encoder_decoder
 
     def blockc(kind):
-        return init_block_cache(cfg, kind, batch, max_len, dtype, cross)
+        return init_block_cache(cfg, kind, batch, max_len, dtype, cross,
+                                pages=pages, page_size=page_size)
 
     def stacked(kind):
         one = blockc(kind)
@@ -501,6 +522,62 @@ def prefill(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
         last = jnp.take_along_axis(hidden, ix, axis=1)
     logits = linear(ctx, head, last)
     return logits, cache
+
+
+def prefill_chunk(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
+                  cache: Dict, row: jax.Array, start: jax.Array,
+                  length: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One chunk of a **paged** chunked prefill: run ``tokens`` (1, C) —
+    positions ``[start, start+length)``, right-padded to the compiled
+    chunk width C — through the stack, appending K/V into slot ``row``'s
+    pages and attending over everything already there (earlier chunks
+    and prefix-cache blocks). Returns (logits at position length-1 of
+    the chunk, updated cache) — the logits only matter on the prompt's
+    final chunk, where they seed the first sampled token.
+
+    row/start/length are traced scalars: one compiled shape covers every
+    chunk of every admission, which is what lets the serving engine
+    interleave long-prompt prefills with live decode steps."""
+    x = embed(params["embed"], tokens, ctx.compute_dtype)
+    x = _hint_act(ctx, x)
+    period = len(cfg.block_pattern)
+    info = (row, start, length)
+
+    new_prefix = []
+    for i, blk in enumerate(params["prefix"]):
+        x, _, c = apply_block(ctx, blk, x, cfg, _kind_at(cfg, i), "chunk",
+                              cache=cache["prefix"][i], chunk_info=info)
+        new_prefix.append(c)
+
+    new_groups = None
+    if params["groups"]:
+        def body(xc, xs):
+            gp, gc = xs
+            new_gc = {}
+            for pos in range(period):
+                xc, _, c = apply_block(ctx, gp[f"p{pos}"], xc, cfg,
+                                       cfg.block_pattern[pos], "chunk",
+                                       cache=gc[f"p{pos}"], chunk_info=info)
+                new_gc[f"p{pos}"] = c
+            return xc, new_gc
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               cache["groups"]))
+
+    new_suffix = []
+    for i, blk in enumerate(params["suffix"]):
+        x, _, c = apply_block(ctx, blk, x, cfg, cfg.block_pattern[i % period],
+                              "chunk", cache=cache["suffix"][i],
+                              chunk_info=info)
+        new_suffix.append(c)
+
+    x = norm(params["final_norm"], x, cfg.norm)
+    ix = (length - 1).astype(jnp.int32).reshape(1, 1, 1)
+    last = jnp.take_along_axis(x, ix, axis=1)
+    head = params.get("lm_head") or {"w": params["embed"]["w"].T}
+    logits = linear(ctx, head, last)
+    return logits, {"prefix": new_prefix, "groups": new_groups,
+                    "suffix": new_suffix}
 
 
 def decode_step(ctx: Ctx, params: Dict, token: jax.Array, cache: Dict,

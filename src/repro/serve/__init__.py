@@ -1,9 +1,13 @@
 """Serving: continuous-batching prefill/decode engine over Q + LR models."""
 from repro.serve.engine import Engine, Request, Result, ServeConfig
+from repro.serve.pages import PagedKVCache, PagePool, set_block_table_row
+from repro.serve.prefix import RadixPrefixCache
 from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
 from repro.serve.slots import SlotKVCache, SlotState, SlotTable, write_slot
 
 __all__ = [
-    "ContinuousScheduler", "Engine", "Request", "Result", "SchedulerStats",
-    "ServeConfig", "SlotKVCache", "SlotState", "SlotTable", "write_slot",
+    "ContinuousScheduler", "Engine", "PagePool", "PagedKVCache",
+    "RadixPrefixCache", "Request", "Result", "SchedulerStats",
+    "ServeConfig", "SlotKVCache", "SlotState", "SlotTable",
+    "set_block_table_row", "write_slot",
 ]

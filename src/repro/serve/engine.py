@@ -51,9 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import Ctx, decode_step, init_cache, prefill
+from repro.models import Ctx, decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import absorb_mla_weights
-from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.pages import PagedKVCache, PagePool
+from repro.serve.prefix import RadixPrefixCache
+from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
 from repro.serve.slots import KV_DTYPES, SlotKVCache
 
 
@@ -119,9 +121,17 @@ class ServeConfig:
     temperature: float = 0.0         # 0 = greedy
     compute_dtype: str = "f32"
     scheduler: str = "continuous"    # continuous | bucketed
-    prefill_len: Optional[int] = None  # compiled prompt pad length
+    prefill_len: Optional[int] = None  # compiled prompt pad length; under
+    # --paged this is the *chunk* width, no longer a prompt-length cap
     seed: int = 0                    # sampling stream for submit()/step()
     fused: str = "auto"              # Q+LR matmul path: auto | on | off
+    # --- paged KV cache (serve.pages / serve.prefix) ---
+    paged: bool = False              # block-granular pages + block tables
+    page_size: int = 16              # logical slots per page (even; on real
+    # TPU must meet the Mosaic sublane tile: ≥32, ≥64 for int4)
+    n_pages: Optional[int] = None    # pool size; default sizes for full
+    # residency of every lane + one request of prefix-retention headroom
+    prefix_cache: bool = True        # radix-tree automatic prefix reuse
 
 
 @dataclasses.dataclass
@@ -142,6 +152,18 @@ class Result:
     latency_s: float = 0.0           # submit → done
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """A paged admission mid-chunked-prefill: the slot is allocated and
+    its block table mapped, but the prompt is only prefilled up to
+    ``next`` — one chunk advances per engine step, interleaved with the
+    other slots' decode."""
+    req: Request
+    state: object                    # the scheduler's SlotState
+    next: int                        # first not-yet-prefilled position
+    matched_tokens: int              # prefix-cache tokens skipped
+
+
 class Engine:
     def __init__(self, params, cfg: ModelConfig, sc: ServeConfig,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None):
@@ -152,6 +174,18 @@ class Engine:
         if sc.kv_dtype not in KV_DTYPES:
             raise ValueError(f"unknown kv_dtype {sc.kv_dtype!r} "
                              f"(choose from {sorted(KV_DTYPES)})")
+        if sc.paged:
+            if sc.scheduler != "continuous":
+                raise ValueError("paged KV needs scheduler='continuous'")
+            unsupported = [k for k in cfg.block_pattern if k != "attn"]
+            if (unsupported or cfg.attn_kind == "mla"
+                    or cfg.is_encoder_decoder or cfg.n_vision_tokens):
+                raise ValueError(
+                    f"paged KV cache supports pure full-GQA-attention "
+                    f"stacks (got pattern={cfg.block_pattern}, "
+                    f"attn_kind={cfg.attn_kind!r}): recurrent states, MLA "
+                    f"latents and encoder memories have no block-sharing "
+                    f"story yet")
         # absorb MLA decode weights once per engine session (identity-
         # cached across engines; switching to a non-MLA model frees any
         # previous model's cached absorption)
@@ -204,27 +238,70 @@ class Engine:
             logits, cache = decode_step(ctx, params, token, cache, cfg)
             return _sample(logits, key), cache
 
+        def _chunk(params, tokens, cache, row, start, length, key):
+            logits, cache = prefill_chunk(ctx, params, tokens, cfg, cache,
+                                          row, start, length)
+            return _sample(logits, key), cache
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._chunk = jax.jit(_chunk)
+
+        # paged geometry: the chunk width is the (even) prefill length,
+        # chunk starts are page-aligned (matched prefixes are whole
+        # pages), so int4 nibble pairs always land whole
+        self.page_size = sc.page_size + sc.page_size % 2
+        self._chunk_len = self.prefill_len + self.prefill_len % 2 \
+            if sc.paged else self.prefill_len
 
         # --- continuous-scheduler state ---------------------------------
-        self.slots: Optional[SlotKVCache] = None
+        self.slots = None                # SlotKVCache | PagedKVCache
         self.sched: Optional[ContinuousScheduler] = None
+        self.pool: Optional[PagePool] = None
+        self.prefix: Optional[RadixPrefixCache] = None
         self._tok = None
         self._key = jax.random.PRNGKey(sc.seed)
-        self._bucket_steps = 0           # bucketed-path occupancy counters
-        self._bucket_slot_steps = 0
+        self._dummy_key = jax.random.PRNGKey(0)  # non-final chunk sampling
+        self._bucket_stats = SchedulerStats(n_slots=sc.decode_batch)
         if sc.scheduler == "continuous":
             self._reset_continuous()
 
     # ------------------------------------------------------------------
     def _reset_continuous(self) -> None:
         sc = self.sc
-        self.slots = SlotKVCache(self.cfg, sc.decode_batch, sc.max_len,
-                                 sc.kv_dtype)
         self.sched = ContinuousScheduler(sc.decode_batch, sc.eos_id,
                                          sc.max_new_tokens)
         self._tok = jnp.zeros((sc.decode_batch, 1), jnp.int32)
+        if not sc.paged:
+            self.slots = SlotKVCache(self.cfg, sc.decode_batch, sc.max_len,
+                                     sc.kv_dtype)
+            return
+        ps = self.page_size
+        nb = -(-sc.max_len // ps)
+        # full residency for every lane + its parked page + one request's
+        # worth of prefix-retention headroom
+        n_pages = sc.n_pages or (sc.decode_batch * (nb + 1) + nb)
+        if n_pages < nb + sc.decode_batch:
+            raise ValueError(
+                f"n_pages={n_pages} cannot hold one parked page per slot "
+                f"plus one full request ({nb} blocks at page_size={ps})")
+        self.slots = PagedKVCache(self.cfg, sc.decode_batch, sc.max_len,
+                                  sc.kv_dtype, ps, n_pages)
+        self.pool = PagePool(n_pages, ps)
+        self.prefix = RadixPrefixCache(self.pool) if sc.prefix_cache else None
+        # one permanently-allocated private page per slot: retired (and
+        # still-prefilling) rows point every unused block-table entry at
+        # it, so the decode step's unconditional write never lands in a
+        # page another request owns
+        self._parked = self.pool.alloc(sc.decode_batch)
+        self._row_pages: Dict[int, List[int]] = {}
+        self._prefill_jobs: Dict[int, "_PrefillJob"] = {}
+        self._prefill_chunks = 0
+        self._prefill_tokens_computed = 0
+        self._prompt_tokens_total = 0
+        self._prefix_hit_tokens = 0
+        for slot in range(sc.decode_batch):
+            self.slots.set_row(slot, [self._parked[slot]] * nb, 0)
 
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
@@ -248,10 +325,14 @@ class Engine:
                 + (f" (+{self._n_vis} vision tokens)" if self._n_vis else "")
                 + f" leaves no decode budget within max_len={self.sc.max_len}"
                 f" — raise ServeConfig.max_len or shorten the prompt")
-        if self.sc.scheduler == "continuous" and eff > self.prefill_len:
+        if (self.sc.scheduler == "continuous" and not self.sc.paged
+                and eff > self.prefill_len):
+            # the paged engine has no such cap: chunked prefill feeds any
+            # prompt < max_len through the one compiled chunk shape
             raise ValueError(
                 f"request {req.uid}: prompt length {plen} exceeds the "
-                f"compiled prefill shape prefill_len={self.prefill_len}")
+                f"compiled prefill shape prefill_len={self.prefill_len} "
+                f"(ServeConfig(paged=True) lifts this via chunked prefill)")
 
     def _batch_for(self, prompts: np.ndarray) -> Dict[str, jax.Array]:
         b, s = prompts.shape
@@ -285,8 +366,91 @@ class Engine:
         self.sched.submit(req)
         return req.uid
 
+    # ------------------------------------------------------------------
+    # Paged admission: map pages (prefix hits + fresh allocations) into
+    # the slot's block table; the prompt then prefills chunk-by-chunk
+    # across engine steps (interleaved with decode) instead of in one
+    # blocking call.
+    # ------------------------------------------------------------------
+    def _admit_paged(self) -> Optional[List[Result]]:
+        if not self.sched.queue or self.sched.table.n_free == 0:
+            return None
+        nxt = self.sched.next_admission()
+        req, state = nxt
+        eff = state.prompt_len
+        state.budget = min(state.budget, self.sc.max_len - eff)
+        ps, nb = self.page_size, self.slots.n_blocks
+        matched: List[int] = []
+        if self.prefix is not None:
+            # cap: at least one prompt token is recomputed — the final
+            # chunk's logits seed the first sampled token
+            matched = self.prefix.match(req.prompt,
+                                        max_blocks=(eff - 1) // ps)
+        m_tok = len(matched) * ps
+        need = -(-(eff + max(state.budget, 0)) // ps) - len(matched)
+        fresh = self.pool.alloc(need)
+        if fresh is None:
+            # pool pressure: roll the match back (refs AND counters, so
+            # retries don't inflate hit stats), put the request back at
+            # the queue head, retry when a retirement frees pages
+            if self.prefix is not None:
+                self.prefix.release_match(matched, (eff - 1) // ps)
+            self.sched.queue.appendleft(req)
+            return None
+        slot = self.sched.admit(state)
+        row = matched + fresh
+        self._row_pages[slot] = row
+        self.slots.set_row(slot, row + [self._parked[slot]] * (nb - len(row)),
+                           m_tok)
+        self._prefill_jobs[slot] = _PrefillJob(req=req, state=state,
+                                               next=m_tok,
+                                               matched_tokens=m_tok)
+        self._prompt_tokens_total += eff
+        self._prefix_hit_tokens += m_tok
+        return []
+
+    def _advance_prefill(self, slot: int) -> List[Result]:
+        """Run one prefill chunk for a mid-admission slot; on the final
+        chunk, sample the first token and (maybe) retire."""
+        job = self._prefill_jobs[slot]
+        eff = job.state.prompt_len
+        c = self._chunk_len
+        start = job.next
+        length = min(c, eff - start)
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :length] = job.req.prompt[start:start + length]
+        final = start + length >= eff
+        t0 = time.perf_counter()
+        tok, self.slots.cache = self._chunk(
+            self.params, jnp.asarray(tokens), self.slots.cache,
+            jnp.int32(slot), jnp.int32(start), jnp.int32(length),
+            self._next_key() if final else self._dummy_key)
+        if final:
+            first = int(jax.device_get(tok)[0, 0])
+        job.state.t_prefill += time.perf_counter() - t0
+        job.next = start + length
+        self._prefill_chunks += 1
+        self._prefill_tokens_computed += length
+        if not final:
+            return []
+        del self._prefill_jobs[slot]
+        if self.prefix is not None:
+            # register the prompt's *full* blocks (a partial tail block
+            # will also hold this request's decode tokens — unshareable)
+            self.prefix.insert(job.req.prompt,
+                               self._row_pages[slot][:eff // self.page_size])
+        if job.state.budget <= 0:
+            # degenerate max_new_tokens=0 — same semantics as unpaged
+            return [self._finish(slot)]
+        self._tok = self._tok.at[slot, 0].set(first)
+        if self.sched.record_token(slot, first):
+            return [self._finish(slot)]
+        return []
+
     def _admit_one(self) -> Optional[List[Result]]:
         """Prefill the next queued request into a free slot (if any)."""
+        if self.sc.paged:
+            return self._admit_paged()
         nxt = self.sched.next_admission()
         if nxt is None:
             return None
@@ -321,6 +485,13 @@ class Engine:
 
     def _finish(self, slot: int) -> Result:
         state = self.sched.retire(slot)
+        if self.sc.paged:
+            # release the slot's pages (tree-registered prompt blocks go
+            # cold/retained; private blocks free) and park the row so
+            # the lockstep decode write stays harmless
+            self.pool.decref(self._row_pages.pop(slot, []))
+            self.slots.set_row(
+                slot, [self._parked[slot]] * self.slots.n_blocks, 0)
         now = time.perf_counter()
         toks = np.asarray(state.tokens, np.int32)
         return Result(
@@ -332,8 +503,10 @@ class Engine:
             latency_s=now - state.t_submit if state.t_submit else 0.0)
 
     def step(self) -> List[Result]:
-        """Admit as many queued requests as there are free slots, then run
-        one decode step over all slots. Returns requests finished now."""
+        """Admit as many queued requests as there are free slots, advance
+        every in-flight chunked prefill by one chunk (paged), then run
+        one decode step over the decoding slots. Returns requests
+        finished now."""
         if self.sc.scheduler != "continuous":
             raise RuntimeError("step() needs scheduler='continuous'")
         finished: List[Result] = []
@@ -343,14 +516,23 @@ class Engine:
                 break
             finished.extend(done)
 
-        if self.sched.table.n_active == 0:
+        if self.sc.paged:
+            # one chunk per prefilling slot per step: long prompts share
+            # the engine loop with live decode instead of blocking it
+            for slot in sorted(self._prefill_jobs):
+                finished.extend(self._advance_prefill(slot))
+            decoding = [s for s in self.sched.table.active_slots()
+                        if s not in self._prefill_jobs]
+        else:
+            decoding = self.sched.table.active_slots()
+        if not decoding:
             return finished
 
         self._tok, self.slots.cache = self._decode(
             self.params, self._tok, self.slots.cache, self._next_key())
-        self.sched.note_decode_step()
+        self.sched.note_decode_step(len(decoding))
         toks = np.asarray(jax.device_get(self._tok))[:, 0]
-        for slot in self.sched.table.active_slots():
+        for slot in decoding:
             if self.sched.record_token(slot, toks[slot]):
                 finished.append(self._finish(slot))
         return finished
@@ -366,23 +548,52 @@ class Engine:
         return results
 
     def stats(self) -> Dict[str, float]:
-        """Scheduler-level counters: decode lane utilization etc."""
+        """Scheduler-level counters: decode lane utilization etc. The
+        paged engine adds page-pool occupancy/eviction counters, the
+        prefix cache's hit/miss tallies, and the chunked-prefill work
+        accounting (``prefill_tokens_computed`` vs
+        ``prompt_tokens_total`` — their gap is compute the prefix cache
+        skipped)."""
         if self.sc.scheduler == "bucketed":
-            n = self._bucket_steps
-            occ = (self._bucket_slot_steps
-                   / (n * self.sc.decode_batch)) if n else 0.0
-            return {"decode_steps": n, "occupancy": round(occ, 4)}
+            # the bucketed path shares SchedulerStats — constructed with
+            # the real lane count, not the dataclass's n_slots=1 default,
+            # so occupancy is a fraction of actual decode lanes
+            s = self._bucket_stats
+            return {"decode_steps": s.decode_steps,
+                    "occupancy": round(s.occupancy, 4)}
         s = self.sched.stats
-        return {"admitted": s.admitted, "retired": s.retired,
-                "eos_retired": s.eos_retired, "decode_steps": s.decode_steps,
-                "occupancy": round(s.occupancy, 4)}
+        out = {"admitted": s.admitted, "retired": s.retired,
+               "eos_retired": s.eos_retired, "decode_steps": s.decode_steps,
+               "occupancy": round(s.occupancy, 4)}
+        if self.sc.paged:
+            out.update(self.pool.stats())
+            if self.prefix is not None:
+                out.update(self.prefix.stats())
+            hit = self._prefix_hit_tokens
+            total = self._prompt_tokens_total
+            out.update(prefill_chunks=self._prefill_chunks,
+                       prefill_tokens_computed=self._prefill_tokens_computed,
+                       prompt_tokens_total=total,
+                       prefix_hit_tokens=hit,
+                       prefix_hit_rate=round(hit / total, 4) if total else 0.0)
+        return out
+
+    # ``metrics()`` is the serving-convention alias
+    metrics = stats
 
     def _reset_stats(self) -> None:
         if self.sched is not None:
             self.sched.stats = type(self.sched.stats)(
                 n_slots=self.sc.decode_batch)
-        self._bucket_steps = 0
-        self._bucket_slot_steps = 0
+        self._bucket_stats = SchedulerStats(n_slots=self.sc.decode_batch)
+        if self.sc.paged:
+            self.pool.reset_stats()
+            if self.prefix is not None:
+                self.prefix.reset_stats()
+            self._prefill_chunks = 0
+            self._prefill_tokens_computed = 0
+            self._prompt_tokens_total = 0
+            self._prefix_hit_tokens = 0
 
     def warmup(self) -> None:
         """Trigger the two compiles (prefill + decode) with a dummy
@@ -431,8 +642,8 @@ class Engine:
                 break
             # a lane is useful only while its (real) request still needs
             # tokens — padding rows and early-EOS rows ride along wasted
-            self._bucket_steps += 1
-            self._bucket_slot_steps += sum(
+            self._bucket_stats.decode_steps += 1
+            self._bucket_stats.decode_slot_steps += sum(
                 1 for i, r in enumerate(reqs)
                 if not done[i]
                 and step < self._req_budget(r))

@@ -1,0 +1,249 @@
+"""Paged KV cache: block-granular page pool + per-slot block tables.
+
+The slot cache (``serve.slots``) backs every request with a contiguous
+``max_len`` row: admission copies whole rows, and the cache is sized for
+the worst case even when most requests are short. This module replaces
+the row substrate with the production layout (vLLM/rtp-llm style):
+
+  * device-side, each attention layer's K/V live in a **page pool** —
+    ``(n_pages, KV, page_size, hd)`` (packed4 int4: ``(n_pages, KV,
+    page_size/2, hd)`` uint8; int8/int4 scales ``(n_pages, KV,
+    page_size)``) — and every slot row carries a **block table**
+    ``(B, n_blocks)`` of physical page ids. Decode attention follows the
+    indirection (``kernels.ops.decode_attention_op(block_table=...)``);
+    admission never copies a row — it just rewrites the slot's table.
+  * host-side, :class:`PagePool` is the ref-counted allocator: a free
+    list for virgin pages plus an LRU **cold set** of pages whose
+    refcount dropped to zero but which still back a radix-tree prefix
+    block (``serve.prefix``). Allocation under pressure evicts cold
+    pages LRU-first, telling the tree to drop the backing nodes.
+
+Page size must be **even** so the int4 packed container's nibble pairs
+(two slots per byte) never straddle a page, and should equal the
+flash-decode kernel block (the paged kernel streams exactly one page
+per sequence grid step). On real TPU hardware Mosaic additionally wants
+the page to meet the sublane tile (32 for int8 codes, 64 for packed4);
+interpret mode — and therefore CPU CI — accepts any even size.
+
+Every block-table entry always holds a *valid* physical page id: entries
+past a slot's allocation point at the slot's **parked page** (one
+permanently-allocated, never-shared page per slot), so the decode step's
+unconditional per-row cache write lands somewhere harmless for retired
+or still-prefilling rows instead of corrupting a page another request
+owns. The engine re-points a row at its parked page on retirement.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache
+from repro.serve.slots import KV_DTYPES
+
+
+# ==========================================================================
+# Host-side allocator
+# ==========================================================================
+class PagePool:
+    """Ref-counted physical-page allocator with LRU eviction.
+
+    Page states (disjoint):
+      * **free** — on the free list, content garbage;
+      * **hot**  — refcount ≥ 1 (owned by ≥ 1 live request, and/or just
+        revived by a prefix match);
+      * **cold** — refcount 0 but still registered as a radix-tree
+        prefix block: content stays valid and a future prefix match can
+        revive it (``incref``). Cold pages are the eviction pool, oldest
+        first.
+
+    ``evict_hook(page)`` — installed by :class:`~repro.serve.prefix.
+    RadixPrefixCache` — is called when a cold page is reclaimed so the
+    tree drops the node (and its subtree, whose pages are released back
+    here via :meth:`release_cached`).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if page_size % 2:
+            raise ValueError(
+                f"page_size={page_size} must be even: int4 packs two slots "
+                f"per byte and a nibble pair must not straddle a page")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: collections.deque = collections.deque(range(n_pages))
+        self._ref = [0] * n_pages
+        self._cached = [False] * n_pages      # backs a radix-tree node
+        self._cold: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()          # refcount-0 cached, LRU order
+        self.evict_hook: Optional[Callable[[int], None]] = None
+        self.evictions = 0
+        self.allocated = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_cold(self) -> int:
+        return len(self._cold)
+
+    @property
+    def n_hot(self) -> int:
+        return self.n_pages - self.n_free - self.n_cold
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh pages at refcount 1, evicting cold prefix pages
+        LRU-first if the free list runs dry. Returns None (no state
+        change) when free + cold cannot cover the request — the caller
+        defers admission until live requests retire."""
+        if n > len(self._free) + len(self._cold):
+            return None
+        out: List[int] = []
+        while len(out) < n:
+            if self._free:
+                p = self._free.popleft()
+            else:
+                # oldest cold page; the tree drops its node + subtree
+                # (subtree pages are cold too — a hot descendant would
+                # hold refs on every ancestor — and come back via
+                # release_cached, growing the free list mid-loop)
+                p, _ = self._cold.popitem(last=False)
+                self._cached[p] = False
+                self.evictions += 1
+                if self.evict_hook is not None:
+                    self.evict_hook(p)
+            self._ref[p] = 1
+            out.append(p)
+        self.allocated += n
+        return out
+
+    def incref(self, pages: List[int]) -> None:
+        """Revive/share pages (prefix-cache hit): cold pages leave the
+        eviction pool."""
+        for p in pages:
+            if self._ref[p] == 0:
+                self._cold.pop(p, None)
+            self._ref[p] += 1
+
+    def decref(self, pages: List[int]) -> None:
+        """Release one reference per page. A page reaching refcount 0
+        goes cold (retained, evictable) if it backs a radix-tree block,
+        else straight back to the free list."""
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise RuntimeError(f"double free of page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                if self._cached[p]:
+                    self._cold[p] = None          # MRU end of the LRU
+                else:
+                    self._free.append(p)
+
+    # ------------------------------------------------------------------
+    def mark_cached(self, page: int) -> None:
+        """The radix tree took a node over this page (refcount stays the
+        owner's; the page just becomes retainable-after-release)."""
+        self._cached[page] = True
+
+    def release_cached(self, page: int) -> None:
+        """The radix tree dropped this page's node (subtree of an
+        eviction): no longer retainable; free it if unreferenced."""
+        if not self._cached[page]:
+            return
+        self._cached[page] = False
+        if self._ref[page] == 0:
+            self._cold.pop(page, None)
+            self._free.append(page)
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def stats(self) -> Dict[str, int]:
+        return {"pages_total": self.n_pages, "pages_free": self.n_free,
+                "pages_cold": self.n_cold, "pages_hot": self.n_hot,
+                "evictions": self.evictions, "page_allocs": self.allocated}
+
+    def reset_stats(self) -> None:
+        self.evictions = 0
+        self.allocated = 0
+
+
+# ==========================================================================
+# Device-side paged cache
+# ==========================================================================
+def _update_layer_row(layer: Dict, slot, row, pos, stacked: bool) -> Dict:
+    """Rewrite one slot's block-table row + pos in a layer cache (leading
+    group axis broadcast for scan-stacked layers)."""
+    if "block_table" not in layer:
+        return layer
+    out = dict(layer)
+    if stacked:
+        out["block_table"] = layer["block_table"].at[:, slot].set(row)
+        out["pos"] = layer["pos"].at[:, slot].set(pos)
+    else:
+        out["block_table"] = layer["block_table"].at[slot].set(row)
+        out["pos"] = layer["pos"].at[slot].set(pos)
+    return out
+
+
+def set_block_table_row(cache: Dict, slot: jax.Array, row: jax.Array,
+                        pos: jax.Array) -> Dict:
+    """Point slot ``slot`` of every attention layer at physical pages
+    ``row`` (n_blocks,) with write position ``pos``. Pure pytree
+    function — jit once; slot/row/pos are traced, so one compile covers
+    every admission and retirement."""
+    out = dict(cache)
+    out["prefix"] = [_update_layer_row(c, slot, row, pos, False)
+                     for c in cache["prefix"]]
+    out["suffix"] = [_update_layer_row(c, slot, row, pos, False)
+                     for c in cache["suffix"]]
+    if cache["groups"]:
+        out["groups"] = {k: _update_layer_row(v, slot, row, pos, True)
+                         for k, v in cache["groups"].items()}
+    return out
+
+
+class PagedKVCache:
+    """Device page pools + block tables for ``n_slots`` decode lanes.
+
+    The pools are allocated by ``models.init_cache(pages=, page_size=)``
+    — per attention layer ``(n_pages, KV, page_size, hd)`` (scan-stacked
+    groups carry a leading group axis; block tables are replicated
+    per layer so the decode pytree stays self-contained). Admission and
+    retirement rewrite one slot's table row (:func:`set_block_table_row`)
+    — there is no row copy and no per-request prefill cache template.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 kv_dtype: str, page_size: int, n_pages: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.kv_dtype = kv_dtype
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.n_blocks = -(-max_len // page_size)
+        self.cache = init_cache(cfg, n_slots, max_len,
+                                dtype=KV_DTYPES[kv_dtype],
+                                pages=n_pages, page_size=page_size)
+        self._set_row = jax.jit(set_block_table_row)
+
+    def set_row(self, slot: int, pages: List[int], pos: int) -> None:
+        """Map a slot's logical blocks onto physical ``pages`` (padded
+        to n_blocks by the caller — typically with the slot's parked
+        page) and reset its write position."""
+        assert len(pages) == self.n_blocks, \
+            f"block table row needs {self.n_blocks} entries, got {len(pages)}"
+        row = jnp.asarray(np.asarray(pages, np.int32))
+        self.cache = self._set_row(self.cache, jnp.int32(slot), row,
+                                   jnp.int32(pos))
+
+    def hbm_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.cache))

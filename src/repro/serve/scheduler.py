@@ -98,6 +98,10 @@ class ContinuousScheduler:
         self.stats.retired += 1
         return self.table.free(slot)
 
-    def note_decode_step(self) -> None:
+    def note_decode_step(self, n_useful: Optional[int] = None) -> None:
+        """``n_useful`` overrides the useful-lane count for this step —
+        the paged engine excludes slots still mid-chunked-prefill (they
+        occupy a lane but ride the decode dispatch masked)."""
         self.stats.decode_steps += 1
-        self.stats.decode_slot_steps += self.table.n_active
+        self.stats.decode_slot_steps += (self.table.n_active
+                                         if n_useful is None else n_useful)

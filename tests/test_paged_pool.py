@@ -1,0 +1,189 @@
+"""Property tests: page-pool allocator + radix prefix tree invariants.
+
+The whole module needs ``hypothesis`` (like the other property modules —
+CI installs it; the bare container skips).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; CI installs it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.pages import PagePool  # noqa: E402
+from repro.serve.prefix import RadixPrefixCache  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# PagePool: alloc/free/refcount never leaks or double-frees
+# ---------------------------------------------------------------------------
+def _pool_invariants(pool: PagePool, live):
+    held = [p for pages in live.values() for p in pages]
+    # no page is in two live allocations
+    assert len(held) == len(set(held))
+    # conservation: every page is exactly one of free / cold / hot
+    assert pool.n_free + pool.n_cold + pool.n_hot == pool.n_pages
+    # every held page is referenced
+    for p in held:
+        assert pool.refcount(p) >= 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 24),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(1, 6),
+                          st.booleans()),
+                min_size=1, max_size=40))
+def test_pool_alloc_free_never_leaks(n_pages, ops):
+    """Random alloc/decref/cache interleavings: pages are never shared
+    between live allocations, never lost, and never double-freed."""
+    pool = PagePool(n_pages, page_size=2)
+    live = {}
+    uid = 0
+    for kind, n, mark in ops:
+        if kind == 0:                      # alloc
+            got = pool.alloc(n)
+            if n > n_pages:
+                assert got is None
+                continue
+            if got is not None:
+                assert len(got) == n
+                if mark:                   # register with the "tree"
+                    for p in got:
+                        pool.mark_cached(p)
+                live[uid] = got
+                uid += 1
+        elif kind == 1 and live:           # release the oldest allocation
+            k = min(live)
+            pool.decref(live.pop(k))
+        elif kind == 2 and live:           # share then release (refcount)
+            k = max(live)
+            pool.incref(live[k])
+            pool.decref(live[k])
+        _pool_invariants(pool, live)
+    for pages in live.values():
+        pool.decref(pages)
+    # everything released: nothing hot beyond zero
+    assert pool.n_hot == 0
+    assert pool.n_free + pool.n_cold == pool.n_pages
+
+
+def test_pool_double_free_raises():
+    pool = PagePool(4, page_size=2)
+    pages = pool.alloc(2)
+    pool.decref(pages)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.decref(pages)
+
+
+def test_pool_odd_page_size_rejected():
+    with pytest.raises(ValueError, match="even"):
+        PagePool(4, page_size=3)
+
+
+def test_pool_eviction_is_lru_and_notifies():
+    """Cold pages evict oldest-first and the hook fires per eviction."""
+    pool = PagePool(4, page_size=2)
+    evicted = []
+    pool.evict_hook = evicted.append
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    for p in a + b:
+        pool.mark_cached(p)
+    pool.decref(a)          # a goes cold first → LRU victim
+    pool.decref(b)
+    got = pool.alloc(3)
+    assert got is not None and len(got) == 3
+    assert evicted[:2] == a  # oldest cold allocation evicted first
+    assert pool.evictions == 3
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix tree: insert/match/evict invariants
+# ---------------------------------------------------------------------------
+PS = 4  # block/page size for tree tests
+
+
+def _blocks(rng, n, alphabet=3):
+    return rng.integers(0, alphabet, size=n * PS).astype(np.int32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5), st.integers(0, 6))
+def test_radix_match_returns_inserted_prefix(seed, n_blocks, max_blocks):
+    """Immediately after insert (owner still holds its refs), matching
+    the same prompt returns exactly the inserted pages, capped at
+    max_blocks, and each returned page carries the match's reference."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(16, PS)
+    tree = RadixPrefixCache(pool)
+    tokens = _blocks(rng, n_blocks)
+    pages = pool.alloc(n_blocks)
+    tree.insert(tokens, pages)
+    got = tree.match(tokens, max_blocks=max_blocks)
+    assert got == pages[:min(max_blocks, n_blocks)]
+    for p in got:
+        assert pool.refcount(p) >= 2       # owner + match
+    pool.decref(got)
+    pool.decref(pages)
+    assert pool.n_hot == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_radix_divergent_tails_share_common_prefix(seed, n_shared):
+    """Two prompts sharing n_shared leading blocks: the second match
+    walks the shared path only; pages past the divergence are not
+    returned."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(32, PS)
+    tree = RadixPrefixCache(pool)
+    shared = _blocks(rng, n_shared)
+    a = np.concatenate([shared, _blocks(rng, 2) + 10])
+    b = np.concatenate([shared, _blocks(rng, 2) + 20])
+    pa = pool.alloc(n_shared + 2)
+    tree.insert(a, pa)
+    got = tree.match(b, max_blocks=n_shared + 2)
+    assert got == pa[:n_shared]
+    pool.decref(got)
+    pool.decref(pa)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.lists(st.integers(1, 3), min_size=2, max_size=8))
+def test_radix_eviction_never_strands_live_pages(seed, sizes):
+    """Insert prompts until the pool must evict: every page a match
+    returns is hot (refcounted), evicted pages vanish from the tree, and
+    free+cold+hot conservation holds throughout."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(10, PS)
+    tree = RadixPrefixCache(pool)
+    for n in sizes:
+        tokens = _blocks(rng, n, alphabet=5)
+        got = tree.match(tokens, max_blocks=max(n - 1, 0))
+        fresh = pool.alloc(n - len(got))
+        if fresh is None:                  # pool genuinely full of hot pages
+            pool.decref(got)
+            continue
+        tree.insert(tokens, got + fresh)
+        for p in got + fresh:
+            assert pool.refcount(p) >= 1
+        pool.decref(got + fresh)           # retire immediately
+        assert pool.n_free + pool.n_cold + pool.n_hot == pool.n_pages
+        assert pool.n_hot == 0
+        # the tree never references a freed page
+        for page, node in tree._by_page.items():
+            assert node.page == page
+            assert pool._cached[page]
+
+
+def test_radix_reset_releases_everything():
+    pool = PagePool(8, PS)
+    tree = RadixPrefixCache(pool)
+    tokens = np.arange(3 * PS, dtype=np.int32)
+    pages = pool.alloc(3)
+    tree.insert(tokens, pages)
+    pool.decref(pages)
+    assert pool.n_cold == 3
+    tree.reset()
+    assert pool.n_cold == 0 and pool.n_free == 8
+    assert tree.match(tokens, max_blocks=3) == []

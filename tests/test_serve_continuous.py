@@ -98,6 +98,28 @@ def test_engine_zero_budget_request(tiny):
         np.testing.assert_array_equal(rc.tokens, rb.tokens)
 
 
+def test_bucketed_occupancy_uses_real_slot_count(tiny):
+    """Regression: the bucketed path must feed SchedulerStats its real
+    lane count (decode_batch), not the dataclass's n_slots=1 default —
+    otherwise an under-full bucket reports occupancy > 1 instead of the
+    honest fraction. One request in a 4-lane bucket: exactly 1 of 4
+    lanes does useful work per decode step."""
+    from repro.serve import SchedulerStats
+    cfg, params = tiny
+    eng = _engine(cfg, params, decode_batch=4, scheduler="bucketed",
+                  max_new_tokens=6)
+    eng.generate(_reqs(cfg, 1))
+    assert isinstance(eng._bucket_stats, SchedulerStats)
+    assert eng._bucket_stats.n_slots == 4
+    st = eng.stats()
+    assert st["decode_steps"] > 0
+    assert abs(st["occupancy"] - 0.25) < 1e-6
+    # a fresh generate() resets the counters with the same n_slots
+    eng.generate(_reqs(cfg, 1))
+    assert eng._bucket_stats.n_slots == 4
+    assert abs(eng.stats()["occupancy"] - 0.25) < 1e-6
+
+
 def test_more_requests_than_slots_all_complete(tiny):
     cfg, params = tiny
     eng = _engine(cfg, params, decode_batch=2)
