@@ -37,7 +37,7 @@ except ImportError:  # run as a loose script with benchmarks/ on sys.path
 
 from repro.configs import get_config
 from repro.models import init_lm
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, Request, ServeConfig, percentile
 
 
 def make_workload(rng: np.random.Generator, n: int, vocab: int,
@@ -59,10 +59,6 @@ def clone(reqs):
                     max_new_tokens=r.max_new_tokens) for r in reqs]
 
 
-def percentile(sorted_vals, q):
-    return sorted_vals[min(len(sorted_vals) - 1, int(q * len(sorted_vals)))]
-
-
 def run_lane(params, cfg, sc: ServeConfig, reqs, label: str):
     eng = Engine(params, cfg, sc)
     eng.warmup()                         # compile chunk + decode shapes
@@ -70,7 +66,7 @@ def run_lane(params, cfg, sc: ServeConfig, reqs, label: str):
     res = eng.generate(clone(reqs))
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in res)
-    ttfts = sorted(r.ttft_s for r in res)
+    ttfts = [r.ttft_s for r in res if r.ttft_s is not None]
     st = eng.stats()
     row = {
         "lane": label,

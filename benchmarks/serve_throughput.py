@@ -16,23 +16,31 @@ the measured gap is pure scheduling efficiency, not compile amortization.
 Reported: aggregate tokens/s, p50/p95 end-to-end latency, lane occupancy
 — plus a greedy-parity check (both schedulers must emit identical tokens
 per request).
+
+A third, ungated lane re-runs the continuous workload with full
+telemetry (metrics + lifecycle tracing) enabled and asserts (a) tokens
+stay identical and (b) throughput stays within 3% of the disabled run
+(best-of-N on both sides to absorb scheduler jitter). The telemetry
+run's trace and metrics snapshots are written to ``benchmarks/out/`` as
+CI artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
 try:
-    from benchmarks.common import write_csv, write_summary
+    from benchmarks.common import out_path, write_csv, write_summary
 except ImportError:  # run as a loose script with benchmarks/ on sys.path
-    from common import write_csv, write_summary
+    from common import out_path, write_csv, write_summary
 
 from repro.configs import get_config
 from repro.models import init_lm
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, Request, ServeConfig, percentile
 
 
 def make_workload(rng: np.random.Generator, n: int, vocab: int,
@@ -52,11 +60,6 @@ def clone(reqs):
                     max_new_tokens=r.max_new_tokens) for r in reqs]
 
 
-def percentile(sorted_vals, q):
-    return sorted_vals[min(len(sorted_vals) - 1,
-                           int(q * len(sorted_vals)))]
-
-
 def run_one(params, cfg, sc: ServeConfig, reqs, label: str):
     eng = Engine(params, cfg, sc)
     eng.generate(clone(reqs))           # warm: compile every shape
@@ -64,7 +67,7 @@ def run_one(params, cfg, sc: ServeConfig, reqs, label: str):
     res = eng.generate(clone(reqs))
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in res)
-    lats = sorted(r.latency_s for r in res)
+    lats = [r.latency_s for r in res if r.latency_s is not None]
     row = {
         "scheduler": label,
         "tokens": toks,
@@ -75,6 +78,33 @@ def run_one(params, cfg, sc: ServeConfig, reqs, label: str):
         "occupancy": eng.stats()["occupancy"],
     }
     return row, res
+
+
+def telemetry_overhead(params, cfg, base, reqs, repeats: int = 2):
+    """Best-of-``repeats`` tok/s with telemetry off vs fully on (same
+    warmed engine per side), plus the on-side engine for artifact
+    export. Tokens must be identical — telemetry may only observe."""
+    best = {}
+    results = {}
+    eng_on = None
+    for label, tel in (("off", False), ("on", True)):
+        eng = Engine(params, cfg, ServeConfig(scheduler="continuous",
+                                              telemetry=tel, **base))
+        eng.generate(clone(reqs))       # warm: compile every shape
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = eng.generate(clone(reqs))
+            wall = time.perf_counter() - t0
+            tps = sum(len(r.tokens) for r in res) / wall
+            best[label] = max(best.get(label, 0.0), tps)
+        results[label] = res
+        if tel:
+            eng_on = eng
+    mismatch = [a.uid for a, b in zip(results["off"], results["on"])
+                if not np.array_equal(a.tokens, b.tokens)]
+    assert not mismatch, \
+        f"telemetry changed greedy outputs for uids {mismatch}"
+    return best["on"] / best["off"], best, eng_on
 
 
 def run(quick: bool = False):
@@ -142,6 +172,23 @@ def _bench(argv=None):
             f"[bench-gate] FAIL: continuous/bucketed speedup {speedup:.2f}x "
             f"is below the floor {args.min_speedup:.2f}x")
 
+    # telemetry overhead lane (ungated — not a gate.py floor): full
+    # tracing must cost ≤ 3% throughput and change zero tokens
+    ratio, best, eng_tel = telemetry_overhead(params, cfg, base, reqs)
+    print(f"[bench] telemetry overhead: {best['on']:.1f} vs "
+          f"{best['off']:.1f} tok/s (ratio {ratio:.3f})")
+    assert ratio >= 0.97, \
+        f"telemetry overhead ratio {ratio:.3f} below the 0.97 floor"
+    with open(out_path("serve_metrics.json"), "w") as f:
+        json.dump(eng_tel.stats(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(out_path("serve_metrics.prom"), "w") as f:
+        f.write(eng_tel.prometheus())
+    eng_tel.write_trace(out_path("serve_trace.json"),
+                        jsonl_path=out_path("serve_trace.jsonl"))
+    print("[bench] telemetry artifacts: serve_metrics.json/.prom, "
+          "serve_trace.json/.jsonl")
+
     path = write_csv("serve_throughput.csv",
                      ["scheduler", "tokens", "wall_s", "tok_per_s",
                       "p50_ms", "p95_ms", "occupancy"],
@@ -153,6 +200,7 @@ def _bench(argv=None):
         "arch": args.arch,
         "kv_dtype": args.kv,
         "gate": {"continuous_vs_bucketed": speedup},
+        "telemetry_overhead_ratio": ratio,
         "lanes": rows,
     })
     print(f"[bench] wrote {path}")

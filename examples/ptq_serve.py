@@ -13,7 +13,9 @@ one system prompt through the **paged** engine (``--arch`` permitting —
 paged needs a pure-attention stack, so this step runs on phi3-mini),
 where the radix-tree prefix cache maps the shared blocks into each new
 request's block table and the printed prefix-hit rate shows how much
-prefill the cache deleted.
+prefill the cache deleted. The paged act runs with telemetry enabled,
+so it also prints the step-phase p50 breakdown (admission / prefill /
+decode / transfer) straight from the engine's metrics registry.
 """
 import argparse
 import time
@@ -102,7 +104,7 @@ def main():
               f"on phi3-mini-3.8b instead)")
     peng = Engine(pparams, pcfg, ServeConfig(
         max_len=96, decode_batch=4, max_new_tokens=8, kv_dtype="int8",
-        prefill_len=16, paged=True, page_size=8))
+        prefill_len=16, paged=True, page_size=8, telemetry=True))
     system_prompt = rng.integers(0, pcfg.vocab, size=24).astype(np.int32)
     shared_reqs = [Request(
         uid=i, prompt=np.concatenate(
@@ -116,6 +118,12 @@ def main():
           f"{pst['prefill_tokens_computed']}/{pst['prompt_tokens_total']} "
           f"prompt tokens computed, {pst['prefill_chunks']} chunks, "
           f"{pst['evictions']} evictions")
+    phases = " ".join(
+        f"{ph} {pst[f'step_{ph}_seconds']['p50'] * 1e3:.2f}ms"
+        for ph in ("admission", "prefill", "decode", "transfer"))
+    print(f"   step-phase p50: {phases}  "
+          f"(ttft p50 {pst['ttft_seconds']['p50'] * 1e3:.0f}ms, "
+          f"{pst['compiled_shapes_decode']} decode shape(s) compiled)")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ bucketed`` falls back to the prompt-length-bucketed baseline scheduler.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -21,7 +23,7 @@ from repro.data import capture_calibration, data_config_for
 from repro.models import init_lm, lm_loss
 from repro.models.quantize import quantize_model_params
 from repro.quant.base import QuantizerConfig
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, Request, ServeConfig, percentile
 
 
 def main(argv=None):
@@ -62,6 +64,28 @@ def main(argv=None):
                         "kernel block in the paged path)")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable radix-tree prefix reuse (paged only)")
+    p.add_argument("--telemetry", action="store_true",
+                   help="enable serve telemetry: request-lifecycle + "
+                        "step-phase tracing, latency histograms, compile "
+                        "tracking (implied by --trace/--profile-dir)")
+    p.add_argument("--metrics-json", metavar="PATH", default=None,
+                   help="write the final metrics snapshot as JSON to "
+                        "PATH, plus the Prometheus text exposition to "
+                        "PATH with a .prom extension")
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="write the Chrome trace-event JSON (Perfetto-"
+                        "loadable) to PATH, plus the JSONL event stream "
+                        "to PATH with a .jsonl extension")
+    p.add_argument("--trace-sync", action="store_true",
+                   help="fence device dispatches (block_until_ready) so "
+                        "traced phase timings show device time where it "
+                        "was launched, not in the next host transfer")
+    p.add_argument("--profile-dir", metavar="DIR", default=None,
+                   help="capture a jax.profiler trace of the first "
+                        "--profile-steps engine steps into DIR (view in "
+                        "TensorBoard/Perfetto; works on CPU and TPU)")
+    p.add_argument("--profile-steps", type=int, default=20,
+                   help="engine steps to capture under --profile-dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -85,12 +109,15 @@ def main(argv=None):
         print(f"[serve] {args.method} quantized {len(reports)} matrices "
               f"in {time.perf_counter() - t0:.1f}s")
 
+    telemetry = bool(args.telemetry or args.trace or args.profile_dir)
     eng = Engine(params, cfg, ServeConfig(
         max_len=128, decode_batch=args.batch,
         max_new_tokens=args.new_tokens, kv_dtype=args.kv,
         scheduler=args.scheduler, prefill_len=args.prefill_len,
         fused=args.fused, paged=args.paged, page_size=args.page_size,
-        prefix_cache=not args.no_prefix_cache))
+        prefix_cache=not args.no_prefix_cache,
+        telemetry=telemetry, trace_sync=args.trace_sync,
+        profile_dir=args.profile_dir, profile_steps=args.profile_steps))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, size=8 + 4 * (i % 3))
@@ -103,10 +130,14 @@ def main(argv=None):
     print(f"[serve] {len(results)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s incl. compile, "
           f"scheduler={args.scheduler})")
-    lats = sorted(r.latency_s for r in results)
+    # latency_s is None-able (a max_new_tokens=0 request has no decode
+    # span); the shared interpolating percentile replaces the old index
+    # shortcut, which overshot p95 for small n and mis-picked even-n
+    # medians
+    lats = [r.latency_s for r in results if r.latency_s is not None]
     if args.scheduler == "continuous" and lats:
-        p50 = lats[len(lats) // 2]
-        p95 = lats[min(len(lats) - 1, int(0.95 * len(lats)))]
+        p50 = percentile(lats, 0.50)
+        p95 = percentile(lats, 0.95)
         st = eng.stats()
         print(f"[serve] latency p50 {p50 * 1e3:.0f}ms p95 {p95 * 1e3:.0f}ms "
               f"occupancy {st['occupancy']:.2f} "
@@ -120,6 +151,21 @@ def main(argv=None):
                   f"{st['pages_hot']}/{st['pages_total']} pages hot")
     for r in results[:3]:
         print(f"  req {r.uid}: {r.tokens[:10].tolist()}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(eng.stats(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        prom = os.path.splitext(args.metrics_json)[0] + ".prom"
+        with open(prom, "w") as f:
+            f.write(eng.prometheus())
+        print(f"[serve] metrics -> {args.metrics_json} (+ {prom})")
+    if args.trace:
+        jsonl = os.path.splitext(args.trace)[0] + ".jsonl"
+        eng.write_trace(args.trace, jsonl_path=jsonl)
+        print(f"[serve] trace -> {args.trace} (+ {jsonl})")
+    if args.profile_dir:
+        eng.tel.stop_profiler()
+        print(f"[serve] jax.profiler trace -> {args.profile_dir}")
     return 0
 
 

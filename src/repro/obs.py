@@ -1,0 +1,29 @@
+"""``repro.obs`` — the thin observability export surface.
+
+Everything lives in :mod:`repro.serve.telemetry`; this module is the
+stable import point for consumers outside the serving stack (benchmarks,
+launch drivers, notebooks)::
+
+    from repro import obs
+    p95 = obs.percentile(latencies, 0.95)
+    reg = obs.MetricsRegistry()
+"""
+from repro.serve.telemetry import (
+    NULL_TELEMETRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullTelemetry,
+    Telemetry,
+    Tracer,
+    latency_summary,
+    log_buckets,
+    percentile,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_TELEMETRY",
+    "NullTelemetry", "Telemetry", "Tracer", "latency_summary",
+    "log_buckets", "percentile",
+]

@@ -4,10 +4,14 @@ from repro.serve.pages import PagedKVCache, PagePool, set_block_table_row
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
 from repro.serve.slots import SlotKVCache, SlotState, SlotTable, write_slot
+from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
+                                   NullTelemetry, Telemetry, Tracer,
+                                   latency_summary, percentile)
 
 __all__ = [
-    "ContinuousScheduler", "Engine", "PagePool", "PagedKVCache",
-    "RadixPrefixCache", "Request", "Result", "SchedulerStats",
-    "ServeConfig", "SlotKVCache", "SlotState", "SlotTable",
-    "set_block_table_row", "write_slot",
+    "ContinuousScheduler", "Engine", "MetricsRegistry", "NULL_TELEMETRY",
+    "NullTelemetry", "PagePool", "PagedKVCache", "RadixPrefixCache",
+    "Request", "Result", "SchedulerStats", "ServeConfig", "SlotKVCache",
+    "SlotState", "SlotTable", "Telemetry", "Tracer", "latency_summary",
+    "percentile", "set_block_table_row", "write_slot",
 ]

@@ -57,6 +57,8 @@ from repro.serve.pages import PagedKVCache, PagePool
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
 from repro.serve.slots import KV_DTYPES, SlotKVCache
+from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
+                                   Telemetry)
 
 
 # --------------------------------------------------------------------------
@@ -132,6 +134,14 @@ class ServeConfig:
     n_pages: Optional[int] = None    # pool size; default sizes for full
     # residency of every lane + one request of prefix-retention headroom
     prefix_cache: bool = True        # radix-tree automatic prefix reuse
+    # --- telemetry (serve.telemetry) ---
+    telemetry: bool = False          # request/step tracing + latency
+    # histograms + compile tracking; the metrics registry itself is
+    # always live (stats()/metrics()/prometheus() are one snapshot)
+    trace_sync: bool = False         # block_until_ready fence after device
+    # dispatch so device time lands in the phase that launched it
+    profile_dir: Optional[str] = None  # arm jax.profiler capture here
+    profile_steps: int = 20          # engine steps to capture when armed
 
 
 @dataclasses.dataclass
@@ -144,12 +154,17 @@ class Request:
 
 @dataclasses.dataclass
 class Result:
+    """Timings are ``None`` when the underlying event never happened —
+    a request retired without decoding (``max_new_tokens=0``) reports
+    ``decode_s=None``/``ttft_s=None``, distinguishable from "decoded in
+    ~0 seconds"; a missing submit timestamp yields ``latency_s=None``
+    instead of a silent 0.0."""
     uid: int
     tokens: np.ndarray               # generated tokens (without prompt)
-    prefill_s: float                 # prefill wall time for this request
-    decode_s: float                  # first token → last token
-    ttft_s: float = 0.0              # submit → first token
-    latency_s: float = 0.0           # submit → done
+    prefill_s: Optional[float] = None  # prefill wall time for this request
+    decode_s: Optional[float] = None   # first token → last token
+    ttft_s: Optional[float] = None     # submit → first token
+    latency_s: Optional[float] = None  # submit → done
 
 
 @dataclasses.dataclass
@@ -208,6 +223,18 @@ class Engine:
         ctx = Ctx(compute_dtype=KV_DTYPES[sc.compute_dtype], fused=sc.fused)
         ctx.use_pallas = fused_mode(ctx) == "kernel"
         self.ctx = ctx
+        # the registry is always live (stats()/metrics()/prometheus()
+        # are snapshots of it); the *recorder* — tracing, step-phase
+        # histograms, compile tracking — is the no-op singleton unless
+        # telemetry is on, so the hot loop pays one no-op dispatch per
+        # call site when disabled
+        self.registry = MetricsRegistry()
+        if sc.telemetry or sc.profile_dir:
+            self.tel = Telemetry(registry=self.registry, sync=sc.trace_sync,
+                                 profile_dir=sc.profile_dir,
+                                 profile_steps=sc.profile_steps)
+        else:
+            self.tel = NULL_TELEMETRY
         self.prefill_len = sc.prefill_len or sc.max_len
         if self.prefill_len > sc.max_len:
             raise ValueError(
@@ -364,6 +391,7 @@ class Engine:
         self._validate(req)
         req.t_submit = req.t_submit or time.perf_counter()
         self.sched.submit(req)
+        self.tel.request_queued(req.uid)
         return req.uid
 
     # ------------------------------------------------------------------
@@ -398,6 +426,7 @@ class Engine:
             self.sched.queue.appendleft(req)
             return None
         slot = self.sched.admit(state)
+        self.tel.request_admitted(req.uid)
         row = matched + fresh
         self._row_pages[slot] = row
         self.slots.set_row(slot, row + [self._parked[slot]] * (nb - len(row)),
@@ -421,13 +450,18 @@ class Engine:
         tokens[0, :length] = job.req.prompt[start:start + length]
         final = start + length >= eff
         t0 = time.perf_counter()
-        tok, self.slots.cache = self._chunk(
-            self.params, jnp.asarray(tokens), self.slots.cache,
-            jnp.int32(slot), jnp.int32(start), jnp.int32(length),
-            self._next_key() if final else self._dummy_key)
-        if final:
-            first = int(jax.device_get(tok)[0, 0])
-        job.state.t_prefill += time.perf_counter() - t0
+        with self.tel.entry("prefill_chunk", (1, c)):
+            tok, self.slots.cache = self._chunk(
+                self.params, jnp.asarray(tokens), self.slots.cache,
+                jnp.int32(slot), jnp.int32(start), jnp.int32(length),
+                self._next_key() if final else self._dummy_key)
+            if final:
+                first = int(jax.device_get(tok)[0, 0])
+            elif self.tel.sync:
+                jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+        job.state.t_prefill += t1 - t0
+        self.tel.request_prefill(job.req.uid, start // c, t0, t1)
         job.next = start + length
         self._prefill_chunks += 1
         self._prefill_tokens_computed += length
@@ -443,7 +477,9 @@ class Engine:
             # degenerate max_new_tokens=0 — same semantics as unpaged
             return [self._finish(slot)]
         self._tok = self._tok.at[slot, 0].set(first)
-        if self.sched.record_token(slot, first):
+        done = self.sched.record_token(slot, first)
+        self.tel.request_first_token(job.req.uid)
+        if done:
             return [self._finish(slot)]
         return []
 
@@ -455,6 +491,7 @@ class Engine:
         if nxt is None:
             return None
         req, state = nxt
+        self.tel.request_admitted(req.uid)
         eff = state.prompt_len + self._n_vis
         state.budget = min(state.budget, self.sc.max_len - eff)
 
@@ -464,11 +501,14 @@ class Engine:
         # the pristine zero template goes in; a fresh populated copy comes
         # out (never fed back — that would leak recurrent state between
         # consecutive admissions through this buffer)
-        first, pf_cache = self._prefill(
-            self.params, self._batch_for(prompts), self.slots.prefill_cache,
-            jnp.asarray([eff], jnp.int32), self._next_key())
-        first = int(jax.device_get(first)[0, 0])
+        with self.tel.entry("prefill", prompts.shape):
+            first, pf_cache = self._prefill(
+                self.params, self._batch_for(prompts),
+                self.slots.prefill_cache, jnp.asarray([eff], jnp.int32),
+                self._next_key())
+            first = int(jax.device_get(first)[0, 0])
         t1 = time.perf_counter()
+        self.tel.request_prefill(req.uid, 0, t0, t1)
 
         slot = self.sched.admit(state)
         state.t_prefill = t1 - t0
@@ -479,7 +519,9 @@ class Engine:
             return [self._finish(slot)]
         self.slots.admit(pf_cache, slot)
         self._tok = self._tok.at[slot, 0].set(first)
-        if self.sched.record_token(slot, first):
+        done = self.sched.record_token(slot, first)
+        self.tel.request_first_token(req.uid)
+        if done:
             return [self._finish(slot)]
         return []
 
@@ -494,13 +536,19 @@ class Engine:
                 slot, [self._parked[slot]] * self.slots.n_blocks, 0)
         now = time.perf_counter()
         toks = np.asarray(state.tokens, np.int32)
+        # None (not 0.0) when the event never happened: a request that
+        # retired without decoding must not look like it decoded
+        # instantly, and a missing submit stamp must not fake latency
+        ft = state.t_first_token or None
+        decode_s = now - ft if ft else None
+        ttft_s = ft - state.t_submit if ft and state.t_submit else None
+        latency_s = now - state.t_submit if state.t_submit else None
+        self.tel.request_retired(state.uid, len(toks), ttft_s, latency_s,
+                                 decode_s)
         return Result(
             uid=state.uid, tokens=toks,
-            prefill_s=getattr(state, "t_prefill", 0.0),
-            decode_s=now - state.t_first_token if state.t_first_token else 0.0,
-            ttft_s=(state.t_first_token - state.t_submit
-                    if state.t_submit and state.t_first_token else 0.0),
-            latency_s=now - state.t_submit if state.t_submit else 0.0)
+            prefill_s=getattr(state, "t_prefill", 0.0) or None,
+            decode_s=decode_s, ttft_s=ttft_s, latency_s=latency_s)
 
     def step(self) -> List[Result]:
         """Admit as many queued requests as there are free slots, advance
@@ -509,32 +557,44 @@ class Engine:
         finished now."""
         if self.sc.scheduler != "continuous":
             raise RuntimeError("step() needs scheduler='continuous'")
+        tel = self.tel
+        tel.step_begin()
         finished: List[Result] = []
-        while True:
-            done = self._admit_one()
-            if done is None:
-                break
-            finished.extend(done)
+        with tel.phase("admission"):
+            while True:
+                done = self._admit_one()
+                if done is None:
+                    break
+                finished.extend(done)
 
         if self.sc.paged:
             # one chunk per prefilling slot per step: long prompts share
             # the engine loop with live decode instead of blocking it
-            for slot in sorted(self._prefill_jobs):
-                finished.extend(self._advance_prefill(slot))
+            with tel.phase("prefill"):
+                for slot in sorted(self._prefill_jobs):
+                    finished.extend(self._advance_prefill(slot))
             decoding = [s for s in self.sched.table.active_slots()
                         if s not in self._prefill_jobs]
         else:
             decoding = self.sched.table.active_slots()
         if not decoding:
+            tel.step_end(0)
             return finished
 
-        self._tok, self.slots.cache = self._decode(
-            self.params, self._tok, self.slots.cache, self._next_key())
+        with tel.phase("decode"), tel.entry("decode", self._tok.shape):
+            self._tok, self.slots.cache = self._decode(
+                self.params, self._tok, self.slots.cache, self._next_key())
+            if tel.sync:
+                # fence: device time stays in this phase instead of
+                # hiding inside the next host transfer
+                jax.block_until_ready(self._tok)
         self.sched.note_decode_step(len(decoding))
-        toks = np.asarray(jax.device_get(self._tok))[:, 0]
+        with tel.phase("transfer"):
+            toks = np.asarray(jax.device_get(self._tok))[:, 0]
         for slot in decoding:
             if self.sched.record_token(slot, toks[slot]):
                 finished.append(self._finish(slot))
+        tel.step_end(len(decoding))
         return finished
 
     def drain(self) -> List[Result]:
@@ -547,39 +607,67 @@ class Engine:
         results.sort(key=lambda r: r.uid)
         return results
 
-    def stats(self) -> Dict[str, float]:
-        """Scheduler-level counters: decode lane utilization etc. The
-        paged engine adds page-pool occupancy/eviction counters, the
-        prefix cache's hit/miss tallies, and the chunked-prefill work
-        accounting (``prefill_tokens_computed`` vs
-        ``prompt_tokens_total`` — their gap is compute the prefix cache
-        skipped)."""
-        if self.sc.scheduler == "bucketed":
-            # the bucketed path shares SchedulerStats — constructed with
-            # the real lane count, not the dataclass's n_slots=1 default,
-            # so occupancy is a fraction of actual decode lanes
-            s = self._bucket_stats
-            return {"decode_steps": s.decode_steps,
-                    "occupancy": round(s.occupancy, 4)}
-        s = self.sched.stats
-        out = {"admitted": s.admitted, "retired": s.retired,
-               "eos_retired": s.eos_retired, "decode_steps": s.decode_steps,
-               "occupancy": round(s.occupancy, 4)}
+    def _collect(self) -> MetricsRegistry:
+        """Publish every live component's series into the registry and
+        return it — the single collection path behind ``stats()``,
+        ``metrics()``, and ``prometheus()``. Both scheduler modes emit
+        the same common key set (bucketed counts admissions/retirements
+        too), so downstream consumers never branch on scheduler type;
+        the paged engine adds page-pool, prefix-cache, and
+        chunked-prefill work accounting, and an enabled telemetry
+        recorder adds latency/phase histograms + compile tracking."""
+        reg = self.registry
+        s = (self._bucket_stats if self.sc.scheduler == "bucketed"
+             else self.sched.stats)
+        s.publish(reg)
         if self.sc.paged:
-            out.update(self.pool.stats())
+            self.pool.publish(reg)
             if self.prefix is not None:
-                out.update(self.prefix.stats())
+                self.prefix.publish(reg)
             hit = self._prefix_hit_tokens
             total = self._prompt_tokens_total
-            out.update(prefill_chunks=self._prefill_chunks,
-                       prefill_tokens_computed=self._prefill_tokens_computed,
-                       prompt_tokens_total=total,
-                       prefix_hit_tokens=hit,
-                       prefix_hit_rate=round(hit / total, 4) if total else 0.0)
-        return out
+            reg.counter("prefill_chunks", "chunked-prefill dispatches"
+                        ).set(self._prefill_chunks)
+            reg.counter("prefill_tokens_computed",
+                        "prompt tokens actually prefilled"
+                        ).set(self._prefill_tokens_computed)
+            reg.counter("prompt_tokens_total", "prompt tokens submitted"
+                        ).set(total)
+            reg.counter("prefix_hit_tokens",
+                        "prompt tokens served from the prefix cache"
+                        ).set(hit)
+            reg.gauge("prefix_hit_rate", "prefix_hit_tokens / "
+                      "prompt_tokens_total"
+                      ).set(round(hit / total, 4) if total else 0.0)
+        self.tel.publish()
+        return reg
+
+    def stats(self) -> Dict[str, float]:
+        """One uniform registry snapshot across scheduler modes —
+        legacy keys preserved (``admitted``/``retired``/``eos_retired``
+        /``decode_steps``/``occupancy`` everywhere; page-pool, prefix
+        and chunk accounting under the paged engine; telemetry
+        histograms as nested summaries when enabled)."""
+        return self._collect().snapshot()
 
     # ``metrics()`` is the serving-convention alias
     metrics = stats
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the same registry snapshot."""
+        return self._collect().prometheus()
+
+    def write_trace(self, path: str, jsonl_path: Optional[str] = None) -> str:
+        """Export the Chrome trace-event JSON (Perfetto-loadable); with
+        ``jsonl_path``, also the flat JSONL event stream. Needs
+        ``ServeConfig(telemetry=True)``."""
+        if not self.tel.enabled:
+            raise RuntimeError("trace export needs ServeConfig("
+                               "telemetry=True)")
+        out = self.tel.tracer.write_chrome(path)
+        if jsonl_path:
+            self.tel.tracer.write_jsonl(jsonl_path)
+        return out
 
     def _reset_stats(self) -> None:
         if self.sched is not None:
@@ -594,6 +682,9 @@ class Engine:
             self._prefill_tokens_computed = 0
             self._prompt_tokens_total = 0
             self._prefix_hit_tokens = 0
+        # fresh trace + histograms per measured run (compile accounting
+        # survives — it describes the engine session)
+        self.tel.reset_run()
 
     def warmup(self) -> None:
         """Trigger the two compiles (prefill + decode) with a dummy
@@ -653,13 +744,18 @@ class Engine:
         t2 = time.perf_counter()
 
         results = []
+        self._bucket_stats.admitted += len(reqs)
+        self._bucket_stats.retired += len(reqs)
         for i, r in enumerate(reqs):
             toks = out[i, :n]
             if sc.eos_id >= 0 and (toks == sc.eos_id).any():
                 toks = toks[: int(np.argmax(toks == sc.eos_id)) + 1]
             lim = self._req_budget(r)
+            toks = toks[:lim]
+            if sc.eos_id >= 0 and toks.size and toks[-1] == sc.eos_id:
+                self._bucket_stats.eos_retired += 1
             since = r.t_submit or t0     # queue wait counts toward latency
-            results.append(Result(uid=r.uid, tokens=toks[:lim],
+            results.append(Result(uid=r.uid, tokens=toks,
                                   prefill_s=t1 - t0, decode_s=t2 - t1,
                                   ttft_s=t1 - since,
                                   latency_s=t2 - since))
@@ -698,4 +794,7 @@ class Engine:
         self._key = jax.random.PRNGKey(seed)
         for r in requests:
             self.submit(r)
-        return self.drain()
+        out = self.drain()
+        self.tel.stop_profiler()     # a short run may never hit the
+        # profile_steps threshold; don't leave the capture open
+        return out

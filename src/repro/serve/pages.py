@@ -169,6 +169,21 @@ class PagePool:
                 "pages_cold": self.n_cold, "pages_hot": self.n_hot,
                 "evictions": self.evictions, "page_allocs": self.allocated}
 
+    def publish(self, reg) -> None:
+        """Publish the page-pool series into a telemetry registry
+        (names match the legacy ``stats()`` keys exactly)."""
+        reg.gauge("pages_total", "physical pages in the pool"
+                  ).set(self.n_pages)
+        reg.gauge("pages_free", "virgin pages on the free list"
+                  ).set(self.n_free)
+        reg.gauge("pages_cold", "refcount-0 prefix-retained pages"
+                  ).set(self.n_cold)
+        reg.gauge("pages_hot", "pages owned by live requests"
+                  ).set(self.n_hot)
+        reg.counter("evictions", "cold prefix pages reclaimed under "
+                    "pressure").set(self.evictions)
+        reg.counter("page_allocs", "pages handed out").set(self.allocated)
+
     def reset_stats(self) -> None:
         self.evictions = 0
         self.allocated = 0

@@ -43,6 +43,24 @@ class SchedulerStats:
             return 0.0
         return self.decode_slot_steps / (self.decode_steps * self.n_slots)
 
+    def publish(self, reg) -> None:
+        """Publish the scheduler series into a telemetry
+        ``MetricsRegistry`` — the one common key set every scheduler
+        mode emits (bucketed counts admissions/retirements too, so
+        downstream consumers never branch on scheduler type)."""
+        reg.counter("admitted", "requests admitted to decode lanes"
+                    ).set(self.admitted)
+        reg.counter("retired", "requests retired").set(self.retired)
+        reg.counter("eos_retired", "requests retired early by EOS"
+                    ).set(self.eos_retired)
+        reg.counter("decode_steps", "decode dispatches"
+                    ).set(self.decode_steps)
+        reg.counter("decode_slot_steps",
+                    "decode steps x active lanes (useful work)"
+                    ).set(self.decode_slot_steps)
+        reg.gauge("occupancy", "mean fraction of decode lanes doing "
+                  "useful work").set(round(self.occupancy, 4))
+
 
 class ContinuousScheduler:
     """FIFO queue + slot table + retirement policy."""

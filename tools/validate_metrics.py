@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Validate a serve metrics snapshot against a JSON-schema subset.
+
+    python tools/validate_metrics.py METRICS.json [SCHEMA.json]
+
+CI's tier-1 smoke runs ``repro.launch.serve --paged --kv int4
+--metrics-json`` and feeds the snapshot through this validator with the
+checked-in ``tools/metrics_schema.json`` — a drift tripwire: renaming or
+dropping a metrics key, or changing a histogram summary's shape, fails
+the smoke instead of silently breaking downstream dashboards.
+
+The validator is dependency-free on purpose (the container has no
+``jsonschema``). Supported schema keywords — a strict subset of JSON
+Schema draft 2020-12 with identical semantics:
+
+  * ``type`` (string or list of strings; "object", "number", "integer",
+    "string", "boolean", "array", "null")
+  * ``required``, ``properties``, ``additionalProperties`` (boolean or
+    sub-schema) on objects
+  * ``minimum`` / ``maximum`` on numbers
+  * ``$defs`` at the root + ``$ref: "#/$defs/<name>"`` anywhere
+
+Unknown keywords raise immediately — a schema edit outside the subset
+must extend the validator, not silently not-validate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+SUPPORTED = {"$defs", "$ref", "type", "required", "properties",
+             "additionalProperties", "minimum", "maximum", "description"}
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _type_ok(value: Any, t: str) -> bool:
+    if t == "number":
+        return isinstance(value, (int, float)) \
+            and not isinstance(value, bool)
+    if t == "integer":
+        return isinstance(value, int) and not isinstance(value, bool)
+    return isinstance(value, _TYPES[t])
+
+
+def validate(value: Any, schema: Dict, root: Dict,
+             path: str = "$") -> List[str]:
+    """All violations of ``schema`` by ``value`` (empty list = valid)."""
+    unknown = set(schema) - SUPPORTED
+    if unknown:
+        raise ValueError(f"{path}: unsupported schema keywords {unknown}")
+    if "$ref" in schema:
+        ref = schema["$ref"]
+        if not ref.startswith("#/$defs/"):
+            raise ValueError(f"{path}: only #/$defs/* refs are supported, "
+                             f"got {ref!r}")
+        return validate(value, root["$defs"][ref.split("/")[-1]], root, path)
+
+    errors: List[str] = []
+    t = schema.get("type")
+    if t is not None:
+        types = [t] if isinstance(t, str) else t
+        if not any(_type_ok(value, x) for x in types):
+            return [f"{path}: expected {'|'.join(types)}, got "
+                    f"{type(value).__name__} ({value!r})"]
+
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        if "minimum" in schema and value < schema["minimum"]:
+            errors.append(f"{path}: {value} < minimum {schema['minimum']}")
+        if "maximum" in schema and value > schema["maximum"]:
+            errors.append(f"{path}: {value} > maximum {schema['maximum']}")
+
+    if isinstance(value, dict):
+        for key in schema.get("required", []):
+            if key not in value:
+                errors.append(f"{path}: missing required key {key!r}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties", True)
+        for key, sub in value.items():
+            if key in props:
+                errors.extend(validate(sub, props[key], root,
+                                       f"{path}.{key}"))
+            elif extra is False:
+                errors.append(f"{path}: unexpected key {key!r}")
+            elif isinstance(extra, dict):
+                errors.extend(validate(sub, extra, root, f"{path}.{key}"))
+    return errors
+
+
+DEFAULT_SCHEMA = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "metrics_schema.json")
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not 1 <= len(argv) <= 2:
+        print(__doc__.strip().splitlines()[2].strip(), file=sys.stderr)
+        return 2
+    metrics_path = argv[0]
+    schema_path = argv[1] if len(argv) == 2 else DEFAULT_SCHEMA
+    with open(metrics_path) as f:
+        metrics = json.load(f)
+    with open(schema_path) as f:
+        schema = json.load(f)
+    errors = validate(metrics, schema, schema)
+    if errors:
+        print(f"[validate-metrics] FAIL: {metrics_path} violates "
+              f"{schema_path}:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"[validate-metrics] OK: {metrics_path} matches {schema_path} "
+          f"({len(metrics)} series)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
