@@ -18,6 +18,7 @@ from benchmarks import (
     fig5_rank_dist,
     fig7_layerwise,
     fused_linear,
+    serve_burst,
     serve_prefix,
     serve_throughput,
     table1_ptq,
@@ -42,6 +43,7 @@ BENCHES = [
     ("Fig 7 (layer-wise error)", fig7_layerwise),
     ("Serving (continuous vs bucketed tok/s)", serve_throughput),
     ("Serving (paged prefix-cache reuse)", serve_prefix),
+    ("Serving (token-budget burst tail latency)", serve_burst),
     ("Fused Q+LR matmul (fused vs dequant-then-matmul)", fused_linear),
     ("Decode attention (flash-decode vs XLA-over-cache)", decode_attention),
 ]

@@ -14,8 +14,10 @@ paged needs a pure-attention stack, so this step runs on phi3-mini),
 where the radix-tree prefix cache maps the shared blocks into each new
 request's block table and the printed prefix-hit rate shows how much
 prefill the cache deleted. The paged act runs with telemetry enabled,
-so it also prints the step-phase p50 breakdown (admission / prefill /
-decode / transfer) straight from the engine's metrics registry.
+so it also prints the step-phase p50 breakdown (budget / admission /
+prefill / decode / transfer) straight from the engine's metrics
+registry. The act also arms the token-budget step scheduler
+(``max_step_tokens``), bounding per-step prefill + decode work.
 """
 import argparse
 import time
@@ -29,7 +31,7 @@ from repro.data import capture_calibration, data_config_for
 from repro.models import Ctx, init_lm, lm_loss
 from repro.models.quantize import quantize_model_params
 from repro.quant.base import QuantizerConfig
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, Request, SamplingParams, ServeConfig
 
 
 def main():
@@ -71,10 +73,16 @@ def main():
                              kv_dtype="int8", scheduler="continuous",
                              prefill_len=16 + (cfg.n_vision_tokens or 0)))
     rng = np.random.default_rng(0)
-    # stream requests in: 4 up front, 4 more arriving mid-decode
+    # stream requests in: 4 up front, 4 more arriving mid-decode — and
+    # mix per-request sampling in the same batch (greedy lanes decode
+    # next to temperature/top-p lanes, each with its own PRNG stream)
     reqs = [Request(uid=i, prompt=rng.integers(
         0, cfg.vocab, size=int(rng.integers(6, 14))).astype(np.int32),
-        max_new_tokens=int(rng.integers(6, 13))) for i in range(8)]
+        params=SamplingParams(
+            max_new_tokens=int(rng.integers(6, 13)),
+            temperature=0.0 if i % 2 == 0 else 0.8,
+            top_p=1.0 if i % 2 == 0 else 0.9,
+            seed=i)) for i in range(8)]
     out = []
     for r in reqs[:4]:
         eng.submit(r)
@@ -85,7 +93,9 @@ def main():
     out.extend(eng.drain())
     out.sort(key=lambda r: r.uid)
     for r in out[:3]:
-        print(f"   req {r.uid}: {r.tokens.tolist()}")
+        kind = "greedy" if r.uid % 2 == 0 else "sampled"
+        print(f"   req {r.uid} ({kind}, {r.finish_reason}): "
+              f"{r.tokens.tolist()}")
     toks = sum(len(r.tokens) for r in out)
     st = eng.stats()
     print(f"   {len(out)} requests, {toks} new tokens, "
@@ -102,9 +112,13 @@ def main():
         pparams = init_lm(jax.random.PRNGKey(0), pcfg)
         print(f"   ({args.arch} has non-attention mixers; paged act runs "
               f"on phi3-mini-3.8b instead)")
+    # max_step_tokens arms the token-budget step scheduler: per step,
+    # chunked-prefill dispatches + decode lanes stay under the cap, so
+    # the burst of 10 admissions cannot stall lanes already decoding
     peng = Engine(pparams, pcfg, ServeConfig(
         max_len=96, decode_batch=4, max_new_tokens=8, kv_dtype="int8",
-        prefill_len=16, paged=True, page_size=8, telemetry=True))
+        prefill_len=16, paged=True, page_size=8, telemetry=True,
+        max_step_tokens=16 + 4))
     system_prompt = rng.integers(0, pcfg.vocab, size=24).astype(np.int32)
     shared_reqs = [Request(
         uid=i, prompt=np.concatenate(
@@ -117,10 +131,12 @@ def main():
           f"prefix hit rate {pst['prefix_hit_rate']:.2f}, "
           f"{pst['prefill_tokens_computed']}/{pst['prompt_tokens_total']} "
           f"prompt tokens computed, {pst['prefill_chunks']} chunks, "
-          f"{pst['evictions']} evictions")
+          f"{pst['evictions']} evictions, "
+          f"{pst['budget_deferred_admissions']:.0f} admissions deferred "
+          f"by the step budget")
     phases = " ".join(
         f"{ph} {pst[f'step_{ph}_seconds']['p50'] * 1e3:.2f}ms"
-        for ph in ("admission", "prefill", "decode", "transfer"))
+        for ph in ("budget", "admission", "prefill", "decode", "transfer"))
     print(f"   step-phase p50: {phases}  "
           f"(ttft p50 {pst['ttft_seconds']['p50'] * 1e3:.0f}ms, "
           f"{pst['compiled_shapes_decode']} decode shape(s) compiled)")

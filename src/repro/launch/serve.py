@@ -23,16 +23,48 @@ from repro.data import capture_calibration, data_config_for
 from repro.models import init_lm, lm_loss
 from repro.models.quantize import quantize_model_params
 from repro.quant.base import QuantizerConfig
-from repro.serve import Engine, Request, ServeConfig, percentile
+from repro.serve import Engine, Request, SamplingParams, ServeConfig, \
+    percentile
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
+def add_model_args(p: argparse.ArgumentParser) -> None:
+    """Model/quantization flags shared by the batch driver here and the
+    HTTP server (``repro.launch.server``)."""
     p.add_argument("--arch", default="phi3-mini-3.8b")
     p.add_argument("--method", default="srr",
                    choices=["srr", "qer", "w-only", "none"])
     p.add_argument("--rank", type=int, default=16)
     p.add_argument("--bits", type=int, default=3)
+    p.add_argument("--seed", type=int, default=0)
+
+
+def build_quantized_model(args, tag: str = "serve"):
+    """Init the reduced model and run the paper pipeline (calibrate →
+    quantize) per the shared model flags; returns ``(params, cfg)``."""
+    cfg = get_config(args.arch).reduced()
+    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+    if args.method != "none":
+        dcfg = data_config_for(cfg, seq_len=32, global_batch=4,
+                               seed=args.seed)
+        stats = capture_calibration(
+            params, cfg, dcfg, lambda c, pp, b, cc: lm_loss(c, pp, b, cc),
+            n_batches=2)
+        ptq = PTQConfig(method=args.method, scaling="qera-exact",
+                        rank=args.rank,
+                        quantizer=QuantizerConfig(kind="mxint",
+                                                  bits=args.bits,
+                                                  block_size=32),
+                        seed=args.seed)
+        t0 = time.perf_counter()
+        params, reports = quantize_model_params(params, stats, ptq)
+        print(f"[{tag}] {args.method} quantized {len(reports)} matrices "
+              f"in {time.perf_counter() - t0:.1f}s")
+    return params, cfg
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    add_model_args(p)
     p.add_argument("--kv", default="f32",
                    choices=["f32", "bf16", "int8", "int4"])
     p.add_argument("--requests", type=int, default=8)
@@ -42,6 +74,18 @@ def main(argv=None):
                    choices=["continuous", "bucketed"])
     p.add_argument("--prefill-len", type=int, default=32,
                    help="compiled prompt pad length (continuous)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="per-request sampling temperature (0 = greedy); "
+                        "applied through SamplingParams on every request")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling mass (1.0 = off)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k logit filter (0 = off)")
+    p.add_argument("--max-step-tokens", type=int, default=None,
+                   help="token-budget step scheduler: per-step cap on "
+                        "prefill dispatch width + decode lanes "
+                        "(continuous scheduler only; bounds p95 ITL "
+                        "under long-prompt bursts)")
     p.add_argument("--fused", default="auto", choices=["auto", "on", "off"],
                    help="fused serving path — Q+LR matmuls AND decode "
                         "attention over the slot cache: auto (Pallas "
@@ -86,42 +130,27 @@ def main(argv=None):
                         "TensorBoard/Perfetto; works on CPU and TPU)")
     p.add_argument("--profile-steps", type=int, default=20,
                    help="engine steps to capture under --profile-dir")
-    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
-    cfg = get_config(args.arch).reduced()
-    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
-
-    if args.method != "none":
-        dcfg = data_config_for(cfg, seq_len=32, global_batch=4,
-                               seed=args.seed)
-        stats = capture_calibration(
-            params, cfg, dcfg, lambda c, pp, b, cc: lm_loss(c, pp, b, cc),
-            n_batches=2)
-        ptq = PTQConfig(method=args.method, scaling="qera-exact",
-                        rank=args.rank,
-                        quantizer=QuantizerConfig(kind="mxint",
-                                                  bits=args.bits,
-                                                  block_size=32),
-                        seed=args.seed)
-        t0 = time.perf_counter()
-        params, reports = quantize_model_params(params, stats, ptq)
-        print(f"[serve] {args.method} quantized {len(reports)} matrices "
-              f"in {time.perf_counter() - t0:.1f}s")
+    params, cfg = build_quantized_model(args)
 
     telemetry = bool(args.telemetry or args.trace or args.profile_dir)
     eng = Engine(params, cfg, ServeConfig(
         max_len=128, decode_batch=args.batch,
         max_new_tokens=args.new_tokens, kv_dtype=args.kv,
         scheduler=args.scheduler, prefill_len=args.prefill_len,
+        temperature=args.temperature, seed=args.seed,
+        max_step_tokens=args.max_step_tokens,
         fused=args.fused, paged=args.paged, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
         telemetry=telemetry, trace_sync=args.trace_sync,
         profile_dir=args.profile_dir, profile_steps=args.profile_steps))
     rng = np.random.default_rng(args.seed)
+    sp = SamplingParams(temperature=args.temperature, top_p=args.top_p,
+                        top_k=args.top_k)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, size=8 + 4 * (i % 3))
-                    .astype(np.int32))
+                    .astype(np.int32), params=sp)
             for i in range(args.requests)]
     t0 = time.perf_counter()
     results = eng.generate(reqs)
@@ -150,7 +179,8 @@ def main(argv=None):
                   f"{st['evictions']} evictions, "
                   f"{st['pages_hot']}/{st['pages_total']} pages hot")
     for r in results[:3]:
-        print(f"  req {r.uid}: {r.tokens[:10].tolist()}")
+        print(f"  req {r.uid} [{r.finish_reason}]: "
+              f"{r.tokens[:10].tolist()}")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
             json.dump(eng.stats(), f, indent=2, sort_keys=True)

@@ -1,17 +1,23 @@
 """Serving: continuous-batching prefill/decode engine over Q + LR models."""
 from repro.serve.engine import Engine, Request, Result, ServeConfig
+from repro.serve.http import (EngineServer, encode_text, render_chat,
+                              serve_http)
 from repro.serve.pages import PagedKVCache, PagePool, set_block_table_row
 from repro.serve.prefix import RadixPrefixCache
-from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
+from repro.serve.sampling import SamplingParams, lane_seed, sample_tokens
+from repro.serve.scheduler import (ContinuousScheduler, SchedulerStats,
+                                   StepBudget)
 from repro.serve.slots import SlotKVCache, SlotState, SlotTable, write_slot
 from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
                                    NullTelemetry, Telemetry, Tracer,
                                    latency_summary, percentile)
 
 __all__ = [
-    "ContinuousScheduler", "Engine", "MetricsRegistry", "NULL_TELEMETRY",
-    "NullTelemetry", "PagePool", "PagedKVCache", "RadixPrefixCache",
-    "Request", "Result", "SchedulerStats", "ServeConfig", "SlotKVCache",
-    "SlotState", "SlotTable", "Telemetry", "Tracer", "latency_summary",
-    "percentile", "set_block_table_row", "write_slot",
+    "ContinuousScheduler", "Engine", "EngineServer", "MetricsRegistry",
+    "NULL_TELEMETRY", "NullTelemetry", "PagePool", "PagedKVCache",
+    "RadixPrefixCache", "Request", "Result", "SamplingParams",
+    "SchedulerStats", "ServeConfig", "SlotKVCache", "SlotState",
+    "SlotTable", "StepBudget", "Telemetry", "Tracer", "encode_text",
+    "lane_seed", "latency_summary", "percentile", "render_chat",
+    "sample_tokens", "serve_http", "set_block_table_row", "write_slot",
 ]

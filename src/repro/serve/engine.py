@@ -37,6 +37,27 @@ round-trips HBM. MLA models additionally get their absorbed decode
 projections (W_uk / W_uv) materialized once per engine session instead
 of once per token (see ``absorbed_params`` below).
 
+Request-path API (one surface across Python, CLI, and HTTP —
+``serve.http`` speaks OpenAI over exactly these calls):
+
+  * per-request :class:`~repro.serve.sampling.SamplingParams` on
+    ``Request.params`` — temperature / top-p / top-k / seed / stop ids /
+    max_new_tokens; mixed greedy+sampled batches decode together, each
+    lane drawing from its own counter-based PRNG stream so output is
+    independent of scheduling. ``ServeConfig.temperature`` / ``eos_id``
+    are *defaults* only.
+  * ``Result.finish_reason`` ∈ ``"stop" | "length" | "abort"``.
+  * ``abort(uid)`` cancels a request anywhere in its lifecycle — queued,
+    mid-chunked-prefill (pages decref'd, prefix match released), or
+    decoding — and frees its slot immediately.
+  * ``ServeConfig.max_step_tokens`` arms the token-budget step
+    scheduler: per step, prefill tokens (chunk dispatches at compiled
+    width) + decode lanes stay ≤ the budget, so a burst of long-prompt
+    admissions cannot stall live decode lanes (bounded p95 ITL);
+    ``max_pages_per_request`` and ``free_watermark`` add per-request
+    page quotas and ahead-of-demand cold-set eviction under the paged
+    cache.
+
 API: ``submit()`` / ``step()`` / ``drain()`` for streaming use;
 ``generate()`` runs a whole batch of requests through either scheduler.
 """
@@ -44,7 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +76,9 @@ from repro.models import Ctx, decode_step, init_cache, prefill, prefill_chunk
 from repro.models.attention import absorb_mla_weights
 from repro.serve.pages import PagedKVCache, PagePool
 from repro.serve.prefix import RadixPrefixCache
-from repro.serve.scheduler import ContinuousScheduler, SchedulerStats
+from repro.serve.sampling import SamplingParams, lane_seed, sample_tokens
+from repro.serve.scheduler import (ContinuousScheduler, SchedulerStats,
+                                   StepBudget)
 from repro.serve.slots import KV_DTYPES, SlotKVCache
 from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
                                    Telemetry)
@@ -118,9 +141,12 @@ class ServeConfig:
     max_len: int = 512               # cache slots (prompt + generation)
     decode_batch: int = 8            # decode lanes (= slots, continuous)
     max_new_tokens: int = 64
-    eos_id: int = -1                 # -1: never stop early
+    eos_id: int = -1                 # -1: never stop early. DEFAULT only:
+    # per-request SamplingParams.stop ids extend it
     kv_dtype: str = "bf16"           # bf16 | f32 | int8 | int4
-    temperature: float = 0.0         # 0 = greedy
+    temperature: float = 0.0         # 0 = greedy. DEFAULT only: a
+    # request's SamplingParams.temperature overrides per lane (the old
+    # engine-global knob is deprecated as anything but a fallback)
     compute_dtype: str = "f32"
     scheduler: str = "continuous"    # continuous | bucketed
     prefill_len: Optional[int] = None  # compiled prompt pad length; under
@@ -134,6 +160,17 @@ class ServeConfig:
     n_pages: Optional[int] = None    # pool size; default sizes for full
     # residency of every lane + one request of prefix-retention headroom
     prefix_cache: bool = True        # radix-tree automatic prefix reuse
+    # --- token-budget step scheduler ---
+    max_step_tokens: Optional[int] = None  # per-step cap on prefill
+    # tokens (chunk/prefill dispatches at their compiled width) + decode
+    # lanes; None = unbudgeted. Must be >= the compiled prefill width + 1
+    # so an admission can always make progress on an idle engine
+    max_pages_per_request: Optional[int] = None  # paged: hard page quota
+    # per request — clamps the decode budget so prompt+generation never
+    # maps more than this many pages (fairness under pool pressure)
+    free_watermark: float = 0.0      # paged: fraction of the pool kept
+    # free by evicting cold prefix pages ahead of demand each step
+    # (0 = evict only when an allocation would fail)
     # --- telemetry (serve.telemetry) ---
     telemetry: bool = False          # request/step tracing + latency
     # histograms + compile tracking; the metrics registry itself is
@@ -148,8 +185,12 @@ class ServeConfig:
 class Request:
     uid: int
     prompt: np.ndarray               # (L,) int32
-    max_new_tokens: Optional[int] = None
+    max_new_tokens: Optional[int] = None  # deprecated shim — prefer
+    # params.max_new_tokens; kept so pre-SamplingParams callers keep
+    # working (params wins when both are set)
     t_submit: float = 0.0
+    params: Optional[SamplingParams] = None  # per-request sampling/stop;
+    # submit() resolves None fields against the ServeConfig defaults
 
 
 @dataclasses.dataclass
@@ -165,6 +206,8 @@ class Result:
     decode_s: Optional[float] = None   # first token → last token
     ttft_s: Optional[float] = None     # submit → first token
     latency_s: Optional[float] = None  # submit → done
+    finish_reason: Optional[str] = None  # "stop" (EOS / stop id, token
+    # included in tokens) | "length" (budget exhausted) | "abort"
 
 
 @dataclasses.dataclass
@@ -177,6 +220,8 @@ class _PrefillJob:
     state: object                    # the scheduler's SlotState
     next: int                        # first not-yet-prefilled position
     matched_tokens: int              # prefix-cache tokens skipped
+    prepaid: bool = False            # this step's chunk already charged
+    # to the token budget at admission (don't double-charge)
 
 
 class Engine:
@@ -248,27 +293,27 @@ class Engine:
 
         ctx = self.ctx
 
-        def _sample(logits, key):
-            logits = logits[:, -1].astype(jnp.float32)
-            if sc.temperature > 0:
-                tok = jax.random.categorical(key, logits / sc.temperature)
-            else:
-                tok = jnp.argmax(logits, axis=-1)
-            return tok.astype(jnp.int32)[:, None]
+        # per-lane sampling: `lanes` is a (temps, top_ps, top_ks, seeds,
+        # idxs) tuple of (B,) arrays. PRNG keys are derived inside the
+        # jit from (seed, token index) — counter-based, so a lane's draw
+        # never depends on scheduling, batch composition, or step count
+        def _sample(logits, lanes):
+            tok = sample_tokens(logits[:, -1].astype(jnp.float32), *lanes)
+            return tok[:, None]
 
-        def _prefill(params, batch, cache, lengths, key):
+        def _prefill(params, batch, cache, lengths, lanes):
             logits, cache = prefill(ctx, params, batch, cfg, cache,
                                     lengths=lengths)
-            return _sample(logits, key), cache
+            return _sample(logits, lanes), cache
 
-        def _decode(params, token, cache, key):
+        def _decode(params, token, cache, lanes):
             logits, cache = decode_step(ctx, params, token, cache, cfg)
-            return _sample(logits, key), cache
+            return _sample(logits, lanes), cache
 
-        def _chunk(params, tokens, cache, row, start, length, key):
+        def _chunk(params, tokens, cache, row, start, length, lanes):
             logits, cache = prefill_chunk(ctx, params, tokens, cfg, cache,
                                           row, start, length)
-            return _sample(logits, key), cache
+            return _sample(logits, lanes), cache
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
@@ -281,14 +326,50 @@ class Engine:
         self._chunk_len = self.prefill_len + self.prefill_len % 2 \
             if sc.paged else self.prefill_len
 
+        # token-budget config: the unit of prefill work is one compiled-
+        # width dispatch (a "partial" chunk still computes the full
+        # width), and an admission whose prefill completes immediately
+        # also joins decode the same step (+1)
+        self._step_unit = self._chunk_len if sc.paged else self.prefill_len
+        if sc.max_step_tokens is not None:
+            if sc.scheduler != "continuous":
+                raise ValueError("max_step_tokens needs "
+                                 "scheduler='continuous'")
+            if sc.max_step_tokens < self._step_unit + 1:
+                raise ValueError(
+                    f"max_step_tokens={sc.max_step_tokens} cannot cover "
+                    f"one prefill dispatch ({self._step_unit} compiled "
+                    f"tokens) plus its first decode lane — an idle "
+                    f"engine could never admit anything")
+        if not 0.0 <= sc.free_watermark < 1.0:
+            raise ValueError(f"free_watermark={sc.free_watermark} must "
+                             f"be in [0, 1)")
+        if sc.max_pages_per_request is not None \
+                and sc.max_pages_per_request < 1:
+            raise ValueError("max_pages_per_request must be >= 1")
+        if (sc.max_pages_per_request is not None
+                or sc.free_watermark > 0.0) and not sc.paged:
+            raise ValueError("max_pages_per_request / free_watermark "
+                             "need ServeConfig(paged=True)")
+
         # --- continuous-scheduler state ---------------------------------
         self.slots = None                # SlotKVCache | PagedKVCache
         self.sched: Optional[ContinuousScheduler] = None
         self.pool: Optional[PagePool] = None
         self.prefix: Optional[RadixPrefixCache] = None
         self._tok = None
-        self._key = jax.random.PRNGKey(sc.seed)
-        self._dummy_key = jax.random.PRNGKey(0)  # non-final chunk sampling
+        self._base_seed = sc.seed        # sampling stream base for
+        # submit()/step(); generate(seed=) overrides per run
+        # per-lane sampling state mirrored into the decode dispatch
+        b = sc.decode_batch
+        self._lane_temp = np.zeros((b,), np.float32)
+        self._lane_top_p = np.ones((b,), np.float32)
+        self._lane_top_k = np.zeros((b,), np.int32)
+        self._lane_seed = np.zeros((b,), np.int32)
+        # streaming hook: called as on_token(uid, token) for every
+        # generated token the moment it is recorded (serve.http fans
+        # these out to SSE connections)
+        self.on_token: Optional[Callable[[int, int], None]] = None
         self._bucket_stats = SchedulerStats(n_slots=sc.decode_batch)
         if sc.scheduler == "continuous":
             self._reset_continuous()
@@ -297,7 +378,8 @@ class Engine:
     def _reset_continuous(self) -> None:
         sc = self.sc
         self.sched = ContinuousScheduler(sc.decode_batch, sc.eos_id,
-                                         sc.max_new_tokens)
+                                         sc.max_new_tokens,
+                                         max_step_tokens=sc.max_step_tokens)
         self._tok = jnp.zeros((sc.decode_batch, 1), jnp.int32)
         if not sc.paged:
             self.slots = SlotKVCache(self.cfg, sc.decode_batch, sc.max_len,
@@ -330,22 +412,89 @@ class Engine:
         for slot in range(sc.decode_batch):
             self.slots.set_row(slot, [self._parked[slot]] * nb, 0)
 
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
     def _req_budget(self, r: Request) -> int:
         """Per-request token budget; ``is not None`` (not truthiness) so
         an explicit max_new_tokens=0 stays 0 — mirror of the scheduler's
         next_admission fix."""
+        if r.params is not None and r.params.max_new_tokens is not None:
+            return r.params.max_new_tokens
         return (r.max_new_tokens if r.max_new_tokens is not None
                 else self.sc.max_new_tokens)
+
+    def _resolve(self, req: Request) -> SamplingParams:
+        """Fill a request's ``SamplingParams`` None fields from the
+        ServeConfig defaults (and the deprecated ``Request.
+        max_new_tokens`` shim) — after this, every field is concrete."""
+        sp = req.params or SamplingParams()
+        t = (sp.temperature if sp.temperature is not None
+             else self.sc.temperature)
+        mnt = sp.max_new_tokens
+        if mnt is None:
+            mnt = req.max_new_tokens
+        if mnt is None:
+            mnt = self.sc.max_new_tokens
+        return dataclasses.replace(sp, temperature=float(t),
+                                   max_new_tokens=int(mnt))
+
+    # --- per-lane sampling plumbing -----------------------------------
+    def _lanes_for(self, state, idx: int):
+        """Single-row lane arrays for a prefill/chunk dispatch sampling
+        this request's token number ``idx``."""
+        sp = state.sampling
+        return (jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_p], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([state.seed], jnp.int32),
+                jnp.asarray([idx], jnp.int32))
+
+    def _decode_lanes(self):
+        """(B,) lane arrays for the lockstep decode dispatch; retired /
+        mid-prefill lanes ride greedy (their draw is never read)."""
+        idxs = np.zeros((self.sc.decode_batch,), np.int32)
+        for s, st in self.sched.table.active.items():
+            idxs[s] = len(st.tokens)
+        return (jnp.asarray(self._lane_temp), jnp.asarray(self._lane_top_p),
+                jnp.asarray(self._lane_top_k), jnp.asarray(self._lane_seed),
+                jnp.asarray(idxs))
+
+    def _set_lane(self, slot: int, state) -> None:
+        sp = state.sampling
+        self._lane_temp[slot] = sp.temperature
+        self._lane_top_p[slot] = sp.top_p
+        self._lane_top_k[slot] = sp.top_k
+        self._lane_seed[slot] = state.seed
+
+    def _clear_lane(self, slot: int) -> None:
+        self._lane_temp[slot] = 0.0
+        self._lane_top_p[slot] = 1.0
+        self._lane_top_k[slot] = 0
+        self._lane_seed[slot] = 0
+
+    def _record(self, slot: int, token: int) -> bool:
+        """record_token + the streaming on_token fanout."""
+        state = self.sched.table.active[slot]
+        done = self.sched.record_token(slot, token)
+        if self.on_token is not None:
+            self.on_token(state.uid, int(token))
+        return done
 
     def _validate(self, req: Request) -> None:
         plen = len(req.prompt)
         eff = plen + self._n_vis
         if plen < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
+        if req.params is not None:
+            try:
+                req.params.validate()
+            except ValueError as e:
+                raise ValueError(f"request {req.uid}: {e}") from None
+        if self.sc.max_pages_per_request is not None \
+                and eff >= self.sc.max_pages_per_request * self.page_size:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen} fills the "
+                f"max_pages_per_request={self.sc.max_pages_per_request} "
+                f"page quota ({self.page_size} slots/page) with no "
+                f"decode budget left")
         if eff >= self.sc.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt length {plen}"
@@ -389,6 +538,7 @@ class Engine:
             raise RuntimeError("submit()/step()/drain() need "
                                "ServeConfig(scheduler='continuous')")
         self._validate(req)
+        req.params = self._resolve(req)
         req.t_submit = req.t_submit or time.perf_counter()
         self.sched.submit(req)
         self.tel.request_queued(req.uid)
@@ -400,14 +550,25 @@ class Engine:
     # across engine steps (interleaved with decode) instead of in one
     # blocking call.
     # ------------------------------------------------------------------
-    def _admit_paged(self) -> Optional[List[Result]]:
+    def _admit_paged(self, budget: StepBudget) -> Optional[List[Result]]:
         if not self.sched.queue or self.sched.table.n_free == 0:
+            return None
+        # the admission's first chunk runs this step (prepaid below);
+        # cheap gate before touching the prefix tree — the exact cost
+        # (is the first chunk final?) is re-checked after matching
+        if not budget.can(self._chunk_len):
+            self.sched.stats.budget_deferred_admissions += 1
             return None
         nxt = self.sched.next_admission()
         req, state = nxt
         eff = state.prompt_len
         state.budget = min(state.budget, self.sc.max_len - eff)
         ps, nb = self.page_size, self.slots.n_blocks
+        if self.sc.max_pages_per_request is not None:
+            # page quota: prompt + generation never map more pages than
+            # the quota (prompt-only overflow was rejected at submit)
+            state.budget = min(state.budget,
+                               self.sc.max_pages_per_request * ps - eff)
         matched: List[int] = []
         if self.prefix is not None:
             # cap: at least one prompt token is recomputed — the final
@@ -415,17 +576,29 @@ class Engine:
             matched = self.prefix.match(req.prompt,
                                         max_blocks=(eff - 1) // ps)
         m_tok = len(matched) * ps
+        # exact budget cost: one compiled-width chunk, +1 decode lane if
+        # that chunk already completes the prompt (the slot joins decode
+        # this very step)
+        cost = self._chunk_len + (1 if eff - m_tok <= self._chunk_len
+                                  else 0)
         need = -(-(eff + max(state.budget, 0)) // ps) - len(matched)
-        fresh = self.pool.alloc(need)
+        fresh = self.pool.alloc(need) if budget.can(cost) else None
         if fresh is None:
-            # pool pressure: roll the match back (refs AND counters, so
-            # retries don't inflate hit stats), put the request back at
-            # the queue head, retry when a retirement frees pages
+            # pool pressure (or the exact budget cost no longer fits):
+            # roll the match back (refs AND counters, so retries don't
+            # inflate hit stats), put the request back at the queue
+            # head, retry when a retirement frees pages / budget
             if self.prefix is not None:
                 self.prefix.release_match(matched, (eff - 1) // ps)
             self.sched.queue.appendleft(req)
+            if not budget.can(cost):
+                self.sched.stats.budget_deferred_admissions += 1
             return None
+        state.seed = lane_seed(state.sampling.seed, self._base_seed,
+                               req.uid)
+        budget.take(cost)
         slot = self.sched.admit(state)
+        self._set_lane(slot, state)
         self.tel.request_admitted(req.uid)
         row = matched + fresh
         self._row_pages[slot] = row
@@ -433,7 +606,8 @@ class Engine:
                            m_tok)
         self._prefill_jobs[slot] = _PrefillJob(req=req, state=state,
                                                next=m_tok,
-                                               matched_tokens=m_tok)
+                                               matched_tokens=m_tok,
+                                               prepaid=True)
         self._prompt_tokens_total += eff
         self._prefix_hit_tokens += m_tok
         return []
@@ -451,10 +625,12 @@ class Engine:
         final = start + length >= eff
         t0 = time.perf_counter()
         with self.tel.entry("prefill_chunk", (1, c)):
+            # non-final chunks discard the sampled token — the lane
+            # arrays still ride along so the compiled shape is uniform
             tok, self.slots.cache = self._chunk(
                 self.params, jnp.asarray(tokens), self.slots.cache,
                 jnp.int32(slot), jnp.int32(start), jnp.int32(length),
-                self._next_key() if final else self._dummy_key)
+                self._lanes_for(job.state, 0))
             if final:
                 first = int(jax.device_get(tok)[0, 0])
             elif self.tel.sync:
@@ -475,22 +651,30 @@ class Engine:
                                self._row_pages[slot][:eff // self.page_size])
         if job.state.budget <= 0:
             # degenerate max_new_tokens=0 — same semantics as unpaged
+            job.state.finish_reason = "length"
             return [self._finish(slot)]
         self._tok = self._tok.at[slot, 0].set(first)
-        done = self.sched.record_token(slot, first)
+        done = self._record(slot, first)
         self.tel.request_first_token(job.req.uid)
         if done:
             return [self._finish(slot)]
         return []
 
-    def _admit_one(self) -> Optional[List[Result]]:
+    def _admit_one(self, budget: StepBudget) -> Optional[List[Result]]:
         """Prefill the next queued request into a free slot (if any)."""
         if self.sc.paged:
-            return self._admit_paged()
-        nxt = self.sched.next_admission()
-        if nxt is None:
+            return self._admit_paged(budget)
+        if not self.sched.queue or self.sched.table.n_free == 0:
             return None
+        # one compiled-width prefill dispatch + the decode lane the new
+        # slot occupies this very step
+        if not budget.try_take(self.prefill_len + 1):
+            self.sched.stats.budget_deferred_admissions += 1
+            return None
+        nxt = self.sched.next_admission()
         req, state = nxt
+        state.seed = lane_seed(state.sampling.seed, self._base_seed,
+                               req.uid)
         self.tel.request_admitted(req.uid)
         eff = state.prompt_len + self._n_vis
         state.budget = min(state.budget, self.sc.max_len - eff)
@@ -505,21 +689,23 @@ class Engine:
             first, pf_cache = self._prefill(
                 self.params, self._batch_for(prompts),
                 self.slots.prefill_cache, jnp.asarray([eff], jnp.int32),
-                self._next_key())
+                self._lanes_for(state, 0))
             first = int(jax.device_get(first)[0, 0])
         t1 = time.perf_counter()
         self.tel.request_prefill(req.uid, 0, t0, t1)
 
         slot = self.sched.admit(state)
+        self._set_lane(slot, state)
         state.t_prefill = t1 - t0
         if state.budget <= 0:
             # degenerate max_new_tokens=0: the prefill token is dropped so
             # both schedulers agree on "0 new tokens" (bucketed truncates
             # to the budget); the slot frees on the same step
+            state.finish_reason = "length"
             return [self._finish(slot)]
         self.slots.admit(pf_cache, slot)
         self._tok = self._tok.at[slot, 0].set(first)
-        done = self.sched.record_token(slot, first)
+        done = self._record(slot, first)
         self.tel.request_first_token(req.uid)
         if done:
             return [self._finish(slot)]
@@ -527,6 +713,7 @@ class Engine:
 
     def _finish(self, slot: int) -> Result:
         state = self.sched.retire(slot)
+        self._clear_lane(slot)
         if self.sc.paged:
             # release the slot's pages (tree-registered prompt blocks go
             # cold/retained; private blocks free) and park the row so
@@ -548,30 +735,87 @@ class Engine:
         return Result(
             uid=state.uid, tokens=toks,
             prefill_s=getattr(state, "t_prefill", 0.0) or None,
-            decode_s=decode_s, ttft_s=ttft_s, latency_s=latency_s)
+            decode_s=decode_s, ttft_s=ttft_s, latency_s=latency_s,
+            finish_reason=state.finish_reason)
+
+    def abort(self, uid: int) -> Optional[Result]:
+        """Cancel a request anywhere in its lifecycle and free its
+        resources immediately. Queued: removed before admission.
+        Mid-chunked-prefill: the ``_PrefillJob`` is dropped and the
+        slot's pages decref'd — prefix-matched pages lose the reference
+        the match took, fresh pages free — so a cancel before the first
+        token never leaks a refcount. Decoding: the slot retires as if
+        the request finished, with the tokens generated so far. Returns
+        the (partial) :class:`Result` with ``finish_reason="abort"``, or
+        ``None`` when the uid is unknown (already finished or never
+        submitted)."""
+        if self.sc.scheduler != "continuous":
+            raise RuntimeError("abort() needs scheduler='continuous'")
+        for i, req in enumerate(self.sched.queue):
+            if req.uid == uid:
+                del self.sched.queue[i]
+                self.sched.stats.aborted += 1
+                self.tel.request_retired(uid, 0, None, None, None)
+                return Result(uid=uid, tokens=np.zeros((0,), np.int32),
+                              finish_reason="abort")
+        for slot, state in list(self.sched.table.active.items()):
+            if state.uid == uid:
+                if self.sc.paged:
+                    # a mid-prefill cancel: the job dies here; _finish
+                    # releases the mapped pages and re-parks the row
+                    self._prefill_jobs.pop(slot, None)
+                self.sched.stats.aborted += 1
+                state.finish_reason = "abort"
+                return self._finish(slot)
+        return None
 
     def step(self) -> List[Result]:
-        """Admit as many queued requests as there are free slots, advance
-        every in-flight chunked prefill by one chunk (paged), then run
-        one decode step over the decoding slots. Returns requests
-        finished now."""
+        """Open this step's token-budget ledger, admit queued requests
+        while budget and slots allow, advance in-flight chunked prefills
+        (paged; oldest-admitted first, each chunk charged against the
+        budget), then run one decode step over the decoding slots.
+        Returns requests finished now."""
         if self.sc.scheduler != "continuous":
             raise RuntimeError("step() needs scheduler='continuous'")
         tel = self.tel
         tel.step_begin()
         finished: List[Result] = []
+        with tel.phase("budget"):
+            # charge the lanes already decoding (active minus mid-
+            # prefill) — they run regardless; admissions/chunks below
+            # compete for what's left
+            n_jobs = len(self._prefill_jobs) if self.sc.paged else 0
+            budget = self.sched.begin_step(
+                self.sched.table.n_active - n_jobs)
+            if self.sc.paged and self.sc.free_watermark > 0.0:
+                self.pool.ensure_free(
+                    int(self.sc.free_watermark * self.pool.n_pages))
         with tel.phase("admission"):
             while True:
-                done = self._admit_one()
+                done = self._admit_one(budget)
                 if done is None:
                     break
                 finished.extend(done)
 
         if self.sc.paged:
-            # one chunk per prefilling slot per step: long prompts share
-            # the engine loop with live decode instead of blocking it
+            # one chunk per prefilling slot per step — oldest admission
+            # first, so FIFO order also bounds prefill wait — with each
+            # dispatch charged at its compiled width (+1 when the final
+            # chunk promotes the slot to decode this step); jobs the
+            # budget cannot cover resume on a later step
             with tel.phase("prefill"):
-                for slot in sorted(self._prefill_jobs):
+                jobs = sorted(self._prefill_jobs.items(),
+                              key=lambda kv: kv[1].state.t_admit)
+                for slot, job in jobs:
+                    if job.prepaid:
+                        job.prepaid = False
+                    else:
+                        eff = job.state.prompt_len
+                        cost = self._chunk_len + (
+                            1 if eff - job.next <= self._chunk_len else 0)
+                        if not budget.try_take(cost):
+                            self.sched.stats.budget_capped_chunks += 1
+                            continue
                     finished.extend(self._advance_prefill(slot))
             decoding = [s for s in self.sched.table.active_slots()
                         if s not in self._prefill_jobs]
@@ -583,7 +827,8 @@ class Engine:
 
         with tel.phase("decode"), tel.entry("decode", self._tok.shape):
             self._tok, self.slots.cache = self._decode(
-                self.params, self._tok, self.slots.cache, self._next_key())
+                self.params, self._tok, self.slots.cache,
+                self._decode_lanes())
             if tel.sync:
                 # fence: device time stays in this phase instead of
                 # hiding inside the next host transfer
@@ -592,7 +837,7 @@ class Engine:
         with tel.phase("transfer"):
             toks = np.asarray(jax.device_get(self._tok))[:, 0]
         for slot in decoding:
-            if self.sched.record_token(slot, toks[slot]):
+            if self._record(slot, toks[slot]):
                 finished.append(self._finish(slot))
         tel.step_end(len(decoding))
         return finished
@@ -702,21 +947,50 @@ class Engine:
     # ==================================================================
     # Bucketed baseline (dry-run-grade scheduler)
     # ==================================================================
-    def _run_bucket(self, reqs: List[Request], key: jax.Array) -> List[Result]:
+    def _bucket_lanes(self, reqs: List[Request], seeds: List[int],
+                      idx: int):
+        """(B,) lane arrays for one bucket dispatch at token ``idx`` —
+        same counter-based streams as the continuous engine, so the two
+        schedulers agree token-for-token per request. Padding lanes
+        ride greedy."""
+        b = self.sc.decode_batch
+        temps = np.zeros((b,), np.float32)
+        top_ps = np.ones((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        sds = np.zeros((b,), np.int32)
+        for i, r in enumerate(reqs):
+            temps[i] = r.params.temperature
+            top_ps[i] = r.params.top_p
+            top_ks[i] = r.params.top_k
+            sds[i] = seeds[i]
+        return (jnp.asarray(temps), jnp.asarray(top_ps),
+                jnp.asarray(top_ks), jnp.asarray(sds),
+                jnp.full((b,), idx, jnp.int32))
+
+    def _run_bucket(self, reqs: List[Request],
+                    base_seed: int) -> List[Result]:
         sc = self.sc
         b = sc.decode_batch
         plen = len(reqs[0].prompt)
         assert all(len(r.prompt) == plen for r in reqs)
         prompts = np.zeros((b, plen), np.int32)
+        stops: List[frozenset] = []
+        seeds: List[int] = []
         for i, r in enumerate(reqs):
             prompts[i] = r.prompt
+            st = frozenset(r.params.stop)
+            if sc.eos_id >= 0:
+                st = st | {sc.eos_id}
+            stops.append(st)
+            seeds.append(lane_seed(r.params.seed, base_seed, r.uid))
 
         t0 = time.perf_counter()
         cache = self._init_cache()
-        key, sub = jax.random.split(key)
-        # first token goes through the same temperature path as decode
+        # first token goes through the same per-lane sampling path as
+        # decode (token index 0, like the continuous engine's prefill)
         tok, cache = self._prefill(self.params, self._batch_for(prompts),
-                                   cache, None, sub)
+                                   cache, None,
+                                   self._bucket_lanes(reqs, seeds, 0))
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
 
@@ -727,19 +1001,22 @@ class Engine:
         n = 0
         for step in range(budget):
             out[:, step] = np.asarray(tok[:, 0])
-            done |= out[:, step] == sc.eos_id
+            for i in range(len(reqs)):
+                done[i] |= int(out[i, step]) in stops[i]
             n = step + 1
             if done[:len(reqs)].all():
                 break
             # a lane is useful only while its (real) request still needs
-            # tokens — padding rows and early-EOS rows ride along wasted
+            # tokens — padding rows and early-stop rows ride along wasted
             self._bucket_stats.decode_steps += 1
             self._bucket_stats.decode_slot_steps += sum(
                 1 for i, r in enumerate(reqs)
                 if not done[i]
                 and step < self._req_budget(r))
-            key, sub = jax.random.split(key)
-            tok, cache = self._decode(self.params, tok, cache, sub)
+            # token index step+1: out[:, step] was token `step`
+            tok, cache = self._decode(
+                self.params, tok, cache,
+                self._bucket_lanes(reqs, seeds, step + 1))
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
 
@@ -748,17 +1025,25 @@ class Engine:
         self._bucket_stats.retired += len(reqs)
         for i, r in enumerate(reqs):
             toks = out[i, :n]
-            if sc.eos_id >= 0 and (toks == sc.eos_id).any():
-                toks = toks[: int(np.argmax(toks == sc.eos_id)) + 1]
+            # stop truncation first (stop wins over budget on the same
+            # token — continuous semantics), then the per-request budget
+            cut = next((j for j in range(len(toks))
+                        if int(toks[j]) in stops[i]), None)
+            if cut is not None:
+                toks = toks[:cut + 1]
             lim = self._req_budget(r)
+            lim = min(lim, sc.max_len - plen - self._n_vis)
             toks = toks[:lim]
-            if sc.eos_id >= 0 and toks.size and toks[-1] == sc.eos_id:
+            stopped = (cut is not None and cut < lim)
+            finish = "stop" if stopped else "length"
+            if stopped and sc.eos_id >= 0 and toks[-1] == sc.eos_id:
                 self._bucket_stats.eos_retired += 1
             since = r.t_submit or t0     # queue wait counts toward latency
             results.append(Result(uid=r.uid, tokens=toks,
                                   prefill_s=t1 - t0, decode_s=t2 - t1,
                                   ttft_s=t1 - since,
-                                  latency_s=t2 - since))
+                                  latency_s=t2 - since,
+                                  finish_reason=finish))
         return results
 
     def _generate_bucketed(self, requests: Sequence[Request],
@@ -767,13 +1052,12 @@ class Engine:
         for r in requests:
             buckets.setdefault(len(r.prompt), []).append(r)
         results: List[Result] = []
-        key = jax.random.PRNGKey(seed)
         for plen in sorted(buckets):
             queue = buckets[plen]
             for i in range(0, len(queue), self.sc.decode_batch):
-                key, sub = jax.random.split(key)
                 results.extend(
-                    self._run_bucket(queue[i: i + self.sc.decode_batch], sub))
+                    self._run_bucket(queue[i: i + self.sc.decode_batch],
+                                     seed))
         results.sort(key=lambda r: r.uid)
         return results
 
@@ -787,11 +1071,12 @@ class Engine:
         now = time.perf_counter()
         for r in requests:
             self._validate(r)
+            r.params = self._resolve(r)
             r.t_submit = now
         self._reset_stats()
         if self.sc.scheduler == "bucketed":
             return self._generate_bucketed(requests, seed)
-        self._key = jax.random.PRNGKey(seed)
+        self._base_seed = seed
         for r in requests:
             self.submit(r)
         out = self.drain()

@@ -81,6 +81,7 @@ class PagePool:
             collections.OrderedDict()          # refcount-0 cached, LRU order
         self.evict_hook: Optional[Callable[[int], None]] = None
         self.evictions = 0
+        self.watermark_evictions = 0
         self.allocated = 0
 
     # ------------------------------------------------------------------
@@ -122,6 +123,31 @@ class PagePool:
             out.append(p)
         self.allocated += n
         return out
+
+    def ensure_free(self, min_free: int) -> int:
+        """Watermark eviction: reclaim cold prefix pages LRU-first until
+        at least ``min_free`` pages sit on the free list (or the cold
+        set runs dry). Unlike the on-demand eviction inside
+        :meth:`alloc` — which fires only when an allocation would
+        otherwise fail — this runs ahead of demand so bursts of
+        admissions hit a pre-drained free list instead of paying the
+        tree-teardown work inside the admission path. Returns the
+        number of pages evicted."""
+        n = 0
+        while len(self._free) < min_free and self._cold:
+            p, _ = self._cold.popitem(last=False)
+            self._cached[p] = False
+            self.evictions += 1
+            self.watermark_evictions += 1
+            if self.evict_hook is not None:
+                # the hook releases the node's subtree via
+                # release_cached (those pages are cold too and join the
+                # free list); p itself is already un-cached so the
+                # hook's own release of it is a no-op
+                self.evict_hook(p)
+            self._free.append(p)
+            n += 1
+        return n
 
     def incref(self, pages: List[int]) -> None:
         """Revive/share pages (prefix-cache hit): cold pages leave the
@@ -167,7 +193,9 @@ class PagePool:
     def stats(self) -> Dict[str, int]:
         return {"pages_total": self.n_pages, "pages_free": self.n_free,
                 "pages_cold": self.n_cold, "pages_hot": self.n_hot,
-                "evictions": self.evictions, "page_allocs": self.allocated}
+                "evictions": self.evictions,
+                "watermark_evictions": self.watermark_evictions,
+                "page_allocs": self.allocated}
 
     def publish(self, reg) -> None:
         """Publish the page-pool series into a telemetry registry
@@ -182,10 +210,14 @@ class PagePool:
                   ).set(self.n_hot)
         reg.counter("evictions", "cold prefix pages reclaimed under "
                     "pressure").set(self.evictions)
+        reg.counter("watermark_evictions", "cold prefix pages reclaimed "
+                    "ahead of demand by the free watermark"
+                    ).set(self.watermark_evictions)
         reg.counter("page_allocs", "pages handed out").set(self.allocated)
 
     def reset_stats(self) -> None:
         self.evictions = 0
+        self.watermark_evictions = 0
         self.allocated = 0
 
 

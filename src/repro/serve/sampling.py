@@ -1,0 +1,103 @@
+"""Per-request sampling: params, lane-seed derivation, and the jitted
+token sampler.
+
+Sampling is **counter-based**: every lane draws with
+``fold_in(PRNGKey(lane_seed), token_index)`` where ``token_index`` is
+the request's own output position (0 = the first token, sampled off the
+prefill logits). The draw therefore depends only on ``(seed, index)`` —
+never on which slot the request landed in, which step admitted it, or
+what else shares the batch — so the streaming engine, the bucketed
+baseline, and the HTTP frontend all emit token-identical output for the
+same ``(prompt, SamplingParams)``. That property is what the parity
+tests (and the token-budget scheduler's output-invariance) lean on.
+
+Greedy lanes (``temperature <= 0``) take the argmax of the *raw* logits
+— top-k/top-p filtering never perturbs them — and an all-greedy batch
+skips the sampling branch entirely via ``lax.cond``, keeping the decode
+hot path as cheap as the old engine-global greedy sampler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls, carried on ``Request.params``.
+
+    ``None`` fields fall back to the engine's ``ServeConfig`` defaults
+    (``temperature``, ``max_new_tokens``) at submit time; ``seed=None``
+    derives a deterministic per-request stream from the engine's base
+    seed and the request uid. ``stop`` token ids retire the request the
+    moment one is emitted (the stop token is kept in the output, like
+    EOS); ``ServeConfig.eos_id`` is always an implicit stop.
+    """
+    temperature: Optional[float] = None  # None → ServeConfig.temperature
+    top_p: float = 1.0                   # nucleus mass; 1.0 = off
+    top_k: int = 0                       # 0 = off
+    seed: Optional[int] = None           # None → derived from (base, uid)
+    stop: Tuple[int, ...] = ()           # extra stop token ids
+    max_new_tokens: Optional[int] = None  # None → ServeConfig default
+
+    def validate(self) -> None:
+        if self.temperature is not None and self.temperature < 0:
+            raise ValueError(f"temperature={self.temperature} must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p={self.top_p} must be in (0, 1]")
+        if self.top_k < 0:
+            raise ValueError(f"top_k={self.top_k} must be >= 0")
+        if self.max_new_tokens is not None and self.max_new_tokens < 0:
+            raise ValueError(
+                f"max_new_tokens={self.max_new_tokens} must be >= 0")
+
+
+def lane_seed(seed: Optional[int], base: int, uid: int) -> int:
+    """Resolve a request's PRNG stream seed: the explicit
+    ``SamplingParams.seed`` wins; otherwise mix the engine base seed
+    with the uid so distinct requests draw distinct streams while the
+    same ``(base, uid)`` replays exactly."""
+    if seed is not None:
+        return int(seed) & 0x7FFFFFFF
+    return (int(base) * 1_000_003 + int(uid) * 7919 + 12289) & 0x7FFFFFFF
+
+
+def sample_tokens(logits: jax.Array, temps: jax.Array, top_ps: jax.Array,
+                  top_ks: jax.Array, seeds: jax.Array,
+                  idxs: jax.Array) -> jax.Array:
+    """Per-lane next-token selection. ``logits`` is (B, V) float32; the
+    five lane arrays are (B,). Returns (B,) int32.
+
+    Counter-based keys (``fold_in(PRNGKey(seed), index)``) are derived
+    *inside* the jit — no host-side key threading per step — and the
+    whole sampling branch is skipped under ``lax.cond`` when every lane
+    is greedy, so greedy batches pay only the argmax."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _mixed(_):
+        v = logits.shape[-1]
+        srt = jnp.sort(logits, axis=-1)[:, ::-1]        # descending
+        # top-k: keep logits >= the kth largest (k<=0 → keep all)
+        k = jnp.clip(jnp.where(top_ks > 0, top_ks, v), 1, v)
+        kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+        safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+        # top-p on the temperature-scaled distribution: a sorted entry
+        # survives while the mass *before* it is < top_p (exclusive
+        # prefix sum), so the argmax always survives
+        probs = jax.nn.softmax(srt / safe_t, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        n_keep = jnp.sum((cum - probs) < top_ps[:, None], axis=-1)
+        pth = jnp.take_along_axis(
+            srt, jnp.maximum(n_keep - 1, 0)[:, None], axis=-1)
+        keep = (logits >= kth) & (logits >= pth)
+        filt = jnp.where(keep, logits, -jnp.inf) / safe_t
+        keys = jax.vmap(lambda s, i: jax.random.fold_in(
+            jax.random.PRNGKey(s), i))(seeds, idxs)
+        drawn = jax.vmap(jax.random.categorical)(keys, filt)
+        return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+    return jax.lax.cond(jnp.any(temps > 0.0), _mixed,
+                        lambda _: greedy, operand=None)

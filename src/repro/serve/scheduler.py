@@ -10,8 +10,17 @@ request always fits ``max_len``):
     shape); retired/empty slots ride along masked — their lanes compute
     garbage that nothing reads.
   * Retirement: a request leaves its slot as soon as it hits its own
-    ``max_new_tokens`` or emits ``eos_id``; the slot is handed to the
-    next queued request on the same engine step.
+    ``max_new_tokens`` or emits a stop token (EOS or any id in its
+    ``SamplingParams.stop``); the slot is handed to the next queued
+    request on the same engine step. The reason lands on
+    ``SlotState.finish_reason`` (``"stop"`` / ``"length"``; the engine
+    stamps ``"abort"`` on cancellation).
+  * Token budget (``max_step_tokens``, optional): each step opens a
+    :class:`StepBudget` ledger charged with the planned decode lanes;
+    admissions and prefill-chunk dispatches then draw from the
+    remainder, so ``prefill tokens + decode lanes <= max_step_tokens``
+    every step and a burst of long prompts cannot stall live decode
+    lanes. ``None`` keeps the unbudgeted admit-everything behavior.
 
 The scheduler is pure host-side bookkeeping: the engine owns the device
 arrays and calls in here to decide *which* request occupies *which*
@@ -33,8 +42,13 @@ class SchedulerStats:
     admitted: int = 0
     retired: int = 0
     eos_retired: int = 0            # retired early by EOS (freed budget)
+    aborted: int = 0                # cancelled via Engine.abort()
     decode_steps: int = 0
     decode_slot_steps: int = 0      # steps × active slots (useful work)
+    budget_deferred_admissions: int = 0  # admissions pushed to a later
+    # step because the token budget could not cover their prefill
+    budget_capped_chunks: int = 0   # prefill-chunk dispatches skipped
+    # this step by the token budget (the job resumes next step)
 
     @property
     def occupancy(self) -> float:
@@ -47,28 +61,65 @@ class SchedulerStats:
         """Publish the scheduler series into a telemetry
         ``MetricsRegistry`` — the one common key set every scheduler
         mode emits (bucketed counts admissions/retirements too, so
-        downstream consumers never branch on scheduler type)."""
+        downstream consumers never branch on scheduler type). The
+        budget counters publish unconditionally (zeros when
+        ``max_step_tokens`` is off) so the snapshot schema is stable."""
         reg.counter("admitted", "requests admitted to decode lanes"
                     ).set(self.admitted)
         reg.counter("retired", "requests retired").set(self.retired)
         reg.counter("eos_retired", "requests retired early by EOS"
                     ).set(self.eos_retired)
+        reg.counter("aborted", "requests cancelled via Engine.abort()"
+                    ).set(self.aborted)
         reg.counter("decode_steps", "decode dispatches"
                     ).set(self.decode_steps)
         reg.counter("decode_slot_steps",
                     "decode steps x active lanes (useful work)"
                     ).set(self.decode_slot_steps)
+        reg.counter("budget_deferred_admissions",
+                    "admissions deferred by the token budget"
+                    ).set(self.budget_deferred_admissions)
+        reg.counter("budget_capped_chunks",
+                    "prefill chunks deferred by the token budget"
+                    ).set(self.budget_capped_chunks)
         reg.gauge("occupancy", "mean fraction of decode lanes doing "
                   "useful work").set(round(self.occupancy, 4))
+
+
+class StepBudget:
+    """One engine step's token ledger. ``limit=None`` is unbounded (the
+    pre-budget behavior: every check passes, nothing is counted against
+    anything). Decode lanes are charged unconditionally via
+    :meth:`take` — a lockstep decode dispatch cannot be split — while
+    admissions and chunk dispatches ask first via :meth:`can` /
+    :meth:`try_take` and wait for a later step when refused."""
+
+    def __init__(self, limit: Optional[int]):
+        self.limit = limit
+        self.used = 0
+
+    def can(self, n: int) -> bool:
+        return self.limit is None or self.used + n <= self.limit
+
+    def take(self, n: int) -> None:
+        self.used += n
+
+    def try_take(self, n: int) -> bool:
+        if not self.can(n):
+            return False
+        self.used += n
+        return True
 
 
 class ContinuousScheduler:
     """FIFO queue + slot table + retirement policy."""
 
-    def __init__(self, n_slots: int, eos_id: int, default_budget: int):
+    def __init__(self, n_slots: int, eos_id: int, default_budget: int,
+                 max_step_tokens: Optional[int] = None):
         self.table = SlotTable(n_slots)
         self.eos_id = eos_id
         self.default_budget = default_budget
+        self.max_step_tokens = max_step_tokens
         self.queue: Deque = collections.deque()
         self.stats = SchedulerStats(n_slots=n_slots)
 
@@ -80,18 +131,35 @@ class ContinuousScheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or self.table.n_active > 0
 
+    def begin_step(self, n_decode: int) -> StepBudget:
+        """Open this step's token ledger, pre-charged with the decode
+        lanes that will run regardless (they're already mid-flight)."""
+        budget = StepBudget(self.max_step_tokens)
+        budget.take(n_decode)
+        return budget
+
     def next_admission(self) -> Optional[Tuple[object, SlotState]]:
         """Pop the next request if a slot is free; returns (request,
         fresh SlotState) — the engine prefills, then calls admit()."""
         if not self.queue or self.table.n_free == 0:
             return None
         req = self.queue.popleft()
+        sp = getattr(req, "params", None)
         # `is not None`, not truthiness: an explicit max_new_tokens=0 is
         # a real (degenerate) budget, not a request for the default
-        budget = (req.max_new_tokens if req.max_new_tokens is not None
-                  else self.default_budget)
+        if sp is not None and sp.max_new_tokens is not None:
+            budget = sp.max_new_tokens
+        elif req.max_new_tokens is not None:
+            budget = req.max_new_tokens
+        else:
+            budget = self.default_budget
+        stop = frozenset(sp.stop) if sp is not None else frozenset()
+        if self.eos_id >= 0:
+            stop = stop | {self.eos_id}
         state = SlotState(uid=req.uid, prompt_len=len(req.prompt),
-                          budget=budget, t_submit=getattr(req, "t_submit", 0.0))
+                          budget=budget,
+                          t_submit=getattr(req, "t_submit", 0.0),
+                          sampling=sp, stop=stop)
         return req, state
 
     def admit(self, state: SlotState) -> int:
@@ -101,15 +169,19 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def record_token(self, slot: int, token: int) -> bool:
-        """Append a generated token; True iff the request just finished."""
+        """Append a generated token; True iff the request just finished.
+        Stops (EOS or a per-request stop id) win over budget exhaustion
+        when both land on the same token."""
         state = self.table.active[slot]
         if not state.tokens:
             state.t_first_token = time.perf_counter()
         state.tokens.append(int(token))
-        hit_eos = self.eos_id >= 0 and int(token) == self.eos_id
-        done = hit_eos or len(state.tokens) >= state.budget
-        if done and hit_eos:
-            self.stats.eos_retired += 1
+        hit_stop = int(token) in state.stop
+        done = hit_stop or len(state.tokens) >= state.budget
+        if done:
+            state.finish_reason = "stop" if hit_stop else "length"
+            if hit_stop and int(token) == self.eos_id:
+                self.stats.eos_retired += 1
         return done
 
     def retire(self, slot: int) -> SlotState:

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, FrozenSet, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +113,10 @@ class SlotState:
     t_admit: float = 0.0
     t_first_token: float = 0.0
     t_prefill: float = 0.0            # prefill wall time at admission
+    sampling: Optional[object] = None  # resolved SamplingParams
+    stop: FrozenSet[int] = frozenset()  # stop token ids (incl. eos)
+    seed: int = 0                     # resolved lane PRNG seed
+    finish_reason: Optional[str] = None  # "stop" | "length" | "abort"
 
 
 class SlotTable:

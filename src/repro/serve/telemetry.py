@@ -398,7 +398,7 @@ def _install_compile_listener() -> None:
 # ==========================================================================
 # Telemetry facade
 # ==========================================================================
-STEP_PHASES = ("admission", "prefill", "decode", "transfer")
+STEP_PHASES = ("budget", "admission", "prefill", "decode", "transfer")
 
 
 class Telemetry:

@@ -1,0 +1,273 @@
+"""OpenAI-compatible HTTP frontend: SSE protocol, parity, abort."""
+import http.client
+import json
+import socket
+import struct
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_lm
+from repro.serve import (Engine, Request, SamplingParams, ServeConfig,
+                         encode_text, serve_http)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(cfg, params, **kw):
+    # prefill_len 48: byte-level chat rendering (<|role|>...<|end|>)
+    # runs ~30-40 tokens, which must fit the unpaged compiled prefill
+    defaults = dict(max_len=64, decode_batch=3, max_new_tokens=6,
+                    prefill_len=48, scheduler="continuous")
+    defaults.update(kw)
+    return Engine(params, cfg, ServeConfig(**defaults))
+
+
+@pytest.fixture()
+def server(tiny):
+    """Engine + HTTP server on an ephemeral port; yields (host, port,
+    engine), tears the server down after the test."""
+    cfg, params = tiny
+    eng = _engine(cfg, params)
+    httpd, srv = serve_http(eng, port=0, model_id="repro-test")
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    host, port = httpd.server_address[:2]
+    yield host, port, eng
+    httpd.shutdown()
+    srv.close()
+
+
+def _post(host, port, path, body, timeout=120):
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    conn.request("POST", path, json.dumps(body),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, json.loads(data)
+
+
+def _get(host, port, path):
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", path)
+    resp = conn.getresponse()
+    data = resp.read()
+    ctype = resp.getheader("Content-Type", "")
+    conn.close()
+    return resp.status, data, ctype
+
+
+def _stream(host, port, path, body, timeout=120):
+    """POST with stream=true; returns the decoded SSE data payloads
+    (http.client undoes the chunked transfer encoding)."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    conn.request("POST", path, json.dumps({**body, "stream": True}),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 200, resp.read()
+    raw = resp.read().decode()
+    conn.close()
+    return [f[len("data: "):] for f in
+            (s.strip() for s in raw.split("\n\n")) if f.startswith("data: ")]
+
+
+# ---------------------------------------------------------------------------
+# Protocol conformance
+# ---------------------------------------------------------------------------
+def test_completion_non_stream(server):
+    host, port, _ = server
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "hello world", "max_tokens": 4})
+    assert status == 200
+    assert out["object"] == "text_completion"
+    assert out["id"].startswith("cmpl-")
+    choice = out["choices"][0]
+    assert choice["finish_reason"] == "length"
+    assert len(choice["token_ids"]) == 4
+    assert choice["text"] == "".join(f"<{t}>" for t in choice["token_ids"])
+    assert out["usage"] == {"prompt_tokens": len(b"hello world"),
+                            "completion_tokens": 4, "total_tokens":
+                            len(b"hello world") + 4}
+
+
+def test_completion_token_id_prompt(server):
+    host, port, _ = server
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": [5, 6, 7], "max_tokens": 2})
+    assert status == 200
+    assert out["usage"]["prompt_tokens"] == 3
+
+
+def test_chat_stream_protocol(server):
+    """SSE stream: role delta first, content deltas, exactly one
+    finish_reason on the final data chunk, then [DONE]."""
+    host, port, _ = server
+    frames = _stream(host, port, "/v1/chat/completions",
+                     {"messages": [{"role": "user", "content": "hi"}],
+                      "max_tokens": 5})
+    assert frames[-1] == "[DONE]"
+    events = [json.loads(f) for f in frames[:-1]]
+    assert all(e["object"] == "chat.completion.chunk" for e in events)
+    assert all(e["id"].startswith("chatcmpl-") for e in events)
+    assert len({e["id"] for e in events}) == 1
+    assert events[0]["choices"][0]["delta"] == {"role": "assistant"}
+    finishes = [e["choices"][0]["finish_reason"] for e in events]
+    assert finishes[-1] == "length"
+    assert all(f is None for f in finishes[:-1])
+    tokens = [e["choices"][0]["token_ids"][0] for e in events
+              if e["choices"][0].get("delta", {}).get("content")]
+    assert len(tokens) == 5
+    assert "usage" in events[-1]
+
+
+def test_http_stream_matches_generate(tiny, server):
+    """The streamed tokens are exactly what Engine.generate() produces
+    for the same (prompt, SamplingParams) — greedy and seeded-sampled."""
+    cfg, params = tiny
+    host, port, _ = server
+    prompt = "parity check prompt"
+    ids = encode_text(prompt, cfg.vocab)
+
+    ref = _engine(cfg, params).generate([
+        Request(uid=1, prompt=ids, params=SamplingParams(max_new_tokens=6)),
+        Request(uid=2, prompt=ids,
+                params=SamplingParams(temperature=0.9, top_p=0.8, top_k=7,
+                                      seed=123, max_new_tokens=6))])
+
+    for req_body, want in [
+            ({"prompt": prompt, "max_tokens": 6}, ref[0]),
+            ({"prompt": prompt, "max_tokens": 6, "temperature": 0.9,
+              "top_p": 0.8, "top_k": 7, "seed": 123}, ref[1])]:
+        status, out = _post(host, port, "/v1/completions", req_body)
+        assert status == 200
+        assert out["choices"][0]["token_ids"] == want.tokens.tolist()
+
+
+def test_concurrent_streams(server):
+    """Two clients streaming at once both complete with full outputs."""
+    host, port, _ = server
+    results = {}
+
+    def worker(i):
+        frames = _stream(host, port, "/v1/completions",
+                         {"prompt": f"client {i}", "max_tokens": 6})
+        results[i] = frames
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    for i in range(2):
+        frames = results[i]
+        assert frames[-1] == "[DONE]"
+        events = [json.loads(f) for f in frames[:-1]]
+        tokens = [e["choices"][0]["token_ids"][0] for e in events
+                  if e["choices"][0].get("text")]
+        assert len(tokens) == 6
+
+
+def test_disconnect_aborts_request(tiny):
+    """Closing the socket mid-stream must abort the request: the slot
+    frees, pages decref, and the aborted counter ticks."""
+    cfg, params = tiny
+    eng = _engine(cfg, params, paged=True, page_size=8, max_len=512,
+                  max_new_tokens=400, prefill_len=16)
+    httpd, srv = serve_http(eng, port=0, model_id="repro-test")
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    host, port = httpd.server_address[:2]
+    try:
+        conn = http.client.HTTPConnection(host, port, timeout=120)
+        conn.request("POST", "/v1/completions",
+                     json.dumps({"prompt": "runaway generation",
+                                 "stream": True, "max_tokens": 400}),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        # read one SSE frame worth, then vanish. SO_LINGER(0) turns the
+        # close into an RST so the server's very next chunk write fails
+        # (a plain FIN close can let frames pile into the socket buffer
+        # until the whole 400-token generation completes "successfully").
+        # Note resp holds a makefile() reference to the same socket, so
+        # closing conn.sock alone never closes the fd — close both.
+        resp.read(64)
+        conn.sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                             struct.pack("ii", 1, 0))
+        resp.close()
+        conn.close()
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            st = srv.stats()
+            if st["aborted"] >= 1 and eng.sched.table.n_active == 0:
+                break
+            time.sleep(0.2)
+        st = srv.stats()
+        assert st["aborted"] == 1
+        assert eng.sched.table.n_active == 0
+        # only the parked pages stay hot — nothing leaked
+        assert st["pages_hot"] == eng.sc.decode_batch
+    finally:
+        httpd.shutdown()
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Error envelopes + introspection routes
+# ---------------------------------------------------------------------------
+def test_error_envelopes(server):
+    host, port, eng = server
+    status, out = _post(host, port, "/v1/completions", {"prompt": 42})
+    assert status == 400 and out["error"]["type"] == "invalid_request_error"
+
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("POST", "/v1/completions", "{broken",
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    out = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 400 and "error" in out
+
+    status, out = _post(host, port, "/v1/chat/completions",
+                        {"messages": []})
+    assert status == 400
+
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "x", "stop": ["\n"]})
+    assert status == 400 and "stop_token_ids" in out["error"]["message"]
+
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "x", "model": "gpt-4"})
+    assert status == 404 and out["error"]["type"] == "not_found_error"
+
+    long_prompt = "y" * (eng.sc.max_len + 10)
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": long_prompt})
+    assert status == 400 and "error" in out
+
+    status, out = _post(host, port, "/v1/nope", {})
+    assert status == 404
+
+
+def test_introspection_routes(server):
+    host, port, _ = server
+    status, body, _ = _get(host, port, "/health")
+    assert status == 200 and json.loads(body)["status"] == "ok"
+
+    status, body, _ = _get(host, port, "/v1/models")
+    models = json.loads(body)
+    assert status == 200 and models["data"][0]["id"] == "repro-test"
+
+    status, body, ctype = _get(host, port, "/metrics")
+    assert status == 200 and b"# TYPE" in body
+    assert ctype.startswith("text/plain")
+
+    status, body, _ = _get(host, port, "/metrics.json")
+    snap = json.loads(body)
+    assert status == 200 and "admitted" in snap
