@@ -23,7 +23,9 @@ back to the ``cpu`` table rather than passing silently.
 Floors (raise them when a PR durably improves the measurement — don't
 delete the gate):
 
-  * continuous batching ≥ 1.2× bucketed tok/s (PR 1 measured ≈1.4×);
+  * continuous batching ≥ 2.0× bucketed tok/s (PR 1 measured ≈1.4× and
+    set 1.2×; later scheduler/telemetry work pushed the margin well
+    past 2× durably, so the floor followed);
   * fused Q+LR matmul ≥ 1.5× dequant-then-matmul at batch 8 (PR 2);
   * fused decode attention ≥ 1.3× XLA-over-int8-cache at the batch-8
     long-context shape (PR 3 measured ≈1.5–1.8× on CPU);
@@ -36,9 +38,15 @@ delete the gate):
     sits below the ideal 1/(1-overlap) ≈ 5×);
   * the token-budget step scheduler cuts p95 engine step time (the
     per-token ITL a decoding lane sees) under a long-prompt burst by
-    ≥ 1.3× vs the same workload unbudgeted (PR 7 measured ≈1.9–2.0×
-    on CPU; the floor is low because the off-lane p95 rides on how
-    many burst chunks land in one step, which is timing-noisy).
+    ≥ 1.6× vs the same workload unbudgeted (PR 7 measured ≈1.9–2.0×
+    on CPU and set 1.3×; re-measurement showed the margin is durable,
+    so the floor followed. It stays under the measured ratio because
+    the off-lane p95 rides on how many burst chunks land in one step,
+    which is timing-noisy);
+  * self-speculative decoding ≥ 1.2× non-speculative tok/s at batch 1
+    on a greedy workload, token parity asserted per request (PR 8
+    measured ≈1.4–1.8× at spec_k=8 on CPU; batch 1 is where the
+    per-lane verify chunks don't fight a batched decode dispatch).
 """
 from __future__ import annotations
 
@@ -53,21 +61,23 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 # to be re-measured upward on hardware.
 FLOORS = {
     "cpu": {
-        "serve_throughput": [("continuous_vs_bucketed", 1.2)],
+        "serve_throughput": [("continuous_vs_bucketed", 2.0)],
         "fused_linear": [("fused_vs_dequant_b8", 1.5)],
         "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
                              ("fused_vs_xla_cache_int4_b8", 1.3)],
         "serve_prefix": [("prefix_prefill_skip_90", 1.8)],
-        "serve_burst": [("budget_step_p95_improvement", 1.3)],
+        "serve_burst": [("budget_step_p95_improvement", 1.6)],
+        "serve_spec": [("spec_tok_per_s_ratio", 1.2)],
     },
     "tpu": {
-        "serve_throughput": [("continuous_vs_bucketed", 1.2)],
+        "serve_throughput": [("continuous_vs_bucketed", 2.0)],
         "fused_linear": [("fused_vs_dequant_b8", 1.5)],
         "decode_attention": [("fused_vs_xla_cache_int8_b8", 1.3),
                              ("fused_vs_xla_cache_int4_b8", 1.3)],
         # deterministic work-count metric: backend-independent
         "serve_prefix": [("prefix_prefill_skip_90", 1.8)],
-        "serve_burst": [("budget_step_p95_improvement", 1.3)],
+        "serve_burst": [("budget_step_p95_improvement", 1.6)],
+        "serve_spec": [("spec_tok_per_s_ratio", 1.2)],
     },
 }
 

@@ -20,6 +20,7 @@ from benchmarks import (
     fused_linear,
     serve_burst,
     serve_prefix,
+    serve_spec,
     serve_throughput,
     table1_ptq,
     table2_downstream,
@@ -44,6 +45,7 @@ BENCHES = [
     ("Serving (continuous vs bucketed tok/s)", serve_throughput),
     ("Serving (paged prefix-cache reuse)", serve_prefix),
     ("Serving (token-budget burst tail latency)", serve_burst),
+    ("Serving (self-speculative decode tok/s)", serve_spec),
     ("Fused Q+LR matmul (fused vs dequant-then-matmul)", fused_linear),
     ("Decode attention (flash-decode vs XLA-over-cache)", decode_attention),
 ]

@@ -18,6 +18,16 @@ so it also prints the step-phase p50 breakdown (budget / admission /
 prefill / decode / transfer) straight from the engine's metrics
 registry. The act also arms the token-budget step scheduler
 (``max_step_tokens``), bounding per-step prefill + decode work.
+
+The last act turns on **self-speculative decoding**: the quantized base
+`Q` alone drafts tokens (the low-rank sliver is skipped — a free draft
+model living inside the serving weights) and the full `Q + LR` model
+verifies k at a time in one chunked dispatch. It prints the measured
+acceptance rate and tok/s next to the plain per-token engine. For a
+real Q+LR model both numbers hinge on how closely the quantized base
+tracks the corrected model — the act reports that trade-off honestly
+rather than a synthetic best case (``benchmarks/serve_spec.py``
+measures the mechanism at its acceptance ceiling).
 """
 import argparse
 import time
@@ -44,12 +54,12 @@ def main():
     params = init_lm(jax.random.PRNGKey(0), cfg)
     dcfg = data_config_for(cfg, seq_len=32, global_batch=4)
 
-    print("[1/4] calibrating …")
+    print("[1/5] calibrating …")
     stats = capture_calibration(
         params, cfg, dcfg, lambda c, pp, b, cc: lm_loss(c, pp, b, cc),
         n_batches=2)
 
-    print("[2/4] quantizing (3-bit MXINT + SRR rank allocation) …")
+    print("[2/5] quantizing (3-bit MXINT + SRR rank allocation) …")
     results = {}
     for method in ("w-only", "qer", "srr"):
         ptq = PTQConfig(method=method,
@@ -67,7 +77,7 @@ def main():
         print(f"   {method:7s}: eval loss {loss:.4f}  mean k*={kbar:4.1f}  "
               f"({dt:.1f}s)")
 
-    print("[3/4] serving the SRR model (continuous batching, int8 KV) …")
+    print("[3/5] serving the SRR model (continuous batching, int8 KV) …")
     eng = Engine(results["srr"], cfg,
                  ServeConfig(max_len=96, decode_batch=4, max_new_tokens=12,
                              kv_dtype="int8", scheduler="continuous",
@@ -101,7 +111,7 @@ def main():
     print(f"   {len(out)} requests, {toks} new tokens, "
           f"lane occupancy {st['occupancy']:.2f}")
 
-    print("[4/4] paged serving: one system prompt, many users "
+    print("[4/5] paged serving: one system prompt, many users "
           "(prefix-cache reuse) …")
     # paged needs a pure-attention stack; run this act on phi3-mini if
     # the requested arch doesn't qualify
@@ -140,6 +150,38 @@ def main():
     print(f"   step-phase p50: {phases}  "
           f"(ttft p50 {pst['ttft_seconds']['p50'] * 1e3:.0f}ms, "
           f"{pst['compiled_shapes_decode']} decode shape(s) compiled)")
+
+    print("[5/5] self-speculative decoding: Q-only draft, Q+LR verify …")
+    spec_prompts = [rng.integers(0, pcfg.vocab, size=8 + i % 4)
+                    .astype(np.int32) for i in range(4)]
+    mk_reqs = lambda: [Request(uid=i, prompt=pr.copy(),   # noqa: E731
+                               max_new_tokens=24)
+                       for i, pr in enumerate(spec_prompts)]
+    lanes = {}
+    for label, spec in (("plain", False), ("speculative", True)):
+        seng = Engine(pparams, pcfg, ServeConfig(
+            max_len=96, decode_batch=1, max_new_tokens=24,
+            kv_dtype="int8", prefill_len=16, paged=True, page_size=8,
+            speculative=spec, spec_k=6))
+        seng.warmup()
+        t0 = time.perf_counter()
+        sres = seng.generate(mk_reqs())
+        wall = time.perf_counter() - t0
+        lanes[label] = (sum(len(r.tokens) for r in sres) / wall,
+                        seng.stats(), sres)
+    tps_p, _, res_p = lanes["plain"]
+    tps_s, sstat, res_s = lanes["speculative"]
+    for a, b in zip(res_p, sorted(res_s, key=lambda r: r.uid)):
+        assert np.array_equal(a.tokens, b.tokens), \
+            "speculation must not change greedy output"
+    print(f"   plain {tps_p:6.1f} tok/s | speculative {tps_s:6.1f} tok/s "
+          f"({tps_s / tps_p:.2f}x) — {sstat['spec_rounds']} rounds, "
+          f"acceptance rate {sstat['spec_acceptance_rate']:.3f} "
+          f"({sstat['spec_accepted_tokens']}/{sstat['spec_draft_tokens']} "
+          f"drafts), tokens identical")
+    print("   (the SRR draft skips the LR correction, so acceptance — "
+          "and the payoff — tracks how well Q alone matches Q+LR; "
+          "benchmarks/serve_spec.py isolates the mechanism's ceiling)")
 
 
 if __name__ == "__main__":

@@ -81,6 +81,13 @@ def main(argv=None):
                    help="nucleus sampling mass (1.0 = off)")
     p.add_argument("--top-k", type=int, default=0,
                    help="top-k logit filter (0 = off)")
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="self-speculative decoding: draft up to K tokens "
+                        "per round through the Q-only base (the low-rank "
+                        "sliver skipped), verify them in one chunked Q+LR "
+                        "dispatch, rewind any rejected tail (0 = off; "
+                        "continuous scheduler, greedy lanes only — "
+                        "sampled lanes fall back to per-token decode)")
     p.add_argument("--max-step-tokens", type=int, default=None,
                    help="token-budget step scheduler: per-step cap on "
                         "prefill dispatch width + decode lanes "
@@ -141,6 +148,8 @@ def main(argv=None):
         scheduler=args.scheduler, prefill_len=args.prefill_len,
         temperature=args.temperature, seed=args.seed,
         max_step_tokens=args.max_step_tokens,
+        speculative=args.spec_k > 0,
+        spec_k=args.spec_k if args.spec_k > 0 else 4,
         fused=args.fused, paged=args.paged, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
         telemetry=telemetry, trace_sync=args.trace_sync,
@@ -171,6 +180,11 @@ def main(argv=None):
         print(f"[serve] latency p50 {p50 * 1e3:.0f}ms p95 {p95 * 1e3:.0f}ms "
               f"occupancy {st['occupancy']:.2f} "
               f"eos_retired {st['eos_retired']}")
+        if args.spec_k > 0:
+            print(f"[serve] speculative: {st['spec_rounds']} rounds, "
+                  f"{st['spec_accepted_tokens']}/{st['spec_draft_tokens']} "
+                  f"drafts accepted "
+                  f"(rate {st['spec_acceptance_rate']:.3f})")
         if args.paged:
             print(f"[serve] paged: {st['prefill_chunks']} prefill chunks, "
                   f"{st['prefill_tokens_computed']}/"

@@ -37,6 +37,8 @@ def build_engine(args) -> Engine:
         prefill_len=args.prefill_len, seed=args.seed, fused=args.fused,
         paged=args.paged, page_size=args.page_size,
         max_step_tokens=args.max_step_tokens,
+        speculative=args.spec_k > 0,
+        spec_k=args.spec_k if args.spec_k > 0 else 4,
         max_pages_per_request=args.max_pages_per_request,
         free_watermark=args.free_watermark, telemetry=args.telemetry))
     print("[server] warming up (prefill + decode compiles)...")
@@ -63,6 +65,9 @@ def main(argv=None):
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--max-step-tokens", type=int, default=None,
                    help="token-budget step scheduler (see ServeConfig)")
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="self-speculative decoding draft depth (0 = off; "
+                        "greedy continuous-batching lanes only)")
     p.add_argument("--max-pages-per-request", type=int, default=None)
     p.add_argument("--free-watermark", type=float, default=0.0)
     p.add_argument("--telemetry", action="store_true")
@@ -88,7 +93,8 @@ def main(argv=None):
         t = threading.Thread(target=httpd.serve_forever, daemon=True)
         t.start()
         try:
-            ok = run_smoke(host, port, args.model_id)
+            ok = run_smoke(host, port, args.model_id,
+                           spec=args.spec_k > 0)
         finally:
             httpd.shutdown()
             srv.close()
@@ -122,7 +128,8 @@ def _get_json(host, port, path):
     return r.status, json.loads(body)
 
 
-def run_smoke(host: str, port: int, model_id: str) -> bool:
+def run_smoke(host: str, port: int, model_id: str,
+              spec: bool = False) -> bool:
     # -- health + models ------------------------------------------------
     status, health = _get_json(host, port, "/health")
     if status != 200 or health.get("status") != "ok":
@@ -202,6 +209,17 @@ def run_smoke(host: str, port: int, model_id: str) -> bool:
         return _fail(f"/metrics.json: {status}")
     if snap.get("retired", 0) < 2:
         return _fail(f"metrics.json retired={snap.get('retired')}")
+    if spec:
+        # the greedy smoke requests must actually take the speculative
+        # path: rounds recorded + draft/accept counters consistent
+        if snap.get("spec_rounds", 0) < 1:
+            return _fail(f"spec_rounds={snap.get('spec_rounds')} with "
+                         "speculation enabled")
+        if snap.get("spec_accepted_tokens", 0) > \
+                snap.get("spec_draft_tokens", 0):
+            return _fail("spec_accepted_tokens > spec_draft_tokens")
+        print(f"[smoke] speculative: {snap['spec_rounds']} rounds, "
+              f"acceptance rate {snap.get('spec_acceptance_rate')}")
     root = Path(__file__).resolve().parents[3]
     schema_path = root / "tools" / "metrics_schema.json"
     validator = root / "tools" / "validate_metrics.py"

@@ -10,10 +10,11 @@ from repro.models.transformer import (
     lm_loss,
     prefill,
     prefill_chunk,
+    verify_chunk,
 )
 
 __all__ = [
     "Ctx", "dequant_weight", "init_linear", "is_linear_params", "linear",
     "apply_block", "decode_step", "forward", "init_cache", "init_lm",
-    "layer_layout", "lm_loss", "prefill", "prefill_chunk",
+    "layer_layout", "lm_loss", "prefill", "prefill_chunk", "verify_chunk",
 ]

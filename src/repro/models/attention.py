@@ -553,101 +553,203 @@ def attention_step(
     return y, new_cache
 
 
+def _chunk_nibble_rmw(old_gather, scatter, codes, start, length, c):
+    """General packed4 chunk write: merge the chunk's int4 codes into the
+    byte planes at **arbitrary** ``start`` parity and ``length`` via a
+    per-byte read-modify-write, one lane per touched byte.
+
+    ``codes``: (C, KV, hd) int8 in [-7, 7]; ``old_gather(byte_idx)``
+    returns the current bytes (NB, KV, hd) for absolute byte indices
+    (NB,); ``scatter(rows, merged)`` writes them back under
+    ``mode="drop"`` with ``rows`` already steered to ``row_count`` (the
+    OOB drop sentinel) on lanes where neither nibble comes from the
+    chunk. Unlike the old block-aligned byte-pair pack (which required
+    even, block-aligned chunk starts), this subsumes prefill *and*
+    speculative-verify chunks: boundary bytes keep their out-of-chunk
+    nibble from the old value, so a verify chunk starting mid-byte never
+    clobbers the accepted token stored in its partner nibble."""
+    nby = c // 2 + 1                           # byte lanes covering the chunk
+    bi = jnp.arange(nby)
+    byte_idx = start // 2 + bi                 # absolute byte index per lane
+    ol = 2 * byte_idx - start                  # chunk offset of the low slot
+    oh = ol + 1
+    lo_in = (ol >= 0) & (ol < length)
+    hi_in = (oh >= 0) & (oh < length)
+    any_in = lo_in | hi_in
+    old = old_gather(byte_idx)                 # (NB, KV, hd) uint8
+    cl = codes[jnp.clip(ol, 0, c - 1)]
+    ch = codes[jnp.clip(oh, 0, c - 1)]
+    lo_u = (cl.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    hi_u = ((ch.astype(jnp.int32) & 0xF) << 4).astype(jnp.uint8)
+    merged = (jnp.where(lo_in[:, None, None], lo_u, old & 0x0F)
+              | jnp.where(hi_in[:, None, None], hi_u, old & 0xF0))
+    return scatter(any_in, byte_idx, merged.astype(jnp.uint8))
+
+
 def attention_chunk(
     ctx: Ctx, params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     row: jax.Array, start: jax.Array, length: jax.Array,
     prefix: str = "attn",
 ) -> Tuple[jax.Array, Dict]:
-    """Chunked prefill over a **paged** cache: process one chunk of one
-    slot row's prompt, attending to everything already in the row's
-    pages (earlier chunks and any prefix-cache blocks mapped in by the
-    scheduler) plus the chunk itself, causally.
+    """Multi-token chunk attention for one cache row: process ``length``
+    tokens at positions ``[start, start+length)`` for slot ``row``,
+    attending to everything already stored below ``start`` (earlier
+    chunks, prefix-cache blocks, decoded context) plus the chunk itself,
+    causally. Serves both **chunked prefill** and the **speculative
+    verify** pass (k drafted tokens scored in one dispatch — there
+    ``start`` is the row's live decode position, arbitrary parity).
+
+    Works over the paged layout (``block_table`` present: writes through
+    the row's page table) and the unpaged slot layout (writes straight
+    into row ``row`` of the (B, KV, S, hd) pages).
 
     ``x``: (1, C, D) — the chunk, right-padded to the compiled chunk
     length C; ``start``: absolute position of its first token;
     ``length``: valid tokens (≤ C). row/start/length are traced, so one
-    compile serves every chunk of every admission.
+    compiled shape serves every chunk of every admission.
 
-    The chunk's K/V is written into the row's pages *in the storage
-    container* (quantized / packed) at slots ``[start, start+C)``, but
-    the attention reads the chunk **fresh** (compute dtype) and only the
-    *context* from storage — so a single-chunk prompt with no cached
-    prefix runs numerically identical ops to the unpaged one-shot
-    prefill, and multi-chunk context pays exactly the storage-dtype
-    round trip decode would pay anyway. Pad-lane writes (``length < C``)
-    are **dropped**: their page index is steered out of bounds and the
+    The chunk's K/V is written into the row's storage *in the storage
+    container* (quantized / packed) at slots ``[start, start+C)`` —
+    unless ``ctx.chunk_store`` is off (speculative verify), which skips
+    every storage write and leaves the draft steps' step-graph entries
+    in place. Attention reads the chunk **fresh** (compute dtype) and
+    only the *context* from storage — so a single-chunk prompt with no
+    cached prefix runs numerically identical ops to the unpaged
+    one-shot prefill, a verify chunk scores drafted tokens with exactly
+    the full-model numerics a per-token decode would use, and
+    multi-chunk context pays exactly the storage-dtype round trip
+    decode would pay anyway. The context mask is ``slot < start`` —
+    anything at or above
+    ``start`` (pad garbage, stale speculative writes from a rejected
+    tail) is invisible. Pad-lane writes (``length < C``) are
+    **dropped**: their row/page index is steered out of bounds and the
     scatter runs with ``mode="drop"``. Clamping them into the row's tail
     block instead would collide with valid slots whenever the final
-    chunk overhangs the block table (``start + C > nb·ps``) — the
+    chunk overhangs the table (``start + C > nslots``) — the
     duplicate-index scatter is unordered, so pad garbage could replace
     real prompt KV.
 
-    Packed4 note: chunk starts are block-aligned and C is even (engine
-    contract), so nibble *pairs* land whole — the write packs byte pairs
-    up front instead of read-modify-writing single nibbles. A byte whose
-    low slot is valid but whose high slot is pad is still written: the
-    pad nibble sits at ``start+length``, which the first decode write's
-    nibble RMW replaces before any mask admits it."""
+    Packed4 note: the write is a per-byte nibble read-modify-write
+    (:func:`_chunk_nibble_rmw`), valid at any chunk start/length —
+    boundary bytes preserve their out-of-chunk partner nibble, so a
+    verify chunk starting at an odd position cannot clobber the last
+    accepted token's stored codes."""
     b, c, _ = x.shape
     hd = cfg.head_dim_
     positions = start + jnp.arange(c)
     q, k, v = _qkv(ctx, params, x, cfg, positions, prefix)
 
-    bt_row = cache["block_table"][row]        # (nb,)
-    ps = _paged_page_size(cache)
-    nb = bt_row.shape[0]
-    nslots = nb * ps
-    n_pool = cache["k"].shape[0]              # OOB sentinel for pad drops
+    paged = "block_table" in cache
     packed4 = cache["k"].dtype == jnp.uint8
     quant = "k_scale" in cache
     new_cache = dict(cache)
 
-    # ---- write the chunk into the row's pages (storage container) ----
+    # ---- write the chunk into the row's storage container ------------
     slots = start + jnp.arange(c)
     valid = jnp.arange(c) < length            # pad lanes write nowhere
-    off = slots % ps
-    pages = jnp.where(valid, bt_row[jnp.minimum(slots // ps, nb - 1)],
-                      n_pool)                 # (C,)
+    if paged:
+        bt_row = cache["block_table"][row]    # (nb,)
+        ps = _paged_page_size(cache)
+        nb = bt_row.shape[0]
+        nslots = nb * ps
+        n_pool = cache["k"].shape[0]          # OOB sentinel for pad drops
+        woffs = slots % ps
+        wrows = jnp.where(valid, bt_row[jnp.minimum(slots // ps, nb - 1)],
+                          n_pool)             # (C,)
+    else:
+        nslots = cache["slot_pos"].shape[1]
+        n_rows = cache["pos"].shape[0]        # OOB row sentinel for drops
+        woffs = slots                         # OOB offsets drop themselves
+        wrows = jnp.where(valid, row, n_rows)
     kw, vw = k[0], v[0]                       # (C, KV, hd)
     if quant:
         kc, ksc = kv_quantize(k, 7 if packed4 else 127)
         vc, vsc = kv_quantize(v, 7 if packed4 else 127)
-        new_cache["k_scale"] = cache["k_scale"].at[pages, :, off].set(
-            ksc[0], mode="drop")
-        new_cache["v_scale"] = cache["v_scale"].at[pages, :, off].set(
-            vsc[0], mode="drop")
+        if ctx.chunk_store:
+            new_cache["k_scale"] = cache["k_scale"].at[wrows, :, woffs].set(
+                ksc[0], mode="drop")
+            new_cache["v_scale"] = cache["v_scale"].at[wrows, :, woffs].set(
+                vsc[0], mode="drop")
         kw, vw = kc[0], vc[0]
-    if packed4:
-        from repro.quant.mxint import pack_codes_4bit
-        kp = pack_codes_4bit(kw.transpose(1, 0, 2))      # (KV, C/2, hd)
-        vp = pack_codes_4bit(vw.transpose(1, 0, 2))
-        blo = start + 2 * jnp.arange(c // 2)  # low slot of each byte pair
-        bvalid = 2 * jnp.arange(c // 2) < length
-        bpages = jnp.where(bvalid, bt_row[jnp.minimum(blo // ps, nb - 1)],
-                           n_pool)
-        boff = (blo % ps) // 2
-        knew = cache["k"].at[bpages, :, boff].set(kp.transpose(1, 0, 2),
+        if ctx.step_parity:
+            # speculative verify: a per-token decode reads its *own*
+            # just-written K/V back through the storage quantizer
+            # (attention_step writes first, then attends over new_cache).
+            # Round-trip the chunk here so verify logits are bit-identical
+            # to the decode steps they stand in for — int4's coarse grid
+            # otherwise flips argmaxes and breaks token parity.
+            k = kv_dequantize(kc, ksc, jnp.float32).astype(k.dtype)
+            v = kv_dequantize(vc, vsc, jnp.float32).astype(v.dtype)
+    if packed4 and ctx.chunk_store:
+        if paged:
+            def gather_old(plane):
+                def g(byte_idx):
+                    pg = bt_row[jnp.minimum((2 * byte_idx) // ps, nb - 1)]
+                    return plane[pg, :, (2 * byte_idx % ps) // 2]
+                return g
+
+            def scatter_to(plane):
+                def s(any_in, byte_idx, merged):
+                    pg = bt_row[jnp.minimum((2 * byte_idx) // ps, nb - 1)]
+                    pg = jnp.where(any_in, pg, n_pool)
+                    return plane.at[pg, :, (2 * byte_idx % ps) // 2].set(
+                        merged, mode="drop")
+                return s
+        else:
+            nbytes = cache["k"].shape[2]
+
+            def gather_old(plane):
+                def g(byte_idx):
+                    bp = plane[row]                       # (KV, S/2, hd)
+                    sel = jnp.clip(byte_idx, 0, nbytes - 1)
+                    return bp[:, sel].transpose(1, 0, 2)  # (NB, KV, hd)
+                return g
+
+            def scatter_to(plane):
+                def s(any_in, byte_idx, merged):
+                    rr = jnp.where(any_in, row, n_rows)
+                    return plane.at[rr, :, byte_idx].set(merged, mode="drop")
+                return s
+        knew = _chunk_nibble_rmw(gather_old(cache["k"]),
+                                 scatter_to(cache["k"]), kw, start, length, c)
+        vnew = _chunk_nibble_rmw(gather_old(cache["v"]),
+                                 scatter_to(cache["v"]), vw, start, length, c)
+    elif ctx.chunk_store:
+        knew = cache["k"].at[wrows, :, woffs].set(kw.astype(cache["k"].dtype),
                                                   mode="drop")
-        vnew = cache["v"].at[bpages, :, boff].set(vp.transpose(1, 0, 2),
+        vnew = cache["v"].at[wrows, :, woffs].set(vw.astype(cache["v"].dtype),
                                                   mode="drop")
-    else:
-        knew = cache["k"].at[pages, :, off].set(kw.astype(cache["k"].dtype),
-                                                mode="drop")
-        vnew = cache["v"].at[pages, :, off].set(vw.astype(cache["v"].dtype),
-                                                mode="drop")
-    new_cache.update(k=knew, v=vnew,
-                     pos=cache["pos"].at[row].set(start + length))
+    if ctx.chunk_store:
+        new_cache.update(k=knew, v=vnew,
+                         pos=cache["pos"].at[row].set(start + length))
+        if not paged:
+            new_cache["slot_pos"] = cache["slot_pos"].at[wrows, woffs].set(
+                slots.astype(jnp.int32), mode="drop")
+    # else: read-only chunk (speculative verify). The draft steps
+    # already persisted step-graph K/V at these slots, and leaving
+    # storage untouched keeps the cache bitwise identical to what
+    # non-speculative decode would have written — verify numerics can
+    # only ever gate acceptance, never leak into future tokens.
 
     # ---- attention: [stored context ‖ fresh chunk], causal -----------
-    from repro.kernels.ops import gather_pages
-    ctxk = gather_pages(cache["k"], bt_row[None])        # pre-chunk pages
-    ctxv = gather_pages(cache["v"], bt_row[None])        # (1, KV, S', hd)
+    if paged:
+        from repro.kernels.ops import gather_pages
+        ctxk = gather_pages(cache["k"], bt_row[None])    # pre-chunk pages
+        ctxv = gather_pages(cache["v"], bt_row[None])    # (1, KV, S', hd)
+        ksg = vsg = None
+        if quant:
+            ksg = gather_pages(cache["k_scale"], bt_row[None])  # (1, KV, S)
+            vsg = gather_pages(cache["v_scale"], bt_row[None])
+    else:
+        ctxk, ctxv = cache["k"][row][None], cache["v"][row][None]
+        ksg = vsg = None
+        if quant:
+            ksg = cache["k_scale"][row][None]
+            vsg = cache["v_scale"][row][None]
     if packed4:
         from repro.quant.mxint import unpack_codes_4bit
         ctxk, ctxv = unpack_codes_4bit(ctxk), unpack_codes_4bit(ctxv)
     if quant:
-        ksg = gather_pages(cache["k_scale"], bt_row[None])   # (1, KV, S)
-        vsg = gather_pages(cache["v_scale"], bt_row[None])
         ctxk = kv_dequantize(ctxk, ksg, jnp.float32)
         ctxv = kv_dequantize(ctxv, vsg, jnp.float32)
     ctxk = ctxk.astype(k.dtype).transpose(0, 2, 1, 3)    # (1, S, KV, hd)

@@ -42,6 +42,13 @@ class Ctx:
     tap: Optional[Dict[str, CalibStats]] = None   # calibration capture
     use_pallas: bool = False                      # TPU kernel path (serving)
     fused: str = "auto"                           # Q+LR matmul: auto|on|off
+    draft: bool = False                           # Q-only (skip the LR sliver)
+    step_parity: bool = False                     # chunk attn reads its own
+    # K/V through the storage-dtype round trip, exactly as a per-token
+    # decode would (speculative verify needs bit-identical numerics)
+    chunk_store: bool = True                      # False = chunk attention
+    # leaves KV storage untouched (speculative verify scores drafts
+    # without overwriting the step-graph K/V the draft steps wrote)
     prefix: str = ""                              # per-layer tap namespace
     autocorr: bool = True                         # capture Σxxᵀ moments
     mesh: Optional[Any] = None                    # enables sharding hints
@@ -195,6 +202,13 @@ def linear(ctx: Ctx, params: Dict[str, jax.Array], x: jax.Array,
         y = x.astype(dt) @ params["w"].astype(dt)
     else:
         mode = fused_mode(ctx)
+        if ctx.draft:
+            # Q-only draft: slice the low-rank factors to rank 0. Every
+            # downstream path (fused kernel, fused-XLA, off) already
+            # no-ops a rank-0 sliver, so the draft rides the exact same
+            # dequant code on the same resident weights — strictly less
+            # work per token, zero extra HBM.
+            params = dict(params, l=params["l"][:, :0], r=params["r"][:0])
         if mode != "off":
             y = _fused_qlr(params, x.astype(dt), mode)
         else:

@@ -23,6 +23,7 @@ full-precision by PTQ policy and keep the dense path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -524,24 +525,17 @@ def prefill(ctx: Ctx, params: Dict, batch: Dict[str, jax.Array],
     return logits, cache
 
 
-def prefill_chunk(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
-                  cache: Dict, row: jax.Array, start: jax.Array,
-                  length: jax.Array) -> Tuple[jax.Array, Dict]:
-    """One chunk of a **paged** chunked prefill: run ``tokens`` (1, C) —
-    positions ``[start, start+length)``, right-padded to the compiled
-    chunk width C — through the stack, appending K/V into slot ``row``'s
-    pages and attending over everything already there (earlier chunks
-    and prefix-cache blocks). Returns (logits at position length-1 of
-    the chunk, updated cache) — the logits only matter on the prompt's
-    final chunk, where they seed the first sampled token.
-
-    row/start/length are traced scalars: one compiled shape covers every
-    chunk of every admission, which is what lets the serving engine
-    interleave long-prompt prefills with live decode steps."""
+def _chunk_stack(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
+                 cache: Dict, info: Tuple) -> Tuple[jax.Array, Dict]:
+    """Shared chunk-mode stack walk for ``prefill_chunk`` /
+    ``verify_chunk``: run ``tokens`` (1, C) through every layer in
+    "chunk" attention mode (append K/V for the chunk positions, attend
+    over [stored context ‖ chunk]). Returns the final-normed hidden
+    states (1, C, D) and the updated cache — the callers differ only in
+    which positions they push through the LM head."""
     x = embed(params["embed"], tokens, ctx.compute_dtype)
     x = _hint_act(ctx, x)
     period = len(cfg.block_pattern)
-    info = (row, start, length)
 
     new_prefix = []
     for i, blk in enumerate(params["prefix"]):
@@ -572,12 +566,76 @@ def prefill_chunk(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
         new_suffix.append(c)
 
     x = norm(params["final_norm"], x, cfg.norm)
+    return x, {"prefix": new_prefix, "groups": new_groups,
+               "suffix": new_suffix}
+
+
+def prefill_chunk(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
+                  cache: Dict, row: jax.Array, start: jax.Array,
+                  length: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One chunk of a chunked prefill: run ``tokens`` (1, C) —
+    positions ``[start, start+length)``, right-padded to the compiled
+    chunk width C — through the stack, appending K/V into slot ``row``'s
+    pages and attending over everything already there (earlier chunks
+    and prefix-cache blocks). Returns (logits at position length-1 of
+    the chunk, updated cache) — the logits only matter on the prompt's
+    final chunk, where they seed the first sampled token.
+
+    row/start/length are traced scalars: one compiled shape covers every
+    chunk of every admission, which is what lets the serving engine
+    interleave long-prompt prefills with live decode steps."""
+    x, new_cache = _chunk_stack(ctx, params, tokens, cfg, cache,
+                                (row, start, length))
     ix = (length - 1).astype(jnp.int32).reshape(1, 1, 1)
     last = jnp.take_along_axis(x, ix, axis=1)
     head = params.get("lm_head") or {"w": params["embed"]["w"].T}
     logits = linear(ctx, head, last)
-    return logits, {"prefix": new_prefix, "groups": new_groups,
-                    "suffix": new_suffix}
+    return logits, new_cache
+
+
+def verify_chunk(ctx: Ctx, params: Dict, tokens: jax.Array, cfg: ModelConfig,
+                 cache: Dict, row: jax.Array, start: jax.Array,
+                 length: jax.Array, store: bool = False,
+                 ) -> Tuple[jax.Array, Dict]:
+    """Speculative-decoding verify: score a chunk of k drafted tokens in
+    one dispatch. Identical stack walk to :func:`prefill_chunk` (same
+    chunk-mode attention over [stored context ‖ chunk]), but the LM
+    head is applied at **every** chunk position — logits (1, C, V) —
+    because acceptance needs the full-model next-token distribution
+    after each drafted token, not just the last one.
+
+    ``store`` decides what happens to the chunk's K/V, and the right
+    setting depends on whether the draft graph IS the target graph:
+
+    * ``store=False`` (draft ≡ target — no low-rank correction in the
+      params, so ``Ctx.draft`` slices nothing): the verify pass is
+      **read-only**. The draft steps already persisted bit-exact
+      step-graph K/V at these slots; overwriting them with
+      chunk-computed values (a different float reduction order) would
+      leak chunk numerics into every future decode step's attention.
+      With storage untouched, verify can only gate acceptance, and
+      greedy speculative output is *exactly* the non-speculative output.
+    * ``store=True`` (the params carry LR slivers): the drafts wrote
+      Q-only K/V, which materially differs from the full Q+LR entries
+      non-speculative decode would store — the chunk must upgrade the
+      slots to full-model K/V. Chunk-vs-step reduction order then
+      leaves ulp-level residue in the cache, so parity is near-exact
+      rather than structural (flips need logit ties of that width).
+
+    The caller rewinds ``pos`` past any rejected tail; the stale KV
+    those positions hold is masked by the ``slot >= pos`` read horizon
+    until the next write lands there.
+
+    ``step_parity`` makes chunk attention read its own K/V through the
+    storage-dtype round trip, matching the per-token decode it replaces
+    (a decode step writes quantized codes first, then attends over the
+    updated cache — its own token included)."""
+    ctx = dataclasses.replace(ctx, step_parity=True, chunk_store=store)
+    x, new_cache = _chunk_stack(ctx, params, tokens, cfg, cache,
+                                (row, start, length))
+    head = params.get("lm_head") or {"w": params["embed"]["w"].T}
+    logits = linear(ctx, head, x)
+    return logits, new_cache
 
 
 def decode_step(ctx: Ctx, params: Dict, token: jax.Array, cache: Dict,

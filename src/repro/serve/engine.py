@@ -72,11 +72,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import Ctx, decode_step, init_cache, prefill, prefill_chunk
+from repro.models import (Ctx, decode_step, init_cache, prefill,
+                          prefill_chunk, verify_chunk)
 from repro.models.attention import absorb_mla_weights
 from repro.serve.pages import PagedKVCache, PagePool
 from repro.serve.prefix import RadixPrefixCache
-from repro.serve.sampling import SamplingParams, lane_seed, sample_tokens
+from repro.serve.sampling import (TOP_LOGPROBS, SamplingParams, lane_seed,
+                                  sample_tokens)
 from repro.serve.scheduler import (ContinuousScheduler, SchedulerStats,
                                    StepBudget)
 from repro.serve.slots import KV_DTYPES, SlotKVCache
@@ -100,6 +102,22 @@ from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
 # absorption or a non-MLA engine construction; call
 # release_absorbed_params() to free it eagerly.
 _absorb_cache: Optional[tuple] = None  # (params, absorbed)
+
+
+def _params_have_lowrank(tree) -> bool:
+    """True when any quantized matrix in the tree carries a non-empty
+    low-rank correction (an ``l`` leaf with rank > 0). Decides the
+    speculative verify's storage mode: without LR slivers the Q-only
+    draft IS the full model, so the drafts' step-graph KV writes are
+    already exact and verify can stay read-only."""
+    if isinstance(tree, dict):
+        ll = tree.get("l")
+        if hasattr(ll, "shape") and ll.shape and ll.shape[-1] > 0:
+            return True
+        return any(_params_have_lowrank(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return any(_params_have_lowrank(v) for v in tree)
+    return False
 
 
 def _absorb_mla_tree(p):
@@ -179,6 +197,13 @@ class ServeConfig:
     # dispatch so device time lands in the phase that launched it
     profile_dir: Optional[str] = None  # arm jax.profiler capture here
     profile_steps: int = 20          # engine steps to capture when armed
+    # --- self-speculative decoding (Q-only draft, Q+LR verify) ---
+    speculative: bool = False        # draft with the quantized base alone
+    # (the LR sliver sliced to rank 0 — same resident weights, strictly
+    # less work per token), then score spec_k tokens in one full-model
+    # chunk dispatch; token-identical to non-speculative decode
+    spec_k: int = 4                  # tokens scored per verify chunk
+    # (1 fed last-token + spec_k-1 drafts); >= 2
 
 
 @dataclasses.dataclass
@@ -246,6 +271,22 @@ class Engine:
                     f"attn_kind={cfg.attn_kind!r}): recurrent states, MLA "
                     f"latents and encoder memories have no block-sharing "
                     f"story yet")
+        if sc.speculative:
+            if sc.scheduler != "continuous":
+                raise ValueError("speculative decoding needs "
+                                 "scheduler='continuous'")
+            if sc.spec_k < 2:
+                raise ValueError(
+                    f"spec_k={sc.spec_k} must be >= 2 — one Q-only draft "
+                    f"token plus the verify model's own next token")
+            unsupported = [k for k in cfg.block_pattern if k != "attn"]
+            if (unsupported or cfg.attn_kind == "mla"
+                    or cfg.is_encoder_decoder or cfg.n_vision_tokens):
+                raise ValueError(
+                    f"speculative decoding verifies through the chunked "
+                    f"attention path and needs a pure full-GQA-attention "
+                    f"decoder (got pattern={cfg.block_pattern}, "
+                    f"attn_kind={cfg.attn_kind!r})")
         # absorb MLA decode weights once per engine session (identity-
         # cached across engines; switching to a non-MLA model frees any
         # previous model's cached absorption)
@@ -296,28 +337,128 @@ class Engine:
         # per-lane sampling: `lanes` is a (temps, top_ps, top_ks, seeds,
         # idxs) tuple of (B,) arrays. PRNG keys are derived inside the
         # jit from (seed, token index) — counter-based, so a lane's draw
-        # never depends on scheduling, batch composition, or step count
-        def _sample(logits, lanes):
-            tok = sample_tokens(logits[:, -1].astype(jnp.float32), *lanes)
-            return tok[:, None]
+        # never depends on scheduling, batch composition, or step count.
+        # `want_lp` is *static*: the logprob report (log_softmax + top-k)
+        # is only traced into the graph when a live lane asked for it,
+        # so the default hot path compiles exactly as before
+        def _lp(lg, tok, want_lp):
+            if not want_lp:
+                return None
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            chosen = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+            top_lp, top_ids = jax.lax.top_k(lp, TOP_LOGPROBS)
+            return chosen, top_lp, top_ids
 
-        def _prefill(params, batch, cache, lengths, lanes):
+        def _sample(logits, lanes, want_lp):
+            lg = logits[:, -1].astype(jnp.float32)
+            tok = sample_tokens(lg, *lanes)
+            return (tok[:, None], _lp(lg, tok, want_lp))
+
+        def _prefill(params, batch, cache, lengths, lanes, want_lp):
             logits, cache = prefill(ctx, params, batch, cfg, cache,
                                     lengths=lengths)
-            return _sample(logits, lanes), cache
+            return _sample(logits, lanes, want_lp), cache
 
-        def _decode(params, token, cache, lanes):
+        def _decode(params, token, cache, lanes, want_lp):
             logits, cache = decode_step(ctx, params, token, cache, cfg)
-            return _sample(logits, lanes), cache
+            return _sample(logits, lanes, want_lp), cache
 
-        def _chunk(params, tokens, cache, row, start, length, lanes):
+        def _chunk(params, tokens, cache, row, start, length, lanes,
+                   want_lp):
             logits, cache = prefill_chunk(ctx, params, tokens, cfg, cache,
                                           row, start, length)
-            return _sample(logits, lanes), cache
+            return _sample(logits, lanes, want_lp), cache
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
-        self._chunk = jax.jit(_chunk)
+        self._prefill = jax.jit(_prefill, static_argnums=(5,))
+        self._decode = jax.jit(_decode, static_argnums=(4,))
+        self._chunk = jax.jit(_chunk, static_argnums=(7,))
+
+        # --- self-speculative closures ---------------------------------
+        # draft: the identical lockstep decode graph with the low-rank
+        # sliver sliced to rank 0 (Ctx.draft) — Q-only logits, with the
+        # drafted tokens' KV persisted at the usual slots through the
+        # very same step graph a plain decode uses (the verify chunk is
+        # read-only, so accepted slots keep these step-graph entries)
+        dctx = dataclasses.replace(ctx, draft=True)
+
+        def _draft(params, token, cache, lanes):
+            logits, cache = decode_step(dctx, params, token, cache, cfg)
+            tok = sample_tokens(logits[:, -1].astype(jnp.float32), *lanes)
+            return tok[:, None], cache
+
+        # the whole k-1 draft chain runs as ONE compiled dispatch:
+        # dispatch + host-sync overhead per round stays O(1) in k
+        # instead of O(k), which is where the CPU speedup lives and
+        # what keeps TPU launch counts flat. The chain is unrolled in
+        # the trace rather than lax.scan'd — XLA:CPU serializes loop
+        # bodies onto one thread (measured ~30x slower per round) while
+        # the unrolled chain keeps intra-op parallelism, and k <=
+        # spec_k keeps the trace small. Static k: at most spec_k-1
+        # compiled variants (k clamps down only when a lane nears its
+        # token budget), all pre-compiled by warmup()
+        def _draft_span(params, token, cache, lanes, k):
+            toks = []
+            for _ in range(k - 1):
+                token, cache = _draft(params, token, cache, lanes)
+                toks.append(token)
+            return jnp.stack(toks), cache  # (k-1, B, 1)
+
+        # verify: one (1, spec_k) chunk re-scores [last token ‖ drafts]
+        # with the full Q+LR model; every position is sampled in-graph
+        # with the lane's counter-based keys (idx0 + j). Chunk logits
+        # only ever gate acceptance (and supply logprobs for tokens the
+        # draft already proposed) — emitted tokens all originate in the
+        # step-shaped graph, see _spec_round
+        # read-only verify when the draft IS the target (no LR params
+        # to slice): storage keeps the drafts' bit-exact step-graph
+        # K/V and greedy spec output is structurally identical to
+        # non-speculative decode. Models with LR slivers need the
+        # chunk to upgrade the drafts' Q-only K/V to full-model
+        # entries — see verify_chunk for the parity consequences.
+        spec_store = _params_have_lowrank(params)
+
+        def _verify(params, tokens, cache, row, start, length, lane,
+                    want_lp):
+            logits, cache = verify_chunk(ctx, params, tokens, cfg, cache,
+                                         row, start, length,
+                                         store=spec_store)
+            lg = logits[0].astype(jnp.float32)
+            kk = lg.shape[0]
+            temp, top_p, top_k, seed, idx0 = lane
+            tok = sample_tokens(
+                lg, jnp.full((kk,), temp, jnp.float32),
+                jnp.full((kk,), top_p, jnp.float32),
+                jnp.full((kk,), top_k, jnp.int32),
+                jnp.full((kk,), seed, jnp.int32),
+                idx0 + jnp.arange(kk, dtype=jnp.int32))
+            return (tok, _lp(lg, tok, want_lp)), cache
+
+        # rollback: rewrite the verified rows' positions to
+        # p + n_accepted (one fused dispatch over every layer's pos
+        # leaf; the groups stack broadcasts over its leading axis).
+        # Rejected-tail KV needs no page work — its slots live in pages
+        # the request already owns (pre-allocated at admission), and
+        # the pos predicate masks them dead until overwritten
+        def _rewind(cache, mask, newpos):
+            def walk(c):
+                if isinstance(c, dict):
+                    out = {k: walk(v) for k, v in c.items()}
+                    if "pos" in c and hasattr(c["pos"], "ndim"):
+                        p = c["pos"]
+                        m, np_ = ((mask, newpos) if p.ndim == 1
+                                  else (mask[None], newpos[None]))
+                        out["pos"] = jnp.where(m, np_.astype(p.dtype), p)
+                    return out
+                if isinstance(c, list):
+                    return [walk(v) for v in c]
+                if isinstance(c, tuple):
+                    return tuple(walk(v) for v in c)
+                return c
+            return walk(cache)
+
+        self._draft_span = jax.jit(_draft_span, static_argnums=(4,))
+        self._verify = jax.jit(_verify, static_argnums=(7,))
+        self._rewind = jax.jit(_rewind)
 
         # paged geometry: the chunk width is the (even) prefill length,
         # chunk starts are page-aligned (matched prefixes are whole
@@ -366,10 +507,21 @@ class Engine:
         self._lane_top_p = np.ones((b,), np.float32)
         self._lane_top_k = np.zeros((b,), np.int32)
         self._lane_seed = np.zeros((b,), np.int32)
-        # streaming hook: called as on_token(uid, token) for every
+        self._lane_lp = np.zeros((b,), bool)
+        self._want_lp = False            # any live lane wants logprobs
+        # self-speculative accounting (published unconditionally)
+        self._spec_rounds = 0
+        self._spec_draft_tokens = 0
+        self._spec_accepted_tokens = 0
+        self._h_accept = self.registry.histogram(
+            "spec_accept_per_round",
+            "accepted draft tokens per lane per speculative round")
+        # streaming hook: called as on_token(uid, token, info) for every
         # generated token the moment it is recorded (serve.http fans
-        # these out to SSE connections)
-        self.on_token: Optional[Callable[[int, int], None]] = None
+        # these out to SSE connections); info is the logprob record when
+        # the request asked for logprobs, else None
+        self.on_token: Optional[Callable[[int, int, Optional[Dict]],
+                                         None]] = None
         self._bucket_stats = SchedulerStats(n_slots=sc.decode_batch)
         if sc.scheduler == "continuous":
             self._reset_continuous()
@@ -380,6 +532,8 @@ class Engine:
         self.sched = ContinuousScheduler(sc.decode_batch, sc.eos_id,
                                          sc.max_new_tokens,
                                          max_step_tokens=sc.max_step_tokens)
+        self._need_plain = False         # a spec-round rejection forces
+        # one step-graph decode (the correction token's source)
         self._tok = jnp.zeros((sc.decode_batch, 1), jnp.int32)
         if not sc.paged:
             self.slots = SlotKVCache(self.cfg, sc.decode_batch, sc.max_len,
@@ -463,19 +617,35 @@ class Engine:
         self._lane_top_p[slot] = sp.top_p
         self._lane_top_k[slot] = sp.top_k
         self._lane_seed[slot] = state.seed
+        self._lane_lp[slot] = sp.logprobs is not None
+        self._want_lp = bool(self._lane_lp.any())
 
     def _clear_lane(self, slot: int) -> None:
         self._lane_temp[slot] = 0.0
         self._lane_top_p[slot] = 1.0
         self._lane_top_k[slot] = 0
         self._lane_seed[slot] = 0
+        self._lane_lp[slot] = False
+        self._want_lp = bool(self._lane_lp.any())
 
-    def _record(self, slot: int, token: int) -> bool:
+    def _lp_entry(self, state, chosen, top_lp,
+                  top_ids) -> Optional[Dict]:
+        """One request-facing logprob record from host-side values:
+        the sampled token's logprob plus the top-n alternatives the
+        request asked for (compiled width TOP_LOGPROBS, trimmed here)."""
+        n = state.sampling.logprobs
+        if n is None:
+            return None
+        top = [(int(i), float(v))
+               for i, v in zip(top_ids[:n], top_lp[:n])]
+        return {"logprob": float(chosen), "top_logprobs": top}
+
+    def _record(self, slot: int, token: int, info=None) -> bool:
         """record_token + the streaming on_token fanout."""
         state = self.sched.table.active[slot]
         done = self.sched.record_token(slot, token)
         if self.on_token is not None:
-            self.on_token(state.uid, int(token))
+            self.on_token(state.uid, int(token), info)
         return done
 
     def _validate(self, req: Request) -> None:
@@ -623,14 +793,15 @@ class Engine:
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :length] = job.req.prompt[start:start + length]
         final = start + length >= eff
+        want_lp = final and job.state.sampling.logprobs is not None
         t0 = time.perf_counter()
         with self.tel.entry("prefill_chunk", (1, c)):
             # non-final chunks discard the sampled token — the lane
             # arrays still ride along so the compiled shape is uniform
-            tok, self.slots.cache = self._chunk(
+            (tok, lpd), self.slots.cache = self._chunk(
                 self.params, jnp.asarray(tokens), self.slots.cache,
                 jnp.int32(slot), jnp.int32(start), jnp.int32(length),
-                self._lanes_for(job.state, 0))
+                self._lanes_for(job.state, 0), want_lp)
             if final:
                 first = int(jax.device_get(tok)[0, 0])
             elif self.tel.sync:
@@ -654,7 +825,11 @@ class Engine:
             job.state.finish_reason = "length"
             return [self._finish(slot)]
         self._tok = self._tok.at[slot, 0].set(first)
-        done = self._record(slot, first)
+        info = None
+        if lpd is not None:
+            ch, tl, ti = jax.device_get(lpd)
+            info = self._lp_entry(job.state, ch[0], tl[0], ti[0])
+        done = self._record(slot, first, info)
         self.tel.request_first_token(job.req.uid)
         if done:
             return [self._finish(slot)]
@@ -686,10 +861,11 @@ class Engine:
         # out (never fed back — that would leak recurrent state between
         # consecutive admissions through this buffer)
         with self.tel.entry("prefill", prompts.shape):
-            first, pf_cache = self._prefill(
+            (first, lpd), pf_cache = self._prefill(
                 self.params, self._batch_for(prompts),
                 self.slots.prefill_cache, jnp.asarray([eff], jnp.int32),
-                self._lanes_for(state, 0))
+                self._lanes_for(state, 0),
+                state.sampling.logprobs is not None)
             first = int(jax.device_get(first)[0, 0])
         t1 = time.perf_counter()
         self.tel.request_prefill(req.uid, 0, t0, t1)
@@ -705,7 +881,11 @@ class Engine:
             return [self._finish(slot)]
         self.slots.admit(pf_cache, slot)
         self._tok = self._tok.at[slot, 0].set(first)
-        done = self._record(slot, first)
+        info = None
+        if lpd is not None:
+            ch, tl, ti = jax.device_get(lpd)
+            info = self._lp_entry(state, ch[0], tl[0], ti[0])
+        done = self._record(slot, first, info)
         self.tel.request_first_token(req.uid)
         if done:
             return [self._finish(slot)]
@@ -825,10 +1005,18 @@ class Engine:
             tel.step_end(0)
             return finished
 
+        k_round = (self._spec_k_for(decoding, budget)
+                   if self.sc.speculative else 0)
+        if k_round:
+            finished.extend(self._spec_round(decoding, k_round))
+            self.sched.note_decode_step(len(decoding))
+            tel.step_end(len(decoding))
+            return finished
+
         with tel.phase("decode"), tel.entry("decode", self._tok.shape):
-            self._tok, self.slots.cache = self._decode(
+            (self._tok, lpd), self.slots.cache = self._decode(
                 self.params, self._tok, self.slots.cache,
-                self._decode_lanes())
+                self._decode_lanes(), self._want_lp)
             if tel.sync:
                 # fence: device time stays in this phase instead of
                 # hiding inside the next host transfer
@@ -836,11 +1024,167 @@ class Engine:
         self.sched.note_decode_step(len(decoding))
         with tel.phase("transfer"):
             toks = np.asarray(jax.device_get(self._tok))[:, 0]
+            lp_host = jax.device_get(lpd) if lpd is not None else None
         for slot in decoding:
-            if self._record(slot, toks[slot]):
+            info = None
+            if lp_host is not None:
+                info = self._lp_entry(self.sched.table.active[slot],
+                                      lp_host[0][slot], lp_host[1][slot],
+                                      lp_host[2][slot])
+            if self._record(slot, toks[slot], info):
                 finished.append(self._finish(slot))
         tel.step_end(len(decoding))
         return finished
+
+    # ------------------------------------------------------------------
+    # Self-speculative decoding: Q-only draft, full Q+LR verify
+    # ------------------------------------------------------------------
+    def _spec_k_for(self, decoding: List[int],
+                    budget: StepBudget) -> int:
+        """Speculative-round eligibility, returning the window width k
+        (0 = run plain per-token decode this step). Requires every
+        decoding lane greedy — temperature lanes fall back to per-token
+        decode, whose counter-based draws are per-token by construction
+        — no pending post-rejection correction (``_need_plain``),
+        enough per-lane budget for the up-to-(k-1) emitted drafts, and
+        step-budget headroom for the extra compiled dispatches: (k-1)
+        draft dispatches over n lanes plus n verify chunks of width k,
+        beyond the one decode already charged at begin_step."""
+        if self._need_plain:
+            self._need_plain = False
+            return 0
+        active = self.sched.table.active
+        k = self.sc.spec_k
+        for s in decoding:
+            st = active[s]
+            if st.sampling.temperature > 0.0:
+                return 0
+            # a round emits at most k-1 tokens for this lane
+            k = min(k, st.budget - len(st.tokens) + 1)
+        if k < 2:
+            return 0
+        n = len(decoding)
+        if not budget.try_take((k - 1) * n + k * n):
+            return 0
+        return k
+
+    def _verify_lane(self, state):
+        """Scalar lane tuple for one verify chunk: the request's
+        sampling controls plus its next token index (position j of the
+        chunk samples with counter key idx0 + j)."""
+        sp = state.sampling
+        return (jnp.float32(sp.temperature), jnp.float32(sp.top_p),
+                jnp.int32(sp.top_k), jnp.int32(state.seed),
+                jnp.int32(len(state.tokens)))
+
+    def _spec_round(self, decoding: List[int], k: int) -> List[Result]:
+        """One self-speculative round over the (all-greedy) decoding
+        lanes: k-1 Q-only draft steps chain through the lockstep decode
+        graph, then one full-model verify chunk per lane re-scores
+        [last token ‖ drafts] — read-only over the KV storage, see
+        :func:`verify_chunk` — and the longest draft prefix matching
+        the verify model's predictions is accepted. Only those accepted
+        drafts are emitted: the verify model's own next token (the
+        classic correction/bonus token) is deliberately NOT taken from
+        the chunk. A chunk computes attention with a different float
+        reduction order than the per-token decode graph, so its argmax
+        can flip on near-tied logits — emitting it would make spec
+        output diverge from non-speculative decode on exactly those
+        ties. Instead the round marks the engine for one plain decode
+        step (``_need_plain``) whenever any lane rejected, and the
+        correction token comes out of the step graph itself; a fully
+        accepting lane just lets the next round's verify position 0
+        re-score what would have been its bonus token. Greedy spec
+        output is therefore token-identical to non-speculative decode
+        by construction, not by numerical luck. Positions rewind to
+        p + n_emitted; rejected-tail KV lives in pages the request
+        already owns (pre-allocated at admission), so no page alloc or
+        decref happens inside a round — refcounts are conserved by
+        construction and the stale tail is masked dead by the pos
+        predicate until the next write lands there."""
+        tel = self.tel
+        sc = self.sc
+        active = self.sched.table.active
+        states = {s: active[s] for s in decoding}
+        # next-write slot per lane: pos = prompt(+vision) + generated - 1
+        p0 = {s: states[s].prompt_len + self._n_vis
+              + len(states[s].tokens) - 1 for s in decoding}
+        lanes = self._decode_lanes()
+        with tel.phase("decode"), \
+                tel.entry("draft", (k - 1,) + tuple(self._tok.shape)):
+            drafts, self.slots.cache = self._draft_span(
+                self.params, self._tok, self.slots.cache, lanes, k)
+        results: List[Result] = []
+        b = sc.decode_batch
+        mask = np.zeros((b,), bool)
+        newpos = np.zeros((b,), np.int32)
+        n_accepted = 0
+        with tel.phase("verify"):
+            # (k-1, B, 1) scan stack → (B, k-1) host table
+            draft_host = np.asarray(jax.device_get(drafts))[:, :, 0].T
+            verify = {}
+            for s in decoding:
+                st = states[s]
+                fed = np.zeros((1, sc.spec_k), np.int32)
+                fed[0, 0] = st.tokens[-1]
+                fed[0, 1:k] = draft_host[s, :k - 1]
+                with tel.entry("verify", (1, sc.spec_k)):
+                    verify[s], self.slots.cache = self._verify(
+                        self.params, jnp.asarray(fed), self.slots.cache,
+                        jnp.int32(s), jnp.int32(p0[s]), jnp.int32(k),
+                        self._verify_lane(st),
+                        st.sampling.logprobs is not None)
+        with tel.phase("transfer"):
+            tok_host = np.asarray(jax.device_get(self._tok)).copy()
+            hosted = {s: (np.asarray(jax.device_get(tv)),
+                          jax.device_get(lpd) if lpd is not None else None)
+                      for s, (tv, lpd) in verify.items()}
+        for s in decoding:
+            st = states[s]
+            tgt, lp_host = hosted[s]
+            # acceptance: draft j survives while it matches the verify
+            # model's prediction at the same position — the greedy-
+            # speculative rule. An accepted draft IS the verify token
+            # (they compared equal), so emitting tgt[j] below emits the
+            # draft, with the chunk's logprob row for that position.
+            n_acc = 1
+            while n_acc < k and draft_host[s, n_acc - 1] == tgt[n_acc - 1]:
+                n_acc += 1
+            n_accepted += n_acc - 1
+            self._h_accept.observe(n_acc - 1)
+            if n_acc < k:
+                # a rejected draft would be re-proposed verbatim next
+                # round (drafting is deterministic); the correction
+                # must come from a plain step-graph decode
+                self._need_plain = True
+            rec = 0
+            done = False
+            for j in range(n_acc - 1):
+                info = None
+                if lp_host is not None:
+                    info = self._lp_entry(st, lp_host[0][j],
+                                          lp_host[1][j], lp_host[2][j])
+                rec += 1
+                # a stop token inside the accepted window truncates
+                # here — tokens past it are never recorded, matching
+                # non-speculative retirement exactly
+                if self._record(s, int(tgt[j]), info):
+                    done = True
+                    break
+            mask[s] = True
+            newpos[s] = p0[s] + rec
+            if rec:
+                tok_host[s, 0] = int(tgt[rec - 1])
+            if done:
+                results.append(self._finish(s))
+        with tel.phase("verify"):
+            self._tok = jnp.asarray(tok_host)
+            self.slots.cache = self._rewind(
+                self.slots.cache, jnp.asarray(mask), jnp.asarray(newpos))
+        self._spec_rounds += 1
+        self._spec_draft_tokens += (k - 1) * len(decoding)
+        self._spec_accepted_tokens += n_accepted
+        return results
 
     def drain(self) -> List[Result]:
         """Run step() until queue and slots are empty; results by uid."""
@@ -884,6 +1228,19 @@ class Engine:
             reg.gauge("prefix_hit_rate", "prefix_hit_tokens / "
                       "prompt_tokens_total"
                       ).set(round(hit / total, 4) if total else 0.0)
+        # speculative counters are part of the uniform key set (zeros
+        # when the mode is off) so dashboards never branch on config
+        reg.counter("spec_rounds", "self-speculative rounds executed"
+                    ).set(self._spec_rounds)
+        reg.counter("spec_draft_tokens", "Q-only draft tokens proposed"
+                    ).set(self._spec_draft_tokens)
+        reg.counter("spec_accepted_tokens",
+                    "draft tokens accepted by the Q+LR verify"
+                    ).set(self._spec_accepted_tokens)
+        reg.gauge("spec_acceptance_rate",
+                  "spec_accepted_tokens / spec_draft_tokens").set(
+            round(self._spec_accepted_tokens / self._spec_draft_tokens, 4)
+            if self._spec_draft_tokens else 0.0)
         self.tel.publish()
         return reg
 
@@ -914,6 +1271,14 @@ class Engine:
             self.tel.tracer.write_jsonl(jsonl_path)
         return out
 
+    def reset_stats(self) -> None:
+        """Start a fresh measurement window — histograms, counters,
+        pool/prefix stats, trace — without touching scheduler state or
+        compiled shapes. ``generate()`` calls this implicitly; callers
+        driving ``submit()``/``step()`` directly (benchmarks timing
+        repeated runs on one warmed engine) call it between runs."""
+        self._reset_stats()
+
     def _reset_stats(self) -> None:
         if self.sched is not None:
             self.sched.stats = type(self.sched.stats)(
@@ -927,21 +1292,49 @@ class Engine:
             self._prefill_tokens_computed = 0
             self._prompt_tokens_total = 0
             self._prefix_hit_tokens = 0
+        self._spec_rounds = 0
+        self._spec_draft_tokens = 0
+        self._spec_accepted_tokens = 0
+        # histogram samples reset even with telemetry off — the
+        # acceptance histogram is registry-resident either way
+        self.registry.reset_histograms()
         # fresh trace + histograms per measured run (compile accounting
         # survives — it describes the engine session)
         self.tel.reset_run()
 
     def warmup(self) -> None:
-        """Trigger the two compiles (prefill + decode) with a dummy
-        request so steady-state timing excludes compilation. Counters
-        are reset afterwards — the dummy never shows in stats()."""
+        """Trigger the compiles (prefill + decode; + draft/verify/rewind
+        under speculative mode — the dummy's budget covers one full-k
+        round) with a dummy request so steady-state timing excludes
+        compilation. Counters are reset afterwards — the dummy never
+        shows in stats()."""
         if self.sc.scheduler != "continuous":
             return
+        # speculative: spec_k + 1 covers one full-k round plus a
+        # clamped k=2 round for the leftover token
+        mnt = self.sc.spec_k + 1 if self.sc.speculative else 2
         dummy = Request(uid=-1, prompt=np.zeros((1,), np.int32),
-                        max_new_tokens=2)
+                        max_new_tokens=mnt)
         self.submit(dummy)
         while self.sched.has_work:
             self.step()
+        if self.sc.speculative:
+            # the dummy run only exercises k = spec_k; the clamped
+            # variants (a lane close to its token budget shrinks the
+            # round) would otherwise compile mid-serve, which a short
+            # benchmark reads as a 100x throughput cliff. jit is pure:
+            # call each variant on the idle state and drop the result
+            lanes = self._decode_lanes()
+            for kk in range(2, self.sc.spec_k + 1):
+                jax.block_until_ready(self._draft_span(
+                    self.params, self._tok, self.slots.cache, lanes, kk)[0])
+            # post-rejection correction tokens come from the plain
+            # decode path, which a fully-accepting dummy run never
+            # touches — compile it here so the first rejection
+            # mid-serve doesn't stall on a compile
+            jax.block_until_ready(self._decode(
+                self.params, self._tok, self.slots.cache, lanes,
+                False)[0][0])
         self._reset_stats()
 
     # ==================================================================
@@ -988,9 +1381,11 @@ class Engine:
         cache = self._init_cache()
         # first token goes through the same per-lane sampling path as
         # decode (token index 0, like the continuous engine's prefill)
-        tok, cache = self._prefill(self.params, self._batch_for(prompts),
-                                   cache, None,
-                                   self._bucket_lanes(reqs, seeds, 0))
+        (tok, _), cache = self._prefill(self.params,
+                                        self._batch_for(prompts),
+                                        cache, None,
+                                        self._bucket_lanes(reqs, seeds, 0),
+                                        False)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
 
@@ -1014,9 +1409,9 @@ class Engine:
                 if not done[i]
                 and step < self._req_budget(r))
             # token index step+1: out[:, step] was token `step`
-            tok, cache = self._decode(
+            (tok, _), cache = self._decode(
                 self.params, tok, cache,
-                self._bucket_lanes(reqs, seeds, step + 1))
+                self._bucket_lanes(reqs, seeds, step + 1), False)
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
 

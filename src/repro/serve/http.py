@@ -109,10 +109,13 @@ class EngineServer:
         engine.on_token = self._on_token
 
     # -- pump side (holds cv) ------------------------------------------
-    def _on_token(self, uid: int, token: int) -> None:
+    def _on_token(self, uid: int, token: int, info=None) -> None:
+        """``info`` is the engine's logprob record (or None) — it rides
+        the token event so streaming and collected responses can both
+        render OpenAI ``logprobs`` without a second engine query."""
         q = self._streams.get(uid)
         if q is not None:
-            q.put(("token", token))
+            q.put(("token", (token, info)))
 
     def _pump(self) -> None:
         eng = self.engine
@@ -196,13 +199,22 @@ def _parse_params(body: Dict, chat: bool) -> SamplingParams:
     if chat and mnt is None:
         mnt = body.get("max_completion_tokens")
     temp = body.get("temperature")
+    # OpenAI surfaces: completions takes `logprobs: <int>`; chat takes
+    # `logprobs: true` + `top_logprobs: <int>`. Both land on
+    # SamplingParams.logprobs (validated 0..5 at submit)
+    lp = body.get("logprobs")
+    if chat:
+        n_lp = int(body.get("top_logprobs", 0)) if lp else None
+    else:
+        n_lp = None if lp is None else int(lp)
     return SamplingParams(
         temperature=None if temp is None else float(temp),
         top_p=float(body.get("top_p", 1.0)),
         top_k=int(body.get("top_k", 0)),
         seed=body.get("seed"),
         stop=tuple(stop_ids),
-        max_new_tokens=None if mnt is None else int(mnt))
+        max_new_tokens=None if mnt is None else int(mnt),
+        logprobs=n_lp)
 
 
 class OpenAIHandler(BaseHTTPRequestHandler):
@@ -353,14 +365,21 @@ class OpenAIHandler(BaseHTTPRequestHandler):
             while True:
                 kind, val = q.get()
                 if kind == "token":
+                    tok, info = val
                     ev = self._envelope(rid, created, obj)
-                    piece = detok(val)
+                    piece = detok(tok)
                     choice = {"index": 0, "finish_reason": None,
-                              "token_ids": [int(val)]}
+                              "token_ids": [int(tok)]}
                     if chat:
                         choice["delta"] = {"content": piece}
+                        if info is not None:
+                            choice["logprobs"] = self._lp_chat(
+                                [tok], [info])
                     else:
                         choice["text"] = piece
+                        if info is not None:
+                            choice["logprobs"] = self._lp_completions(
+                                [tok], [info])
                     ev["choices"] = [choice]
                     self._sse(ev)
                 elif kind == "done":
@@ -390,8 +409,12 @@ class OpenAIHandler(BaseHTTPRequestHandler):
 
     def _collect(self, uid: int, q: "queue.Queue", rid: str, created: int,
                  chat: bool, n_prompt: int) -> None:
+        infos: List = []
         while True:
             kind, val = q.get()
+            if kind == "token":
+                infos.append(val[1])
+                continue
             if kind == "done":
                 res: Result = val
                 break
@@ -407,9 +430,33 @@ class OpenAIHandler(BaseHTTPRequestHandler):
             choice["message"] = {"role": "assistant", "content": text}
         else:
             choice["text"] = text
+        toks = [int(t) for t in res.tokens]
+        if infos and len(infos) == len(toks) \
+                and all(i is not None for i in infos):
+            choice["logprobs"] = (self._lp_chat(toks, infos) if chat
+                                  else self._lp_completions(toks, infos))
         out["choices"] = [choice]
         out["usage"] = self._usage(n_prompt, len(res.tokens))
         self._json(200, out)
+
+    # -- OpenAI logprob shapes -----------------------------------------
+    @staticmethod
+    def _lp_completions(tokens: List[int], infos: List[Dict]) -> Dict:
+        """Completions-style block: parallel arrays over positions."""
+        return {"tokens": [detok(t) for t in tokens],
+                "token_logprobs": [i["logprob"] for i in infos],
+                "top_logprobs": [
+                    {detok(t): lp for t, lp in i["top_logprobs"]}
+                    for i in infos]}
+
+    @staticmethod
+    def _lp_chat(tokens: List[int], infos: List[Dict]) -> Dict:
+        """Chat-style block: one content entry per position."""
+        return {"content": [
+            {"token": detok(t), "logprob": i["logprob"],
+             "top_logprobs": [{"token": detok(tt), "logprob": ll}
+                              for tt, ll in i["top_logprobs"]]}
+            for t, i in zip(tokens, infos)]}
 
     @staticmethod
     def _usage(n_prompt: int, n_out: int) -> Dict:

@@ -24,6 +24,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# compiled width of the per-token top-logprob report (OpenAI caps
+# ``top_logprobs`` at 5); requests trim down from this on the host
+TOP_LOGPROBS = 5
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -42,6 +46,8 @@ class SamplingParams:
     seed: Optional[int] = None           # None → derived from (base, uid)
     stop: Tuple[int, ...] = ()           # extra stop token ids
     max_new_tokens: Optional[int] = None  # None → ServeConfig default
+    logprobs: Optional[int] = None       # None = off; n = report the
+    # sampled token's logprob + the top-n alternatives per position
 
     def validate(self) -> None:
         if self.temperature is not None and self.temperature < 0:
@@ -53,6 +59,10 @@ class SamplingParams:
         if self.max_new_tokens is not None and self.max_new_tokens < 0:
             raise ValueError(
                 f"max_new_tokens={self.max_new_tokens} must be >= 0")
+        if self.logprobs is not None \
+                and not 0 <= self.logprobs <= TOP_LOGPROBS:
+            raise ValueError(f"logprobs={self.logprobs} must be in "
+                             f"[0, {TOP_LOGPROBS}]")
 
 
 def lane_seed(seed: Optional[int], base: int, uid: int) -> int:

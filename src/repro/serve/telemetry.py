@@ -398,7 +398,8 @@ def _install_compile_listener() -> None:
 # ==========================================================================
 # Telemetry facade
 # ==========================================================================
-STEP_PHASES = ("budget", "admission", "prefill", "decode", "transfer")
+STEP_PHASES = ("budget", "admission", "prefill", "decode", "verify",
+               "transfer")
 
 
 class Telemetry:

@@ -1,0 +1,27 @@
+"""CI environment guards.
+
+The property-test modules (``test_kernels``, ``test_quantizers``,
+``test_core_srr``, ``test_paged_pool``) open with
+``pytest.importorskip("hypothesis")`` so local environments without it
+still run the rest of tier-1. That skip is silent — if hypothesis ever
+dropped out of the CI install line, four modules of coverage would
+vanish without a red X. This guard turns that into a hard failure: it
+only runs where ``CI`` is set (GitHub Actions always sets it) and
+asserts the property-test dependency is importable there.
+"""
+import importlib.util
+import os
+
+import pytest
+
+PROPERTY_TEST_MODULES = (
+    "test_kernels", "test_quantizers", "test_core_srr", "test_paged_pool")
+
+
+def test_hypothesis_installed_in_ci():
+    if not os.environ.get("CI"):
+        pytest.skip("dependency guard only enforced in CI")
+    assert importlib.util.find_spec("hypothesis") is not None, (
+        "hypothesis is not installed in the CI environment — the "
+        f"property-test modules {PROPERTY_TEST_MODULES} would silently "
+        "skip out of tier-1. Restore it in the workflow's install step.")

@@ -279,6 +279,38 @@ def test_stop_token_truncates_with_reason(tiny):
     assert full[0].finish_reason == "length"
 
 
+def test_top_k1_equals_greedy(tiny):
+    """top_k=1 leaves only the argmax in the kept set, so a sampled
+    lane at any temperature degenerates to the greedy stream."""
+    cfg, params = tiny
+    ref = _engine(cfg, params).generate(_reqs(cfg, 2))
+    sp = [SamplingParams(temperature=1.3, top_k=1, seed=5 + i)
+          for i in range(2)]
+    res = _engine(cfg, params).generate(_reqs(cfg, 2, params=sp))
+    for r, g in zip(res, ref):
+        assert r.tokens.tolist() == g.tokens.tolist()
+
+
+def test_top_p_one_equals_plain_temperature(tiny):
+    """top_p=1.0 must be a true no-op filter: identical draws to the
+    same seed with no nucleus cut and to top_k=vocab (the other no-op
+    spelling) — while a real cut (top_p=0.5) moves the stream, proving
+    the filter is live and the equality isn't vacuous."""
+    cfg, params = tiny
+    mk = lambda sp: _engine(cfg, params).generate(   # noqa: E731
+        _reqs(cfg, 2, params=[sp, sp]))
+    plain = mk(SamplingParams(temperature=0.9, seed=11))
+    nucleus_off = mk(SamplingParams(temperature=0.9, top_p=1.0, seed=11))
+    topk_full = mk(SamplingParams(temperature=0.9, top_k=cfg.vocab,
+                                  seed=11))
+    for a, b, c in zip(plain, nucleus_off, topk_full):
+        assert a.tokens.tolist() == b.tokens.tolist()
+        assert a.tokens.tolist() == c.tokens.tolist()
+    cut = mk(SamplingParams(temperature=0.9, top_p=0.5, seed=11))
+    assert any(a.tokens.tolist() != d.tokens.tolist()
+               for a, d in zip(plain, cut))
+
+
 def test_params_validation(tiny):
     cfg, params = tiny
     eng = _engine(cfg, params)

@@ -219,6 +219,70 @@ def test_disconnect_aborts_request(tiny):
 
 
 # ---------------------------------------------------------------------------
+# Logprobs surfaces
+# ---------------------------------------------------------------------------
+def test_completions_logprobs_non_stream(server):
+    """Completions-style block: parallel arrays over positions, greedy
+    sampled token tops its own top_logprobs map."""
+    host, port, _ = server
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "logprob check", "max_tokens": 4,
+                         "logprobs": 2})
+    assert status == 200
+    choice = out["choices"][0]
+    lp = choice["logprobs"]
+    assert len(lp["tokens"]) == 4
+    assert len(lp["token_logprobs"]) == 4
+    assert lp["tokens"] == [f"<{t}>" for t in choice["token_ids"]]
+    for piece, chosen, top in zip(lp["tokens"], lp["token_logprobs"],
+                                  lp["top_logprobs"]):
+        assert len(top) == 2
+        assert piece in top                 # greedy: argmax emitted
+        assert abs(top[piece] - chosen) < 1e-6
+        assert all(v <= 0.0 for v in top.values())
+
+
+def test_completions_no_logprobs_field_when_not_requested(server):
+    host, port, _ = server
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "plain", "max_tokens": 2})
+    assert status == 200
+    assert "logprobs" not in out["choices"][0]
+
+
+def test_chat_stream_logprobs_chunks(server):
+    """Chat stream: every content delta carries one logprobs content
+    entry with the requested top_logprobs width."""
+    host, port, _ = server
+    frames = _stream(host, port, "/v1/chat/completions",
+                     {"messages": [{"role": "user", "content": "hi"}],
+                      "max_tokens": 3, "logprobs": True,
+                      "top_logprobs": 2})
+    events = [json.loads(f) for f in frames if f != "[DONE]"]
+    content_evs = [ev for ev in events
+                   if ev["choices"][0].get("delta", {}).get("content")]
+    assert len(content_evs) == 3
+    for ev in content_evs:
+        choice = ev["choices"][0]
+        entries = choice["logprobs"]["content"]
+        assert len(entries) == 1
+        e = entries[0]
+        assert e["token"] == choice["delta"]["content"]
+        assert len(e["top_logprobs"]) == 2
+        assert e["top_logprobs"][0]["token"] == e["token"]
+        assert abs(e["top_logprobs"][0]["logprob"] - e["logprob"]) < 1e-6
+
+
+def test_logprobs_validation_envelope(server):
+    """Out-of-range logprobs (> compiled TOP_LOGPROBS) is a 400, not an
+    engine crash."""
+    host, port, _ = server
+    status, out = _post(host, port, "/v1/completions",
+                        {"prompt": "x", "max_tokens": 1, "logprobs": 9})
+    assert status == 400 and "logprobs" in out["error"]["message"]
+
+
+# ---------------------------------------------------------------------------
 # Error envelopes + introspection routes
 # ---------------------------------------------------------------------------
 def test_error_envelopes(server):

@@ -1,0 +1,289 @@
+"""Self-speculative decoding: token parity, rollback bookkeeping,
+budget interplay, and logprob plumbing.
+
+The acceptance bar for speculation is behavioral invisibility: with
+``speculative=True`` the engine must emit token-for-token what plain
+per-token decode emits, for every KV container × fused mode ×
+paged/unpaged, greedy and sampled lanes alike. For the unquantized
+model that parity is structural (the Q-only draft IS the target model;
+the verify chunk is read-only over KV storage); for a quantized Q+LR
+model the verify chunk upgrades the drafts' Q-only K/V entries to
+full-model values and the parity check covers the heavy-rejection
+regime too.
+"""
+import argparse
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_lm
+from repro.serve import Engine, Request, SamplingParams, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def qtiny():
+    """SRR-quantized reduced model: params carry real low-rank slivers,
+    so the Q-only draft diverges from the Q+LR target and speculative
+    rounds exercise the rejection/rollback path heavily."""
+    from repro.launch.serve import build_quantized_model
+    args = argparse.Namespace(arch="phi3-mini-3.8b", seed=0,
+                              method="srr", rank=8, bits=4)
+    params, cfg = build_quantized_model(args, tag="test")
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_len=128, decode_batch=3, max_new_tokens=12,
+                    prefill_len=16, scheduler="continuous")
+    defaults.update(kw)
+    return Engine(params, cfg, ServeConfig(**defaults))
+
+
+def _reqs(cfg, n, base_len=5, params=None, budget=None):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=base_len + (i % 3))
+                    .astype(np.int32),
+                    max_new_tokens=budget[i] if budget else None,
+                    params=params[i] if params else None)
+            for i in range(n)]
+
+
+def _same(a, b, msg=""):
+    for ra, rb in zip(a, b):
+        assert ra.uid == rb.uid
+        np.testing.assert_array_equal(ra.tokens, rb.tokens, err_msg=msg)
+        assert ra.finish_reason == rb.finish_reason, msg
+
+
+def _spec_vs_plain(cfg, params, spec_k=4, nreq=4, reqs_kw=None, **kw):
+    """Run the same workload spec-off and spec-on; return both result
+    lists plus the speculative engine (for stats/pool inspection)."""
+    reqs_kw = reqs_kw or {}
+    plain = _engine(cfg, params, **kw).generate(_reqs(cfg, nreq, **reqs_kw))
+    eng = _engine(cfg, params, speculative=True, spec_k=spec_k, **kw)
+    spec = eng.generate(_reqs(cfg, nreq, **reqs_kw))
+    return plain, spec, eng
+
+
+# ---------------------------------------------------------------------------
+# Token parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", ["f32", "int4"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_parity_fp(tiny, kv_dtype, paged):
+    """No low-rank slivers → the draft is the target model, the verify
+    chunk stays read-only, and greedy parity is structural: identical
+    tokens on any workload, not a lucky seed."""
+    cfg, params = tiny
+    kw = dict(kv_dtype=kv_dtype)
+    if paged:
+        kw.update(paged=True, page_size=8)
+    plain, spec, eng = _spec_vs_plain(cfg, params, **kw)
+    _same(plain, spec, f"spec diverged at kv={kv_dtype} paged={paged}")
+    st = eng.stats()
+    assert st["spec_rounds"] >= 1
+    assert st["spec_accepted_tokens"] <= st["spec_draft_tokens"]
+
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "bf16", "int8", "int4"])
+def test_spec_parity_quantized(qtiny, kv_dtype):
+    """Q+LR model: the draft skips the LR sliver, so rejections (and the
+    post-rejection plain-decode correction) dominate — parity must hold
+    through the accept/reject/rewind machinery on every KV container."""
+    cfg, params = qtiny
+    plain, spec, eng = _spec_vs_plain(cfg, params, kv_dtype=kv_dtype,
+                                      paged=True, page_size=8, nreq=3)
+    _same(plain, spec, f"quantized spec diverged at kv={kv_dtype}")
+    assert eng.stats()["spec_rounds"] >= 1
+
+
+@pytest.mark.parametrize("fused", ["on", "off"])
+def test_spec_parity_quantized_fused_modes(qtiny, fused):
+    cfg, params = qtiny
+    plain, spec, _ = _spec_vs_plain(cfg, params, kv_dtype="int4",
+                                    paged=True, page_size=8, fused=fused,
+                                    nreq=3)
+    _same(plain, spec, f"quantized spec diverged at fused={fused}")
+
+
+def test_spec_parity_unpaged_quantized(qtiny):
+    cfg, params = qtiny
+    plain, spec, _ = _spec_vs_plain(cfg, params, kv_dtype="int8", nreq=3)
+    _same(plain, spec, "quantized spec diverged unpaged")
+
+
+# ---------------------------------------------------------------------------
+# Sampled lanes: per-token fallback
+# ---------------------------------------------------------------------------
+def test_spec_sampled_lanes_fall_back(tiny):
+    """Temperature lanes decode per-token (counter-based draws are
+    per-position), so an all-sampled batch runs zero speculative rounds
+    and still matches the non-speculative engine exactly."""
+    cfg, params = tiny
+    sp = [SamplingParams(temperature=0.8, seed=7 + i) for i in range(3)]
+    plain, spec, eng = _spec_vs_plain(cfg, params, nreq=3,
+                                      reqs_kw=dict(params=sp))
+    _same(plain, spec, "sampled lanes diverged under speculation")
+    assert eng.stats()["spec_rounds"] == 0
+
+
+def test_spec_mixed_batch_one_sampled_lane_blocks_round(tiny):
+    """One sampled lane in the batch forces plain decode for everyone
+    (a speculative round needs every decoding lane greedy) — outputs
+    still match the non-speculative engine per request."""
+    cfg, params = tiny
+    sp = [None, SamplingParams(temperature=1.1, seed=3), None]
+    plain, spec, eng = _spec_vs_plain(cfg, params, nreq=3,
+                                      reqs_kw=dict(params=sp))
+    _same(plain, spec, "mixed batch diverged under speculation")
+    assert eng.stats()["spec_rounds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Stop tokens inside an accepted window
+# ---------------------------------------------------------------------------
+def test_spec_stop_token_in_accepted_chunk(tiny):
+    """A stop token that lands inside the accepted draft window must
+    truncate right there with finish_reason='stop' — tokens past it are
+    never recorded, matching non-speculative retirement."""
+    cfg, params = tiny
+    probe = _engine(cfg, params).generate(_reqs(cfg, 1))
+    stop = int(probe[0].tokens[3])
+    cut = probe[0].tokens.tolist().index(stop)
+    sp = [SamplingParams(stop=(stop,), max_new_tokens=12)]
+    eng = _engine(cfg, params, speculative=True, spec_k=6)
+    res = eng.generate(_reqs(cfg, 1, params=sp))
+    assert res[0].finish_reason == "stop"
+    assert res[0].tokens[-1] == stop
+    assert len(res[0].tokens) == cut + 1
+    np.testing.assert_array_equal(res[0].tokens,
+                                  probe[0].tokens[:cut + 1])
+    # spec_k=6 over a 12-token budget: the stop at index <= 3 sits in
+    # the first accepted window, so the truncation really exercised
+    # the speculative path
+    assert eng.stats()["spec_rounds"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Paged rollback: refcount conservation
+# ---------------------------------------------------------------------------
+def _assert_pool_conserved(eng):
+    pool = eng.pool
+    assert pool.n_free + pool.n_cold + pool.n_hot == pool.n_pages
+    refs = sum(pool.refcount(p) for p in range(pool.n_pages))
+    # once every request retired, the only references left are the
+    # parked per-lane placeholder pages
+    assert refs == eng.sc.decode_batch, \
+        f"leaked {refs - eng.sc.decode_batch} page refs"
+
+
+def test_spec_refcounts_conserved_accept_path(tiny):
+    """All-accept regime (fp model): rounds rewind positions without
+    touching page ownership; two back-to-back runs leak nothing."""
+    cfg, params = tiny
+    eng = _engine(cfg, params, speculative=True, spec_k=4, paged=True,
+                  page_size=8)
+    eng.generate(_reqs(cfg, 5))
+    _assert_pool_conserved(eng)
+    eng.generate(_reqs(cfg, 5))
+    _assert_pool_conserved(eng)
+
+
+def test_spec_refcounts_conserved_reject_path(qtiny):
+    """Heavy-rejection regime (quantized model): rejected tails rewind
+    into pages the request already owns — no alloc/decref inside a
+    round, so the pool balances exactly after retirement."""
+    cfg, params = qtiny
+    eng = _engine(cfg, params, speculative=True, spec_k=4, paged=True,
+                  page_size=8)
+    eng.generate(_reqs(cfg, 4))
+    st = eng.stats()
+    assert st["spec_rounds"] >= 1
+    _assert_pool_conserved(eng)
+
+
+def test_spec_refcounts_conserved_abort_mid_flight(tiny):
+    """Aborting a lane between speculative rounds releases its pages;
+    the remaining lanes finish and the pool balances."""
+    cfg, params = tiny
+    eng = _engine(cfg, params, speculative=True, spec_k=4, paged=True,
+                  page_size=8, max_new_tokens=16)
+    for r in _reqs(cfg, 4, budget={i: 16 for i in range(4)}):
+        eng.submit(r)
+    done = []
+    for _ in range(2):
+        done.extend(eng.step())
+    assert eng.stats()["spec_rounds"] >= 1
+    res = eng.abort(1)
+    assert res is not None and res.finish_reason == "abort"
+    done.append(res)
+    done.extend(eng.drain())
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    _assert_pool_conserved(eng)
+
+
+# ---------------------------------------------------------------------------
+# Token-budget interplay
+# ---------------------------------------------------------------------------
+def test_spec_respects_step_budget(tiny):
+    """Draft and verify dispatches are charged against max_step_tokens.
+    At the smallest legal budget (prefill width + 1 = 17) a full
+    3-lane k=4 round costs 3 base + 9 draft + 12 verify = 24 > 17, so
+    rounds can only ever run while ≤ 2 lanes are decoding (admission
+    ramp-up / retirement tail) — and the output still matches the
+    unbudgeted non-speculative engine exactly."""
+    cfg, params = tiny
+    base = dict(decode_batch=3, prefill_len=16)
+    ref = _engine(cfg, params, **base).generate(_reqs(cfg, 3))
+
+    tight = _engine(cfg, params, speculative=True, spec_k=4,
+                    max_step_tokens=17, **base)
+    res_t = tight.generate(_reqs(cfg, 3))
+    _same(ref, res_t, "tight-budget spec diverged")
+    st = tight.stats()
+    # a round over n lanes drafts (k-1)·n tokens: with every round
+    # capped at 2 lanes, draft tokens can't exceed 2(k-1) per round
+    assert st["spec_draft_tokens"] <= 2 * 3 * st["spec_rounds"], \
+        "a speculative round ran over the full batch despite the budget"
+
+    roomy = _engine(cfg, params, speculative=True, spec_k=4,
+                    max_step_tokens=64, **base)
+    res_r = roomy.generate(_reqs(cfg, 3))
+    _same(ref, res_r, "roomy-budget spec diverged")
+    assert roomy.stats()["spec_rounds"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Logprobs through the speculative path
+# ---------------------------------------------------------------------------
+def test_spec_logprobs_cover_every_token(tiny):
+    """logprobs-requesting lanes still get one record per emitted token
+    when those tokens come out of accepted draft windows, and greedy
+    records are self-consistent (chosen token tops its own top-list)."""
+    cfg, params = tiny
+    sp = [SamplingParams(logprobs=2) for _ in range(2)]
+    eng = _engine(cfg, params, speculative=True, spec_k=4, decode_batch=2)
+    infos = {}
+    eng.on_token = lambda uid, tok, info: \
+        infos.setdefault(uid, []).append((tok, info))
+    res = eng.generate(_reqs(cfg, 2, params=sp))
+    assert eng.stats()["spec_rounds"] >= 1
+    for r in res:
+        recs = infos[r.uid]
+        assert len(recs) == len(r.tokens)
+        for tok, info in recs:
+            assert info is not None
+            assert isinstance(info["logprob"], float)
+            assert len(info["top_logprobs"]) == 2
+            top_tok, top_lp = info["top_logprobs"][0]
+            assert top_tok == tok          # greedy: argmax emitted
+            assert abs(top_lp - info["logprob"]) < 1e-6
