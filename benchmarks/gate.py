@@ -51,10 +51,13 @@ delete the gate):
 from __future__ import annotations
 
 import argparse
+import importlib.util
 import json
 import os
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+TOOLS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "tools")
+BENCH_SCHEMA = os.path.join(TOOLS_DIR, "bench_schema.json")
 
 # backend → summary name → [(gate metric, floor), ...]. The cpu table
 # gates CI; tpu entries are seeded (see module docstring) and expected
@@ -86,6 +89,26 @@ def floors_for(backend: str):
     return FLOORS.get(backend, FLOORS["cpu"])
 
 
+def _load_validator():
+    """The schema validator lives in tools/validate_metrics.py (shared
+    with the serve-metrics smoke); import it by path so this script
+    works however it is invoked."""
+    spec = importlib.util.spec_from_file_location(
+        "_validate_metrics", os.path.join(TOOLS_DIR, "validate_metrics.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def validate_summary(path: str, data, validator, schema) -> list:
+    """Schema-check one BENCH_*.json; returns the error list. A summary
+    that does not parse against tools/bench_schema.json must fail the
+    gate loudly — a malformed artifact silently skipping its floor is
+    exactly the regression-hiding this gate exists to prevent."""
+    return validator.validate(data, schema, schema,
+                              path=os.path.basename(path))
+
+
 def known_names():
     return sorted({n for table in FLOORS.values() for n in table})
 
@@ -96,6 +119,9 @@ def check(names=None) -> int:
     against the floor table of the backend it ran on. Returns
     #failures."""
     failures = 0
+    validator = _load_validator()
+    with open(BENCH_SCHEMA) as f:
+        schema = json.load(f)
     for name in known_names():
         path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
         if not os.path.exists(path):
@@ -108,6 +134,12 @@ def check(names=None) -> int:
             continue
         with open(path) as f:
             data = json.load(f)
+        errors = validate_summary(path, data, validator, schema)
+        if errors:
+            for e in errors:
+                print(f"[gate] FAIL {name}: summary schema: {e}")
+            failures += len(errors)
+            continue
         backend = data.get("backend", "cpu")
         gate = data.get("gate", {})
         floors = floors_for(backend).get(name)

@@ -1,0 +1,67 @@
+"""Shared layout/tiling constants for the Pallas kernels — ONE home.
+
+Before this module the minimum-tile numbers lived in three places at
+once: the flash-decode docstrings ("32 rows for int8/f32 pages, 64
+logical slots for packed4"), the page-pool evenness check, and the
+ROADMAP's hardware-validation notes. The static analyzer
+(``tools/analysis``) and the kernels now import the same constants, so
+a drifting copy is a lint failure instead of a first-dispatch Mosaic
+error on hardware.
+
+Everything here is a plain int / pure function — importable by the
+dependency-free analyzer without pulling in jax.
+"""
+from __future__ import annotations
+
+# MXINT shared-exponent block: one scale per 32 codes along K. The
+# quantizer (repro.quant.mxint) and the fused matmul's scale BlockSpecs
+# both assume this granularity.
+MXINT_BLOCK = 32
+
+# int4 packed4 container: two 4-bit codes per byte along the slot axis,
+# so every slot count that touches a packed page must be even.
+PACKED4_SLOT_ALIGN = 2
+
+# Mosaic sublane tiling on real TPU hardware: a kernel block's
+# second-to-last dim must cover the sublane tile. int8/f32 pages need
+# 32 rows; a packed4 page stores two logical slots per sublane row, so
+# it needs 64 *logical* slots to fill the same 32 physical rows.
+MIN_SUBLANE_TILE = 32
+MIN_SUBLANE_TILE_PACKED4 = 64
+
+# Static per-grid-step VMEM budget the analyzer warns over (sum of
+# BlockSpec block shapes + VMEM scratch, double-buffering headroom
+# left implicit). v5e has 16 MiB; 4 MiB keeps generous room for the
+# compiler's own double-buffering of the HBM streams.
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def min_page_size(packed: bool, strict: bool) -> int:
+    """Smallest legal page/block size in logical slots. ``strict`` is
+    the real-hardware regime (Mosaic sublane tiling enforced);
+    interpret mode only needs nibble-pair alignment."""
+    if strict:
+        return MIN_SUBLANE_TILE_PACKED4 if packed else MIN_SUBLANE_TILE
+    return PACKED4_SLOT_ALIGN
+
+
+def validate_page_size(page_size: int, *, packed: bool = False,
+                       strict: bool = False, what: str = "page_size"
+                       ) -> None:
+    """Raise ``ValueError`` when ``page_size`` logical slots cannot back
+    a kernel block: odd sizes break the packed4 nibble-pair container
+    everywhere; under ``strict`` (compiled TPU) the size must also meet
+    the Mosaic sublane tile — 32 slots for int8/f32 pages,
+    64 for packed4."""
+    if page_size % PACKED4_SLOT_ALIGN:
+        raise ValueError(
+            f"{what}={page_size} must be even (a multiple of "
+            f"{PACKED4_SLOT_ALIGN}): int4 packs two slots per byte and a "
+            f"nibble pair must not straddle a page")
+    floor = min_page_size(packed, strict)
+    if page_size < floor:
+        raise ValueError(
+            f"{what}={page_size} is below the Mosaic sublane tile on "
+            f"compiled TPU: {'packed4' if packed else 'int8/f32'} pages "
+            f"need >= {floor} logical slots per block "
+            f"(interpret mode accepts any even size)")

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.constraints import PACKED4_SLOT_ALIGN, validate_page_size
 from repro.kernels.mxint_matmul import _unpack_tile
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
@@ -147,7 +148,7 @@ def flash_decode_bkgd(
             f"flash_decode_bkgd: S={s_len} is not a multiple of bs={bs} — "
             f"pad the slot axis (see ops._decode_attention_pallas) instead "
             f"of letting the grid drop the tail")
-    if packed and bs % 2:
+    if packed and bs % PACKED4_SLOT_ALIGN:
         raise ValueError(f"packed4 KV needs an even block, got bs={bs}")
     n_s = s_len // bs
     quantized = k_scale is not None
@@ -236,6 +237,11 @@ def flash_decode_paged(
             f"the block table addresses {nb}×{ps}")
     if packed and k_scale is None:
         raise ValueError("packed4 (uint8) KV pages require k/v scales")
+    # the kernel block IS the page: nibble pairs must land whole, and a
+    # compiled (non-interpret) run must meet the Mosaic sublane tile —
+    # fail at dispatch setup with the shared constraint error instead of
+    # a Mosaic lowering crash
+    validate_page_size(ps, packed=packed, strict=not interpret)
     quantized = k_scale is not None
     if scale is None:
         scale = 1.0 / (hd ** 0.5)

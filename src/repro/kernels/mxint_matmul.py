@@ -53,6 +53,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.constraints import MXINT_BLOCK
+
+
+def _check_tiles(m: int, k: int, n: int, bm: int, bk: int, bn: int,
+                 mx_block: int) -> None:
+    """The grid floor-divides every problem dim by its block; a ragged
+    dim would silently drop the tail tile, so enforce the documented
+    caller contract (ops.py pads before calling) with a loud error."""
+    if m % bm or k % bk or n % bn:
+        raise ValueError(
+            f"mxint matmul tiles must divide the problem: (M={m}, K={k}, "
+            f"N={n}) vs (bm={bm}, bk={bk}, bn={bn}) — pad to tile "
+            f"multiples first (see kernels.ops._pad_to)")
+    if bk % mx_block:
+        raise ValueError(
+            f"bk={bk} must be a multiple of the scale block {mx_block} "
+            f"(canonically {MXINT_BLOCK}) so scale tiles align with "
+            f"code tiles")
+
 
 def _unpack_tile(packed: jax.Array) -> jax.Array:
     """packed4 (bk/2, bn) uint8 tile → int8 (bk, bn) codes, in VMEM.
@@ -124,7 +143,7 @@ def mxint_lowrank_matmul_2d(
     m, k = x.shape
     n = codes.shape[1]
     mx_block = k // scale.shape[0]
-    assert bk % mx_block == 0, (bk, mx_block)
+    _check_tiles(m, k, n, bm, bk, bn, mx_block)
     rr = max(r.shape[0], 1)
     if r.shape[0] == 0:  # rank-0: keep the kernel uniform with a zero sliver
         xl = jnp.zeros((m, 1), x.dtype)
@@ -196,7 +215,7 @@ def mxint_lowrank_matmul_fused_2d(
     m, k = x.shape
     n = codes.shape[1]
     mx_block = k // scale.shape[0]
-    assert bk % mx_block == 0, (bk, mx_block)
+    _check_tiles(m, k, n, bm, bk, bn, mx_block)
     rr = max(r.shape[0], 1)
     if r.shape[0] == 0:
         l = jnp.zeros((k, 1), x.dtype)
@@ -261,7 +280,7 @@ def mxint_lowrank_matmul_batched_2d(
     g, m, k = x.shape
     _, _, n = codes.shape
     mx_block = k // scale.shape[1]
-    assert bk % mx_block == 0, (bk, mx_block)
+    _check_tiles(m, k, n, bm, bk, bn, mx_block)
     rr = max(r.shape[1], 1)
     if r.shape[1] == 0:
         xl = jnp.zeros((g, m, 1), x.dtype)

@@ -45,9 +45,14 @@ def mxint_quantize_2d(
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (codes int8 (M, N), exponents int8 (M/32, N)); caller
-    guarantees M % bm == N % bn == 0 and bm % mx_block == 0."""
+    pads so M % bm == N % bn == 0 and bm % mx_block == 0."""
     m, n = w.shape
     assert m % mx_block == 0 and bm % mx_block == 0
+    if m % bm or n % bn:
+        raise ValueError(
+            f"mxint_quantize_2d tiles must divide the problem: "
+            f"(M={m}, N={n}) vs (bm={bm}, bn={bn}) — pad first, or the "
+            f"grid would silently drop the tail")
     grid = (m // bm, n // bn)
     return pl.pallas_call(
         functools.partial(_kernel, bits=bits, mx_block=mx_block),

@@ -113,6 +113,19 @@ def main(argv=None):
     p.add_argument("--page-size", type=int, default=16,
                    help="logical KV slots per page (even; = flash-decode "
                         "kernel block in the paged path)")
+    p.add_argument("--n-pages", type=int, default=None,
+                   help="physical page-pool size (paged only; default "
+                        "sized so every slot can hold a full row plus "
+                        "prefix-cache headroom)")
+    p.add_argument("--compute-dtype", default="f32",
+                   choices=["f32", "bf16"],
+                   help="activation dtype for prefill/decode matmuls")
+    p.add_argument("--sanitize", action="store_true",
+                   help="audit serve-state invariants after every engine "
+                        "step (page refcount conservation, block-table "
+                        "validity, pos monotonicity, int4 nibble "
+                        "alignment); token-identical but host-syncing — "
+                        "a CI/debug mode, not a production default")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable radix-tree prefix reuse (paged only)")
     p.add_argument("--telemetry", action="store_true",
@@ -123,6 +136,10 @@ def main(argv=None):
                    help="write the final metrics snapshot as JSON to "
                         "PATH, plus the Prometheus text exposition to "
                         "PATH with a .prom extension")
+    p.add_argument("--tokens-json", metavar="PATH", default=None,
+                   help="write {uid: generated tokens} as JSON to PATH "
+                        "(CI token-parity assertions, e.g. --sanitize "
+                        "on/off must generate identical streams)")
     p.add_argument("--trace", metavar="PATH", default=None,
                    help="write the Chrome trace-event JSON (Perfetto-"
                         "loadable) to PATH, plus the JSONL event stream "
@@ -151,6 +168,8 @@ def main(argv=None):
         speculative=args.spec_k > 0,
         spec_k=args.spec_k if args.spec_k > 0 else 4,
         fused=args.fused, paged=args.paged, page_size=args.page_size,
+        n_pages=args.n_pages, compute_dtype=args.compute_dtype,
+        sanitize=args.sanitize,
         prefix_cache=not args.no_prefix_cache,
         telemetry=telemetry, trace_sync=args.trace_sync,
         profile_dir=args.profile_dir, profile_steps=args.profile_steps))
@@ -195,6 +214,12 @@ def main(argv=None):
     for r in results[:3]:
         print(f"  req {r.uid} [{r.finish_reason}]: "
               f"{r.tokens[:10].tolist()}")
+    if args.tokens_json:
+        with open(args.tokens_json, "w") as f:
+            json.dump({int(r.uid): [int(t) for t in r.tokens]
+                       for r in results}, f, sort_keys=True)
+            f.write("\n")
+        print(f"[serve] tokens -> {args.tokens_json}")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
             json.dump(eng.stats(), f, indent=2, sort_keys=True)

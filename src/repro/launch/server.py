@@ -40,7 +40,8 @@ def build_engine(args) -> Engine:
         speculative=args.spec_k > 0,
         spec_k=args.spec_k if args.spec_k > 0 else 4,
         max_pages_per_request=args.max_pages_per_request,
-        free_watermark=args.free_watermark, telemetry=args.telemetry))
+        free_watermark=args.free_watermark, telemetry=args.telemetry,
+        sanitize=args.sanitize))
     print("[server] warming up (prefill + decode compiles)...")
     eng.warmup()
     return eng
@@ -71,6 +72,10 @@ def main(argv=None):
     p.add_argument("--max-pages-per-request", type=int, default=None)
     p.add_argument("--free-watermark", type=float, default=0.0)
     p.add_argument("--telemetry", action="store_true")
+    p.add_argument("--sanitize", action="store_true",
+                   help="audit serve-state invariants after every step "
+                        "(see repro.serve.sanitizer); token-identical "
+                        "but host-syncing — smoke/debug use")
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=8000)
     p.add_argument("--model-id", default="repro-qlr")

@@ -5,6 +5,7 @@ from repro.serve.http import (EngineServer, encode_text, render_chat,
 from repro.serve.pages import PagedKVCache, PagePool, set_block_table_row
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.sampling import SamplingParams, lane_seed, sample_tokens
+from repro.serve.sanitizer import Sanitizer, SanitizerError
 from repro.serve.scheduler import (ContinuousScheduler, SchedulerStats,
                                    StepBudget)
 from repro.serve.slots import SlotKVCache, SlotState, SlotTable, write_slot
@@ -16,6 +17,7 @@ __all__ = [
     "ContinuousScheduler", "Engine", "EngineServer", "MetricsRegistry",
     "NULL_TELEMETRY", "NullTelemetry", "PagePool", "PagedKVCache",
     "RadixPrefixCache", "Request", "Result", "SamplingParams",
+    "Sanitizer", "SanitizerError",
     "SchedulerStats", "ServeConfig", "SlotKVCache", "SlotState",
     "SlotTable", "StepBudget", "Telemetry", "Tracer", "encode_text",
     "lane_seed", "latency_summary", "percentile", "render_chat",

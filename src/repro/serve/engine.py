@@ -72,10 +72,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.constraints import validate_page_size
 from repro.models import (Ctx, decode_step, init_cache, prefill,
                           prefill_chunk, verify_chunk)
 from repro.models.attention import absorb_mla_weights
 from repro.serve.pages import PagedKVCache, PagePool
+from repro.serve.sanitizer import Sanitizer
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.sampling import (TOP_LOGPROBS, SamplingParams, lane_seed,
                                   sample_tokens)
@@ -204,6 +206,11 @@ class ServeConfig:
     # chunk dispatch; token-identical to non-speculative decode
     spec_k: int = 4                  # tokens scored per verify chunk
     # (1 fed last-token + spec_k-1 drafts); >= 2
+    # --- runtime invariant sanitizer (serve.sanitizer) ---
+    sanitize: bool = False           # audit page refcounts, block
+    # tables, pos/slot_pos and int4 alignment after every step();
+    # read-only (token-identical) but host-syncing — CI smokes and
+    # debugging, not production
 
 
 @dataclasses.dataclass
@@ -464,6 +471,16 @@ class Engine:
         # chunk starts are page-aligned (matched prefixes are whole
         # pages), so int4 nibble pairs always land whole
         self.page_size = sc.page_size + sc.page_size % 2
+        if sc.paged:
+            # construction-time layout check against the shared kernel
+            # constraints — a clear error here instead of a Mosaic
+            # lowering failure on the first compiled dispatch. Strict
+            # (sublane-tile) floors only bind where the kernels compile
+            # for real hardware; interpret-mode CPU runs take any even
+            # size.
+            validate_page_size(self.page_size,
+                               packed=sc.kv_dtype == "int4",
+                               strict=jax.default_backend() == "tpu")
         self._chunk_len = self.prefill_len + self.prefill_len % 2 \
             if sc.paged else self.prefill_len
 
@@ -523,6 +540,11 @@ class Engine:
         self.on_token: Optional[Callable[[int, int, Optional[Dict]],
                                          None]] = None
         self._bucket_stats = SchedulerStats(n_slots=sc.decode_batch)
+        if sc.sanitize and sc.scheduler != "continuous":
+            raise ValueError("sanitize=True audits the continuous "
+                             "engine's slot/page state — it needs "
+                             "scheduler='continuous'")
+        self._san = Sanitizer() if sc.sanitize else None
         if sc.scheduler == "continuous":
             self._reset_continuous()
 
@@ -1003,6 +1025,7 @@ class Engine:
             decoding = self.sched.table.active_slots()
         if not decoding:
             tel.step_end(0)
+            self._sanitize()
             return finished
 
         k_round = (self._spec_k_for(decoding, budget)
@@ -1011,6 +1034,7 @@ class Engine:
             finished.extend(self._spec_round(decoding, k_round))
             self.sched.note_decode_step(len(decoding))
             tel.step_end(len(decoding))
+            self._sanitize()
             return finished
 
         with tel.phase("decode"), tel.entry("decode", self._tok.shape):
@@ -1034,7 +1058,16 @@ class Engine:
             if self._record(slot, toks[slot], info):
                 finished.append(self._finish(slot))
         tel.step_end(len(decoding))
+        self._sanitize()
         return finished
+
+    def _sanitize(self) -> None:
+        """Post-step invariant audit (``ServeConfig(sanitize=True)``):
+        raises :class:`~repro.serve.sanitizer.SanitizerError` when the
+        host bookkeeping and device state disagree. Read-only — a
+        sanitized engine emits exactly the tokens a bare one does."""
+        if self._san is not None:
+            self._san.check(self)
 
     # ------------------------------------------------------------------
     # Self-speculative decoding: Q-only draft, full Q+LR verify
@@ -1171,12 +1204,16 @@ class Engine:
                 if self._record(s, int(tgt[j]), info):
                     done = True
                     break
-            mask[s] = True
-            newpos[s] = p0[s] + rec
             if rec:
                 tok_host[s, 0] = int(tgt[rec - 1])
             if done:
+                # _finish re-parks the row at pos 0 — keep the lane out
+                # of the rewind so the reset sticks instead of being
+                # overwritten with the stale frontier
                 results.append(self._finish(s))
+            else:
+                mask[s] = True
+                newpos[s] = p0[s] + rec
         with tel.phase("verify"):
             self._tok = jnp.asarray(tok_host)
             self.slots.cache = self._rewind(

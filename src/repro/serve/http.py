@@ -85,6 +85,21 @@ def render_chat(messages: List[Dict[str, str]], vocab: int) -> np.ndarray:
 # ==========================================================================
 # Engine pump: one thread steps the engine, fans tokens to streams
 # ==========================================================================
+
+# The Engine methods that mutate engine/scheduler state (or publish into
+# the shared metrics registry) and therefore may only be called while
+# holding ``EngineServer.cv``. This registry is the thread-safety
+# contract: the lock-discipline pass in tools/analysis proves every
+# ``.engine.<name>`` call in this module for a name listed here happens
+# under ``with self.cv:`` (or in ``__init__``, before the pump thread
+# exists). Adding an engine call to a handler without the lock is a CI
+# failure, not a code-review hope.
+ENGINE_MUTATORS = frozenset({
+    "submit", "abort", "step", "drain", "generate", "warmup",
+    "stats", "prometheus", "write_trace",
+})
+
+
 class EngineServer:
     """Thread-safe bridge between HTTP handler threads and one Engine.
 

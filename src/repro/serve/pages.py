@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.constraints import validate_page_size
 from repro.models import init_cache
 from repro.serve.slots import KV_DTYPES
 
@@ -68,10 +69,9 @@ class PagePool:
     """
 
     def __init__(self, n_pages: int, page_size: int):
-        if page_size % 2:
-            raise ValueError(
-                f"page_size={page_size} must be even: int4 packs two slots "
-                f"per byte and a nibble pair must not straddle a page")
+        # nibble-pair alignment only — the pool is storage-agnostic;
+        # the engine enforces the backend-dependent sublane-tile floor
+        validate_page_size(page_size)
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: collections.deque = collections.deque(range(n_pages))

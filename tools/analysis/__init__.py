@@ -1,0 +1,12 @@
+"""repro-lint: dependency-free AST static analysis for the repro stack.
+
+    python -m tools.analysis.run src/ tests/ benchmarks/
+
+Four passes (see the sibling modules), each emitting
+``file:line CODE message`` findings that are diffed against the
+checked-in ``tools/analysis/baseline.txt`` — CI fails only on *new*
+violations. The runtime twin is ``repro.serve.sanitizer``
+(``--sanitize``), which checks at serve time the invariants these
+passes prove conventions for statically.
+"""
+from tools.analysis.core import Finding, load_baseline  # noqa: F401

@@ -1,0 +1,166 @@
+"""api-drift: keep the public surfaces that cannot be type-checked in
+sync — telemetry names vs their JSON schema, ServeConfig fields vs CLI
+flags and README docs.
+
+Codes:
+  API001  a metric name registered in ``src/`` (``.counter/.gauge/
+          .histogram`` first argument) that matches nothing in
+          ``tools/metrics_schema.json``. f-string names are expanded to
+          patterns, so ``f"step_{p}_seconds"`` covers the whole phase
+          family.
+  API002  a ``metrics_schema.json`` property no source registration can
+          produce — a dead schema entry.
+  API003  a ``ServeConfig`` field that no ``src/repro/launch`` CLI
+          plumbs (never passed as a keyword to a ServeConfig(...) call
+          there).
+  API004  a ``ServeConfig`` field undocumented in README.md.
+
+The pass is repo-shaped: it activates only when the scanned set
+includes modules under ``src/`` and the schema / README exist at the
+analysis root.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.core import (Context, Finding, Module, dotted,
+                                 make_finding, qualname)
+
+_REGISTER = {"counter", "gauge", "histogram"}
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    schema_path = os.path.join(ctx.root, "tools", "metrics_schema.json")
+    src_mods = [m for m in ctx.modules if m.path.startswith("src/")]
+    if src_mods and os.path.exists(schema_path):
+        out.extend(check_metrics(src_mods, schema_path))
+    engine = ctx.module("serve/engine.py")
+    if engine is not None:
+        launch = [m for m in ctx.modules if "/launch/" in f"/{m.path}"]
+        readme = os.path.join(ctx.root, "README.md")
+        out.extend(check_serve_config(engine, launch,
+                                      readme if os.path.exists(readme)
+                                      else None))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# telemetry registry <-> tools/metrics_schema.json
+
+
+def _metric_names(mods: List[Module]) -> List[Tuple[Module, int, str,
+                                                    Optional[str]]]:
+    """(module, line, display, regex) per registration; regex is None
+    for literal names."""
+    found = []
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _REGISTER and node.args):
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                found.append((mod, node.lineno, arg.value, None))
+            elif isinstance(arg, ast.JoinedStr):
+                pat, disp = "", ""
+                for part in arg.values:
+                    if isinstance(part, ast.Constant):
+                        pat += re.escape(str(part.value))
+                        disp += str(part.value)
+                    else:
+                        pat += r"[A-Za-z0-9_]+"
+                        disp += "{*}"
+                found.append((mod, node.lineno, disp, f"^{pat}$"))
+            # computed names (variables) are invisible to this pass;
+            # the schema's additionalProperties covers them at runtime
+    return found
+
+
+def check_metrics(mods: List[Module], schema_path: str) -> List[Finding]:
+    with open(schema_path, encoding="utf-8") as fh:
+        schema = json.load(fh)
+    keys: Set[str] = set(schema.get("properties", {}))
+    names = _metric_names(mods)
+    out: List[Finding] = []
+    covered: Set[str] = set()
+    for mod, line, disp, pat in names:
+        if pat is None:
+            if disp in keys:
+                covered.add(disp)
+            else:
+                out.append(make_finding(
+                    mod.path, line, "API001",
+                    f"metric '{disp}' is registered but missing from "
+                    f"tools/metrics_schema.json properties", "metrics",
+                    disp))
+        else:
+            hits = {k for k in keys if re.match(pat, k)}
+            if hits:
+                covered |= hits
+            else:
+                out.append(make_finding(
+                    mod.path, line, "API001",
+                    f"metric family '{disp}' matches no "
+                    f"tools/metrics_schema.json property", "metrics", disp))
+    rel = "tools/metrics_schema.json"
+    for key in sorted(keys - covered):
+        out.append(make_finding(
+            rel, 1, "API002",
+            f"schema property '{key}' has no registration site in src/ "
+            f"(dead schema entry, or the registration uses a computed "
+            f"name — rename one side)", "schema", key))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# ServeConfig <-> CLI flags <-> README
+
+
+def _serve_config_fields(engine: Module) -> Dict[str, int]:
+    for node in ast.walk(engine.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "ServeConfig":
+            return {s.target.id: s.lineno for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)}
+    return {}
+
+
+def _plumbed_fields(launch: List[Module]) -> Set[str]:
+    plumbed: Set[str] = set()
+    for mod in launch:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted(node.func).endswith("ServeConfig"):
+                plumbed |= {kw.arg for kw in node.keywords if kw.arg}
+    return plumbed
+
+
+def check_serve_config(engine: Module, launch: List[Module],
+                       readme: Optional[str]) -> List[Finding]:
+    fields = _serve_config_fields(engine)
+    out: List[Finding] = []
+    if launch:
+        plumbed = _plumbed_fields(launch)
+        for name, line in sorted(fields.items()):
+            if name not in plumbed:
+                out.append(make_finding(
+                    engine.path, line, "API003",
+                    f"ServeConfig.{name} is not plumbed by any launch CLI "
+                    f"(no ServeConfig({name}=...) under src/repro/launch/)",
+                    "ServeConfig", name))
+    if readme is not None:
+        with open(readme, encoding="utf-8") as fh:
+            text = fh.read()
+        for name, line in sorted(fields.items()):
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                out.append(make_finding(
+                    engine.path, line, "API004",
+                    f"ServeConfig.{name} is undocumented in README.md",
+                    "ServeConfig", name))
+    return out

@@ -1,0 +1,235 @@
+"""Shared plumbing for the repro-lint passes.
+
+A pass is a module exposing ``run(ctx) -> List[Finding]``. Findings
+carry a *stable key* that deliberately excludes the line number, so a
+baseline entry survives unrelated edits to the file; the printed form
+(``file:line CODE message``) is for humans and CI logs only.
+
+Baseline format (``tools/analysis/baseline.txt``): one finding key per
+line, followed by ``  # justification``. Unjustified entries are
+rejected — a suppression must say *why* the finding is intentional.
+Blank lines and lines starting with ``#`` are comments.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import importlib.util
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# ----------------------------------------------------------------------------
+# findings
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit.
+
+    ``key`` is the baseline identity: ``CODE path:scope:detail`` with no
+    line number, so renumbering a file does not churn the baseline.
+    """
+    path: str           # repo-relative, forward slashes
+    line: int
+    code: str           # e.g. PAL001
+    message: str
+    key: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.code} {self.message}"
+
+
+def make_finding(path: str, line: int, code: str, message: str,
+                 scope: str, detail: str) -> Finding:
+    key = f"{code} {path}:{scope}:{detail}"
+    return Finding(path=path, line=line, code=code, message=message, key=key)
+
+
+# ----------------------------------------------------------------------------
+# baseline
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """Return {finding key: justification}. Every entry must carry a
+    ``# why`` justification — raise :class:`BaselineError` otherwise."""
+    entries: Dict[str, str] = {}
+    if not os.path.exists(path):
+        return entries
+    with open(path, encoding="utf-8") as fh:
+        for n, raw in enumerate(fh, 1):
+            line = raw.rstrip("\n")
+            if not line.strip() or line.lstrip().startswith("#"):
+                continue
+            key, sep, why = line.partition("  # ")
+            key, why = key.strip(), why.strip()
+            if not sep or not why:
+                raise BaselineError(
+                    f"{path}:{n}: baseline entry lacks a justification "
+                    f"('<key>  # why it is intentional'): {line!r}")
+            if key in entries:
+                raise BaselineError(f"{path}:{n}: duplicate key {key!r}")
+            entries[key] = why
+    return entries
+
+
+def save_baseline(path: str, findings: Iterable[Finding],
+                  old: Dict[str, str]) -> None:
+    """Write the current findings as the new baseline, keeping existing
+    justifications and stamping new entries with a TODO marker."""
+    lines = ["# repro-lint baseline: one suppressed finding per line,",
+             "# '<key>  # justification'. Regenerate entries with",
+             "#   python -m tools.analysis.run --update-baseline <paths>",
+             "# then replace every TODO with a real justification.", ""]
+    for f in sorted(set(fd.key for fd in findings)):
+        why = old.get(f, "TODO: justify or fix")
+        lines.append(f"{f}  # {why}")
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+# ----------------------------------------------------------------------------
+# file walking / parsing
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+    return sorted(set(os.path.normpath(p) for p in out))
+
+
+@dataclasses.dataclass
+class Module:
+    path: str            # repo-relative with forward slashes
+    source: str
+    tree: ast.Module
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a pass needs: parsed modules plus repo-level config."""
+    modules: List[Module]
+    root: str                       # directory findings are relative to
+    constraints: "KernelConstraints"
+
+    def module(self, suffix: str) -> Optional[Module]:
+        for m in self.modules:
+            if m.path.endswith(suffix):
+                return m
+        return None
+
+
+def parse_modules(files: Iterable[str], root: str) -> Tuple[List[Module],
+                                                            List[Finding]]:
+    mods: List[Module] = []
+    errors: List[Finding] = []
+    for f in files:
+        rel = os.path.relpath(f, root).replace(os.sep, "/")
+        try:
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            tree = ast.parse(src, filename=f)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 1) or 1
+            errors.append(make_finding(rel, line, "GEN000",
+                                       f"unparseable module: {e}",
+                                       "<module>", "parse"))
+            continue
+        attach_parents(tree)
+        mods.append(Module(path=rel, source=src, tree=tree))
+    return mods, errors
+
+
+def attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+
+
+def parents(node: ast.AST) -> Iterable[ast.AST]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_parent", None)
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    for p in parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return None
+
+
+def qualname(node: ast.AST) -> str:
+    """Dotted path of the enclosing defs/classes, '<module>' at top."""
+    names = []
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            names.append(cur.name)
+        cur = getattr(cur, "_parent", None)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def call_name(node: ast.Call) -> str:
+    """Trailing name of the callee: jnp.zeros -> 'zeros', foo -> 'foo'."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted rendering of a Name/Attribute chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+# ----------------------------------------------------------------------------
+# kernel constraints (shared with the kernels themselves)
+
+
+@dataclasses.dataclass
+class KernelConstraints:
+    min_sublane_tile: int = 32
+    min_sublane_tile_packed4: int = 64
+    packed4_slot_align: int = 2
+    vmem_budget_bytes: int = 4 * 1024 * 1024
+
+
+def load_constraints(root: str) -> KernelConstraints:
+    """Import ``src/repro/kernels/constraints.py`` by path so analyzer
+    and kernels agree on one set of numbers; fall back to the packaged
+    defaults when analyzing a tree that does not contain it."""
+    path = os.path.join(root, "src", "repro", "kernels", "constraints.py")
+    kc = KernelConstraints()
+    if not os.path.exists(path):
+        return kc
+    spec = importlib.util.spec_from_file_location("_repro_constraints", path)
+    if spec is None or spec.loader is None:     # pragma: no cover
+        return kc
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return KernelConstraints(
+        min_sublane_tile=mod.MIN_SUBLANE_TILE,
+        min_sublane_tile_packed4=mod.MIN_SUBLANE_TILE_PACKED4,
+        packed4_slot_align=mod.PACKED4_SLOT_ALIGN,
+        vmem_budget_bytes=mod.VMEM_BUDGET_BYTES)

@@ -1,0 +1,37 @@
+"""Known-bad jit-hygiene fixture: every finding here is expected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode(cache, x, flag):
+    # JIT001: `flag` is traced (not static) — Python branch on it
+    if flag:
+        x = x * 2
+    # JIT002: .item() host sync inside a jit-rooted call chain
+    peek = x[0].item()
+    # JIT003: fresh jax.jit per call
+    inner = jax.jit(lambda v: v + peek)
+    return inner(x), cache
+
+
+# JIT004: cache threaded without donate_argnums
+decode = jax.jit(_decode)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def windowed(x, sizes):
+    return x
+
+
+def caller(x):
+    y, _ = _decode({}, x, True)
+    # JIT002: device_get in the step path
+    host = np.asarray(jax.device_get(y))
+    # JIT003: unhashable list literal at a static position
+    return windowed(jnp.asarray(host), [1, 2, 3])
+
+
+run = jax.jit(caller)       # makes caller an analysis entry point

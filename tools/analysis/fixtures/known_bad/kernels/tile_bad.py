@@ -1,0 +1,9 @@
+"""Known-bad PAL004 fixture: bare tile-floor literals in kernels code."""
+
+
+def check_block(bs: int, packed: bool) -> None:
+    # PAL004: the 32/64 sublane floors must come from kernels.constraints
+    if packed and bs < 64:
+        raise ValueError("packed4 block too small")
+    if not packed and bs < 32:
+        raise ValueError("block too small")

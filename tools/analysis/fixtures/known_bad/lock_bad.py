@@ -1,0 +1,30 @@
+"""Known-bad lock-discipline fixture: every finding here is expected."""
+import threading
+from http.server import BaseHTTPRequestHandler
+
+ENGINE_MUTATORS = frozenset({"submit", "abort", "step", "stats"})
+
+
+class Server:
+    def __init__(self, engine):
+        self.engine = engine
+        self.cv = threading.Condition()
+
+    def pump(self):
+        # LCK001: mutator call without holding cv
+        self.engine.step()
+
+    def submit(self, req):
+        with self.cv:
+            self.engine.submit(req)      # correctly locked
+
+    def stats_unlocked(self):
+        eng = self.engine
+        # LCK001: alias does not launder the missing lock
+        return eng.stats()
+
+
+class Handler(BaseHTTPRequestHandler):
+    def do_POST(self):
+        # LCK002: handlers must not reach mutators directly
+        self.server.owner.engine.abort(1)

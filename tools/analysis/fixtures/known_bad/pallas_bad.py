@@ -1,0 +1,54 @@
+"""Known-bad pallas-contract fixture: every finding here is expected.
+
+Never imported — the analyzer parses it; CI asserts repro-lint fails
+on this directory.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def unguarded_grid(x, bs=128):
+    s = x.shape[0]
+    # PAL001: s // bs with no divisibility guard — tail silently dropped
+    return pl.pallas_call(
+        _kernel,
+        grid=(s // bs,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def array_in_index_map(x, table, bs=128):
+    n = x.shape[0] // bs
+    if x.shape[0] % bs:
+        raise ValueError("pad first")
+    # PAL002: offsets is a device array; the index map must depend only
+    # on grid indices and prefetched scalars
+    offsets = jnp.cumsum(table)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (offsets[i],))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def vmem_hog(x):
+    n = x.shape[0] // 4096
+    if x.shape[0] % 4096:
+        raise ValueError("pad first")
+    # PAL003: a (4096, 4096) f32 block is 64 MiB of VMEM
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((4096, 4096), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 4096), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

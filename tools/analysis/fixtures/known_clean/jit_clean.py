@@ -1,0 +1,36 @@
+"""Known-clean jit-hygiene fixture: zero findings expected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode(cache, x, *, want_extra: bool):
+    # keyword-only params are partial-bound statics — branching is fine
+    if want_extra:
+        x = x + 1
+    # shape/ndim reads never touch traced values
+    if x.ndim == 2:
+        x = x[None]
+    return x, cache
+
+
+decode = jax.jit(_decode, static_argnums=(2,),
+                 donate_argnums=(0,))
+
+
+def collect(results):
+    # np.asarray over a host list is not a device sync
+    return np.asarray([r for r in results], np.int32)
+
+
+def fenced(tel, tok):
+    with tel.phase("transfer"):
+        return jnp.asarray(jax.device_get(tok))
+
+
+def guarded_fence(tel, tok):
+    if tel.sync:
+        jax.block_until_ready(tok)
+    return tok

@@ -1,0 +1,23 @@
+"""Known-clean lock-discipline fixture: zero findings expected."""
+import threading
+
+ENGINE_MUTATORS = frozenset({"submit", "abort", "step", "stats"})
+
+
+class Server:
+    def __init__(self, engine):
+        self.engine = engine
+        self.cv = threading.Condition()
+        engine.submit(None)              # __init__ runs pre-thread
+
+    def pump(self):
+        with self.cv:
+            self.engine.step()
+
+    def submit(self, req):
+        with self.cv:
+            self.engine.submit(req)
+
+    def peek(self):
+        # non-mutator reads are free
+        return self.engine.cfg

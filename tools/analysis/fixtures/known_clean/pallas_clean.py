@@ -1,0 +1,46 @@
+"""Known-clean pallas-contract fixture: zero findings expected."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def guarded_grid(x, bs=128):
+    s = x.shape[0]
+    if s % bs:
+        raise ValueError("pad to a block multiple first")
+    return pl.pallas_call(
+        _kernel,
+        grid=(s // bs,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def ceil_div_grid(x, bs=128):
+    # -(-s // bs) never drops a tail; no guard needed
+    return pl.pallas_call(
+        _kernel,
+        grid=(-(-x.shape[0] // bs),),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def scalar_closure(x, bs=128, heads=4):
+    s = x.shape[0]
+    if s % bs:
+        raise ValueError("pad to a block multiple first")
+    hd = x.shape[1] // heads
+    # closing over python scalars (bs, hd) is the supported pattern
+    return pl.pallas_call(
+        _kernel,
+        grid=(s // bs, heads),
+        in_specs=[pl.BlockSpec((bs, hd), lambda i, h: (i, h))],
+        out_specs=pl.BlockSpec((bs, hd), lambda i, h: (i, h)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

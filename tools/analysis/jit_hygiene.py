@@ -1,0 +1,389 @@
+"""jit-hygiene: tracing / host-sync / recompile checks.
+
+Codes:
+  JIT001  a Python ``if``/``while`` on a value that is traced inside a
+          jitted function (a non-static parameter used directly in the
+          test) — the branch freezes at trace time or raises a
+          ConcretizationTypeError.
+  JIT002  a host synchronisation (``jax.device_get``,
+          ``jax.block_until_ready``, ``.item()``, ``np.asarray`` on
+          device values) inside a function reachable from
+          ``Engine.step()``, outside the documented fence contexts
+          (``with tel.phase("transfer")`` or an ``if ...sync:`` guard).
+  JIT003  recompile churn: ``jax.jit`` invoked inside a step-reachable
+          function (a fresh compiled callable per call), or an
+          unhashable literal (list/dict/set) passed at a known static
+          position of a jitted closure.
+  JIT004  a jitted function threading a KV cache (a parameter named
+          ``cache``/``*_cache``) without ``donate_argnums`` — every
+          decode step copies the whole cache.
+
+Reachability: roots are ``Engine.step`` plus (for fixture/library
+modules with no Engine) every jit-wrapped function; edges follow simple
+callee names across all scanned modules, an over-approximation that is
+cheap and safe.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.core import (Context, Finding, call_name, dotted,
+                                 enclosing_function, make_finding, parents,
+                                 qualname)
+
+_SYNC_CALLS = {"device_get", "block_until_ready"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_EXEMPT_CALLS = {"isinstance", "hasattr", "callable", "len", "getattr",
+                 "issubclass"}
+
+
+def run(ctx: Context) -> List[Finding]:
+    jits = _collect_jits(ctx)
+    reachable = _reachable(ctx, jits)
+    out: List[Finding] = []
+    out.extend(_check_traced_branches(ctx, jits))
+    out.extend(_check_host_syncs(ctx, reachable))
+    out.extend(_check_recompiles(ctx, jits, reachable))
+    out.extend(_check_donation(ctx, jits))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# jit call-site discovery
+
+
+class Jit:
+    def __init__(self, mod, call: ast.Call, target: Optional[ast.FunctionDef],
+                 static_pos: Set[int], static_names: Set[str],
+                 bound_attr: Optional[str], donated: bool,
+                 decorator: bool = False):
+        self.mod = mod
+        self.call = call
+        self.target = target            # resolved wrapped FunctionDef
+        self.static_pos = static_pos
+        self.static_names = static_names
+        self.bound_attr = bound_attr    # 'self._decode = jax.jit(...)'
+        self.donated = donated
+        self.decorator = decorator      # @jax.jit — compiled once at import
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    d = dotted(node.func)
+    return d.endswith("jax.jit") or d == "jit"
+
+
+def _literal_ints(node: ast.expr) -> Set[int]:
+    out: Set[int] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, int) \
+                and not isinstance(sub.value, bool):
+            out.add(sub.value)
+    return out
+
+
+def _literal_strs(node: ast.expr) -> Set[str]:
+    return {s.value for s in ast.walk(node)
+            if isinstance(s, ast.Constant) and isinstance(s.value, str)}
+
+
+def _collect_jits(ctx: Context) -> List[Jit]:
+    jits: List[Jit] = []
+    for mod in ctx.modules:
+        if "jit" not in mod.source:
+            continue
+        local_funcs = {n.name: n for n in ast.walk(mod.tree)
+                       if isinstance(n, ast.FunctionDef)}
+        for node in ast.walk(mod.tree):
+            call, target, deco_target = None, None, None
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                call = node
+            elif isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and (
+                            _is_jit_call(dec)
+                            or (dotted(dec.func).endswith("partial")
+                                and dec.args
+                                and dotted(dec.args[0]).endswith("jit"))):
+                        call, deco_target = dec, node
+                    elif dotted(dec).endswith("jit"):
+                        jits.append(Jit(mod, ast.Call(func=dec, args=[],
+                                                      keywords=[]),
+                                        node, set(), set(), None, False,
+                                        decorator=True))
+            if call is None:
+                continue
+            static_pos: Set[int] = set()
+            static_names: Set[str] = set()
+            donated = False
+            for kw in call.keywords:
+                if kw.arg in ("static_argnums", "static_argnames"):
+                    static_pos |= _literal_ints(kw.value)
+                    static_names |= _literal_strs(kw.value)
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    donated = True
+            if deco_target is not None:
+                target = deco_target
+            else:
+                wrapped = None
+                args = [a for a in call.args
+                        if not dotted(a).endswith("jit")]
+                if args:
+                    wrapped = args[0]
+                if isinstance(wrapped, ast.Name):
+                    target = local_funcs.get(wrapped.id)
+            bound = None
+            for p in parents(call):
+                if isinstance(p, ast.Assign) and p.value is call \
+                        and len(p.targets) == 1 \
+                        and isinstance(p.targets[0], ast.Attribute):
+                    bound = p.targets[0].attr
+                break
+            jits.append(Jit(mod, call, target, static_pos, static_names,
+                            bound, donated, decorator=deco_target is not None))
+    return jits
+
+
+# ----------------------------------------------------------------------------
+# reachability from Engine.step()
+
+
+def _func_index(ctx: Context) -> Dict[str, List[Tuple[object,
+                                                      ast.FunctionDef]]]:
+    idx: Dict[str, List[Tuple[object, ast.FunctionDef]]] = {}
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FunctionDef):
+                idx.setdefault(node.name, []).append((mod, node))
+    return idx
+
+
+def _reachable(ctx: Context, jits: List[Jit]) -> Set[ast.FunctionDef]:
+    idx = _func_index(ctx)
+    roots: List[ast.FunctionDef] = []
+    for mod, fn in idx.get("step", []):
+        if "Engine" in qualname(fn):
+            roots.append(fn)
+    if not roots:
+        # library/fixture mode: jit targets are the entry points
+        roots = [j.target for j in jits if j.target is not None]
+    seen: Set[ast.FunctionDef] = set()
+    work = list(roots)
+    while work:
+        fn = work.pop()
+        if fn in seen:
+            continue
+        seen.add(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                for _, callee in idx.get(call_name(node), []):
+                    if callee not in seen:
+                        work.append(callee)
+    return seen
+
+
+# ----------------------------------------------------------------------------
+# JIT001: python control flow on traced values
+
+
+def _static_params(jit: Jit) -> Set[str]:
+    fn = jit.target
+    assert fn is not None
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    static = {params[i] for i in jit.static_pos if i < len(params)}
+    static |= jit.static_names & set(params)
+    static |= {a.arg for a in fn.args.kwonlyargs}   # bound via partial
+    return static
+
+
+def _test_exempt_names(test: ast.expr) -> Set[str]:
+    """Names whose use inside the test cannot touch traced values:
+    isinstance/hasattr/len-style calls, ``x is None``, ``k in d``,
+    ``a.shape``-style attribute reads."""
+    exempt: Set[str] = set()
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Call) and call_name(sub) in _EXEMPT_CALLS:
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Name):
+                    exempt.add(n.id)
+        elif isinstance(sub, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                for op in sub.ops):
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Name):
+                    exempt.add(n.id)
+        elif isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_ATTRS:
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Name):
+                    exempt.add(n.id)
+    return exempt
+
+
+def _check_traced_branches(ctx: Context, jits: List[Jit]) -> List[Finding]:
+    out: List[Finding] = []
+    seen: Set[Tuple[str, str, str]] = set()
+    for jit in jits:
+        if jit.target is None:
+            continue
+        fn = jit.target
+        static = _static_params(jit)
+        traced = {a.arg for a in fn.args.posonlyargs + fn.args.args} - static
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            names = {n.id for n in ast.walk(node.test)
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)}
+            hot = (names & traced) - _test_exempt_names(node.test)
+            for name in sorted(hot):
+                key = (jit.mod.path, fn.name, name)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(make_finding(
+                    jit.mod.path, node.lineno, "JIT001",
+                    f"Python {'while' if isinstance(node, ast.While) else 'if'}"
+                    f" on '{name}' inside jitted {fn.name}: the value is "
+                    f"traced (not in static_argnums) so the branch freezes "
+                    f"at trace time or raises ConcretizationTypeError",
+                    fn.name, name))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# JIT002: host syncs reachable from step()
+
+
+def _fenced(node: ast.AST) -> bool:
+    """Inside `with ...phase("transfer"):` or an `if ...sync:` guard —
+    the two documented places the engine is allowed to block on device
+    work."""
+    for p in parents(node):
+        if isinstance(p, ast.With):
+            for item in p.items:
+                c = item.context_expr
+                if isinstance(c, ast.Call) and call_name(c) == "phase" \
+                        and c.args \
+                        and isinstance(c.args[0], ast.Constant) \
+                        and c.args[0].value == "transfer":
+                    return True
+        if isinstance(p, ast.If):
+            if any(isinstance(s, ast.Attribute) and s.attr == "sync"
+                   for s in ast.walk(p.test)):
+                return True
+    return False
+
+
+def _check_host_syncs(ctx: Context,
+                      reachable: Set[ast.FunctionDef]) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = enclosing_function(node)
+            if fn is None or fn not in reachable:
+                continue
+            name = call_name(node)
+            sync = None
+            if name in _SYNC_CALLS and dotted(node.func).startswith(
+                    ("jax.", "block_until_ready", "device_get")):
+                sync = dotted(node.func)
+            elif name == "item" and isinstance(node.func, ast.Attribute) \
+                    and not node.args:
+                sync = ".item()"
+            elif name in ("asarray", "array") \
+                    and dotted(node.func).split(".")[0] in ("np", "numpy") \
+                    and node.args \
+                    and not (isinstance(node.args[0], ast.Call)
+                             and call_name(node.args[0]) in _SYNC_CALLS) \
+                    and not isinstance(node.args[0],
+                                       (ast.List, ast.Tuple, ast.Dict,
+                                        ast.Constant, ast.ListComp,
+                                        ast.GeneratorExp)):
+                sync = dotted(node.func)
+            if sync is None or _fenced(node):
+                continue
+            out.append(make_finding(
+                mod.path, node.lineno, "JIT002",
+                f"host sync {sync} in {qualname(node)} (reachable from "
+                f"Engine.step); move it under tel.phase(\"transfer\") or "
+                f"an explicit ...sync fence so the step loop never blocks "
+                f"silently", qualname(node), sync))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# JIT003: recompile churn
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+def _check_recompiles(ctx: Context, jits: List[Jit],
+                      reachable: Set[ast.FunctionDef]) -> List[Finding]:
+    out: List[Finding] = []
+    for jit in jits:
+        if jit.decorator:       # @jax.jit compiles once at import time
+            continue
+        fn = enclosing_function(jit.call)
+        if fn is not None and fn in reachable and fn.name != "__init__":
+            out.append(make_finding(
+                jit.mod.path, jit.call.lineno, "JIT003",
+                f"jax.jit called inside step-reachable {qualname(jit.call)}: "
+                f"this builds a fresh compiled callable every call; hoist "
+                f"the jit to __init__ or module scope", qualname(jit.call),
+                "fresh-jit"))
+    # unhashable literals at known static positions of jitted callables:
+    # 'self._decode = jax.jit(...)' attr closures and decorator-jitted
+    # module functions called by name
+    bound = {j.bound_attr: j for j in jits if j.bound_attr}
+    by_name = {j.target.name: j for j in jits
+               if j.decorator and j.target is not None}
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute):
+                jit = bound.get(node.func.attr)
+            elif isinstance(node.func, ast.Name):
+                jit = by_name.get(node.func.id)
+            else:
+                continue
+            if jit is None:
+                continue
+            callee = dotted(node.func)
+            for i in jit.static_pos:
+                if i < len(node.args) \
+                        and isinstance(node.args[i], _UNHASHABLE):
+                    out.append(make_finding(
+                        mod.path, node.lineno, "JIT003",
+                        f"unhashable literal at static arg {i} of "
+                        f"{callee} in {qualname(node)}: every "
+                        f"call re-traces; pass a tuple or a hashable "
+                        f"scalar", qualname(node),
+                        f"{callee}:static{i}"))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# JIT004: cache threaded without donation
+
+
+def _check_donation(ctx: Context, jits: List[Jit]) -> List[Finding]:
+    out: List[Finding] = []
+    for jit in jits:
+        if jit.target is None or jit.donated:
+            continue
+        cache_params = [a.arg for a in jit.target.args.args
+                        if a.arg == "cache" or a.arg.endswith("_cache")]
+        if not cache_params:
+            continue
+        label = jit.bound_attr or jit.target.name
+        out.append(make_finding(
+            jit.mod.path, jit.call.lineno, "JIT004",
+            f"jit of {jit.target.name} threads '{cache_params[0]}' without "
+            f"donate_argnums: each dispatch copies the KV buffers instead "
+            f"of updating them in place", label, jit.target.name))
+    return out

@@ -1,0 +1,136 @@
+"""lock-discipline: convention-driven thread-safety for the serve layer.
+
+The contract (see ``serve/http.py``): one pump thread drives
+``Engine.step()``; HTTP handler threads may touch the engine only for
+the methods named in the module-level ``ENGINE_MUTATORS`` registry, and
+only while holding ``EngineServer.cv``. This pass *proves* the module
+follows the contract lexically:
+
+  LCK000  a serve ``http.py`` module with no ``ENGINE_MUTATORS``
+          registry — the contract itself is missing.
+  LCK001  a registered mutator invoked through ``.engine`` (or a local
+          alias of it) outside a ``with ...cv:`` block and outside
+          ``__init__`` — an unlocked engine mutation.
+  LCK002  a request-handler class (``BaseHTTPRequestHandler``
+          subclass) reaching a mutator directly — handlers must go
+          through the EngineServer wrappers, which take the lock.
+
+Reads of non-registered attributes (``engine.cfg``, ``engine.sched``)
+are allowed anywhere; the registry is the single place that decides
+what counts as a mutation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from tools.analysis.core import (Context, Finding, dotted, make_finding,
+                                 parents, qualname)
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in ctx.modules:
+        registry = _registry(mod.tree)
+        if registry is None:
+            if mod.path.endswith("serve/http.py"):
+                out.append(make_finding(
+                    mod.path, 1, "LCK000",
+                    "no ENGINE_MUTATORS registry: declare the engine "
+                    "methods that require EngineServer.cv in one "
+                    "module-level frozenset", "<module>", "registry"))
+            continue
+        out.extend(_check_module(mod, registry))
+    return out
+
+
+def _registry(tree: ast.Module) -> Optional[Set[str]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "ENGINE_MUTATORS":
+            return {c.value for c in ast.walk(node.value)
+                    if isinstance(c, ast.Constant)
+                    and isinstance(c.value, str)}
+    return None
+
+
+def _engine_aliases(fn: ast.AST) -> Set[str]:
+    """Local names bound to an engine reference: ``eng = self.engine``."""
+    aliases: Set[str] = {"engine"}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and dotted(node.value).endswith(".engine"):
+            aliases.add(node.targets[0].id)
+    return aliases
+
+
+def _under_cv(node: ast.AST) -> bool:
+    for p in parents(node):
+        if isinstance(p, ast.With):
+            for item in p.items:
+                d = dotted(item.context_expr)
+                if d.endswith(".cv") or d == "cv" or ".cv." in d:
+                    return True
+    return False
+
+
+def _in_init(node: ast.AST) -> bool:
+    for p in parents(node):
+        if isinstance(p, ast.FunctionDef):
+            return p.name == "__init__"
+    return False
+
+
+def _handler_classes(tree: ast.Module) -> Set[ast.ClassDef]:
+    return {n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)
+            and any("Handler" in dotted(b) for b in n.bases)}
+
+
+def _owning_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    for p in parents(node):
+        if isinstance(p, ast.ClassDef):
+            return p
+    return None
+
+
+def _check_module(mod, registry: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    handlers = _handler_classes(mod.tree)
+    aliases = _engine_aliases(mod.tree)
+    for node in ast.walk(mod.tree):
+        target = None
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in registry:
+            target = node.func.value
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Attribute) \
+                and node.targets[0].attr in registry:
+            target = node.targets[0].value
+        if target is None:
+            continue
+        d = dotted(target)
+        base = d.split(".")[-1]
+        if not (d.endswith(".engine") or base in aliases and "." not in d
+                or base == "engine"):
+            continue
+        attr = node.func.attr if isinstance(node, ast.Call) \
+            else node.targets[0].attr
+        cls = _owning_class(node)
+        where = qualname(node)
+        if cls in handlers:
+            out.append(make_finding(
+                mod.path, node.lineno, "LCK002",
+                f"handler {where} calls engine mutator '{attr}' directly; "
+                f"handlers must use the EngineServer wrappers, which take "
+                f"cv", where, attr))
+        elif not (_under_cv(node) or _in_init(node)):
+            out.append(make_finding(
+                mod.path, node.lineno, "LCK001",
+                f"engine mutator '{attr}' called in {where} without "
+                f"holding cv: wrap the call in 'with self.cv:' (the pump "
+                f"thread owns unlocked stepping only via the cv wait "
+                f"loop)", where, attr))
+    return out

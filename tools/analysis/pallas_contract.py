@@ -1,0 +1,370 @@
+"""pallas-contract: static checks over the Pallas kernel entry points.
+
+Codes:
+  PAL001  a grid / BlockSpec dimension computed with ``//`` whose
+          numerator is never guarded by a divisibility check (``x % b``
+          in an if/assert that raises, or a ``validate_*`` helper from
+          ``kernels.constraints``) — the silent-tail-drop class fixed in
+          the paged-decode PR.
+  PAL002  a BlockSpec index-map lambda closing over non-scalar state
+          (an array-typed parameter or a value produced by jnp/jax/np) —
+          index maps must be pure functions of grid indices + scalars.
+  PAL003  estimated VMEM working set (block tiles + scratch) above the
+          shared budget from ``kernels.constraints.VMEM_BUDGET_BYTES``.
+  PAL004  a bare 32/64 tile-floor literal in a guard inside kernels
+          code — the minimum-tile constants live in
+          ``kernels/constraints.py`` and must be imported from there.
+
+The pass runs on any module that calls ``pallas_call``; PAL004 also
+covers every module under a ``kernels/`` directory.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.analysis.core import (Context, Finding, call_name, dotted,
+                                 enclosing_function, make_finding, parents,
+                                 qualname)
+
+_SCALAR_CALLS = {"len", "min", "max", "int", "abs", "cdiv", "range", "sum"}
+_ARRAYISH_ANN = ("Array", "ndarray", "ArrayLike", "Tensor")
+_DTYPE_BYTES = {"float32": 4, "int32": 4, "uint32": 4, "float64": 8,
+                "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+                "int8": 1, "uint8": 1, "bool_": 1, "bool": 1}
+_DEFAULT_DIM = 128   # unknown symbolic block dims assume one full lane tile
+
+
+def run(ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in ctx.modules:
+        has_pallas = "pallas_call" in mod.source
+        in_kernels = "/kernels/" in f"/{mod.path}" \
+            and not mod.path.endswith("constraints.py")
+        if not (has_pallas or in_kernels):
+            continue
+        if has_pallas:
+            for fn in _functions(mod.tree):
+                calls = _pallas_calls(fn)
+                if not calls:
+                    continue
+                out.extend(_check_divisibility(mod, fn, calls))
+                out.extend(_check_index_maps(mod, fn))
+                out.extend(_check_vmem(mod, fn, calls, ctx))
+        if in_kernels:
+            out.extend(_check_tile_literals(mod, ctx))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# helpers
+
+
+def _functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+
+
+def _pallas_calls(fn: ast.FunctionDef) -> List[ast.Call]:
+    return [n for n in ast.walk(fn)
+            if isinstance(n, ast.Call) and call_name(n) == "pallas_call"
+            and enclosing_function(n) is fn]
+
+
+def _assignments(fn: ast.FunctionDef) -> Dict[str, ast.expr]:
+    """name -> last simple assignment value, within this function only."""
+    env: Dict[str, ast.expr] = {}
+    for node in ast.walk(fn):
+        if enclosing_function(node) is not fn:
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name):
+            env[node.target.id] = node.value
+    return env
+
+
+# ----------------------------------------------------------------------------
+# PAL001: unguarded floor divisions feeding grid / block shapes
+
+
+def _guarded_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names whose divisibility is checked before kernel dispatch:
+    ``x % b`` inside an if/assert test (the if must raise), or passed to
+    a ``validate_*`` / ``_check_*`` helper."""
+    guarded: Set[str] = set()
+    for node in ast.walk(fn):
+        test = None
+        if isinstance(node, ast.If) and _raises(node.body):
+            test = node.test
+        elif isinstance(node, ast.Assert):
+            test = node.test
+        if test is not None:
+            for sub in ast.walk(test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    if isinstance(sub.left, ast.Name):
+                        guarded.add(sub.left.id)
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name.startswith(("validate_", "_check", "check_")):
+                for arg in node.args:
+                    for sub in ast.walk(arg):
+                        if isinstance(sub, ast.Name):
+                            guarded.add(sub.id)
+    return guarded
+
+
+def _raises(body: List[ast.stmt]) -> bool:
+    return any(isinstance(s, ast.Raise) for s in body)
+
+
+def _floor_divs(expr: ast.expr, env: Dict[str, ast.expr],
+                depth: int = 0) -> List[ast.BinOp]:
+    """FloorDiv nodes inside expr, following one level of name
+    indirection (``n_s = s // bs`` then ``grid=(n_s,)``)."""
+    out: List[ast.BinOp] = []
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv):
+            out.append(sub)
+        elif isinstance(sub, ast.Name) and depth < 2 and sub.id in env:
+            out.extend(_floor_divs(env[sub.id], env, depth + 1))
+    return out
+
+
+def _grid_and_block_exprs(fn: ast.FunctionDef,
+                          calls: List[ast.Call]) -> List[ast.expr]:
+    exprs: List[ast.expr] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if node in calls or "GridSpec" in name:
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    exprs.append(kw.value)
+        if name == "BlockSpec" and node.args:
+            exprs.append(node.args[0])
+    return exprs
+
+
+def _ceil_div(node: ast.BinOp) -> bool:
+    """-(-a // b) never drops a tail."""
+    for p in parents(node):
+        if isinstance(p, ast.UnaryOp) and isinstance(p.op, ast.USub):
+            return True
+        if not isinstance(p, (ast.UnaryOp, ast.BinOp)):
+            break
+    return isinstance(node.left, ast.UnaryOp) \
+        and isinstance(node.left.op, ast.USub)
+
+
+def _check_divisibility(mod, fn: ast.FunctionDef,
+                        calls: List[ast.Call]) -> List[Finding]:
+    guarded = _guarded_names(fn)
+    env = _assignments(fn)
+    out: List[Finding] = []
+    seen: Set[str] = set()
+    for expr in _grid_and_block_exprs(fn, calls):
+        for div in _floor_divs(expr, env):
+            if _ceil_div(div) or not isinstance(div.left, ast.Name):
+                continue
+            num = div.left.id
+            if num in guarded or num in seen:
+                continue
+            seen.add(num)
+            den = dotted(div.right) or ast.dump(div.right)
+            out.append(make_finding(
+                mod.path, div.lineno, "PAL001",
+                f"grid/block dim '{num} // {den}' in {fn.name} drops the "
+                f"tail silently: guard with '{num} % {den}' (raise "
+                f"ValueError) or a kernels.constraints validate_* helper",
+                fn.name, num))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# PAL002: index-map lambdas closing over non-scalar state
+
+
+def _check_index_maps(mod, fn: ast.FunctionDef) -> List[Finding]:
+    env = _assignments(fn)
+    params = {a.arg: a for a in
+              fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs}
+    out: List[Finding] = []
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) == "BlockSpec"):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if not isinstance(arg, ast.Lambda):
+                continue
+            bound = {a.arg for a in arg.args.args}
+            free = {n.id for n in ast.walk(arg.body)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)} - bound
+            for name in sorted(free):
+                why = _nonscalar_reason(name, env, params)
+                if why:
+                    out.append(make_finding(
+                        mod.path, arg.lineno, "PAL002",
+                        f"BlockSpec index map in {fn.name} closes over "
+                        f"'{name}' which {why}; index maps must be pure "
+                        f"functions of grid indices and prefetched "
+                        f"scalars", fn.name, name))
+    return out
+
+
+def _nonscalar_reason(name: str, env: Dict[str, ast.expr],
+                      params: Dict[str, ast.arg]) -> Optional[str]:
+    if name in params:
+        ann = params[name].annotation
+        if ann is not None and any(t in dotted(ann) for t in _ARRAYISH_ANN):
+            return f"is an array-typed parameter ({dotted(ann)})"
+        return None
+    val = env.get(name)
+    if val is None:
+        return None                      # unknown: assume scalar
+    for sub in ast.walk(val):
+        if isinstance(sub, ast.Call):
+            root = dotted(sub.func).split(".")[0]
+            leaf = call_name(sub)
+            if root in ("jnp", "jax", "np", "numpy") \
+                    and leaf not in _SCALAR_CALLS:
+                return f"is built by {dotted(sub.func)}() (device/array " \
+                       f"state, not a Python scalar)"
+    return None
+
+
+# ----------------------------------------------------------------------------
+# PAL003: static VMEM working-set estimate
+
+
+def _check_vmem(mod, fn: ast.FunctionDef, calls: List[ast.Call],
+                ctx: Context) -> List[Finding]:
+    env = _assignments(fn)
+    defaults = _param_defaults(fn)
+    out: List[Finding] = []
+    for call in calls:
+        total = 0
+        for spec in ast.walk(call):
+            if not isinstance(spec, ast.Call):
+                continue
+            name = call_name(spec)
+            if name == "BlockSpec" and spec.args \
+                    and isinstance(spec.args[0], ast.Tuple):
+                total += _tuple_elems(spec.args[0], env, defaults) * 4
+            elif name == "VMEM" and spec.args:
+                shape = spec.args[0]
+                elems = _tuple_elems(shape, env, defaults) \
+                    if isinstance(shape, ast.Tuple) else _DEFAULT_DIM
+                total += elems * _dtype_bytes(spec.args[1:])
+        budget = ctx.constraints.vmem_budget_bytes
+        if total > budget:
+            out.append(make_finding(
+                mod.path, call.lineno, "PAL003",
+                f"pallas_call in {fn.name}: estimated VMEM working set "
+                f"~{total // 1024} KiB exceeds the "
+                f"{budget // 1024} KiB budget "
+                f"(kernels.constraints.VMEM_BUDGET_BYTES) — shrink block "
+                f"shapes or split the kernel", fn.name, "vmem"))
+    return out
+
+
+def _param_defaults(fn: ast.FunctionDef) -> Dict[str, int]:
+    env: Dict[str, int] = {}
+    pos = fn.args.args
+    for arg, default in zip(pos[len(pos) - len(fn.args.defaults):],
+                            fn.args.defaults):
+        if isinstance(default, ast.Constant) and isinstance(default.value,
+                                                            int):
+            env[arg.arg] = default.value
+    for arg, default in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if isinstance(default, ast.Constant) and isinstance(default.value,
+                                                            int):
+            env[arg.arg] = default.value
+    return env
+
+
+def _tuple_elems(node: ast.Tuple, env: Dict[str, ast.expr],
+                 defaults: Dict[str, int]) -> int:
+    total = 1
+    for el in node.elts:
+        total *= _eval_dim(el, env, defaults)
+    return total
+
+
+def _eval_dim(node: ast.expr, env: Dict[str, ast.expr],
+              defaults: Dict[str, int], depth: int = 0) -> int:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return max(1, node.value)
+    if isinstance(node, ast.Name):
+        if node.id in defaults:
+            return defaults[node.id]
+        if depth < 3 and node.id in env:
+            return _eval_dim(env[node.id], env, defaults, depth + 1)
+        return _DEFAULT_DIM
+    if isinstance(node, ast.BinOp):
+        a = _eval_dim(node.left, env, defaults, depth + 1)
+        b = _eval_dim(node.right, env, defaults, depth + 1)
+        if isinstance(node.op, ast.Mult):
+            return a * b
+        if isinstance(node.op, ast.FloorDiv):
+            return max(1, a // max(1, b))
+        if isinstance(node.op, ast.Add):
+            return a + b
+        if isinstance(node.op, ast.Sub):
+            return max(1, a - b)
+        return _DEFAULT_DIM
+    if isinstance(node, ast.IfExp):
+        return max(_eval_dim(node.body, env, defaults, depth + 1),
+                   _eval_dim(node.orelse, env, defaults, depth + 1))
+    if isinstance(node, ast.Call) and call_name(node) in ("min", "max"):
+        vals = [_eval_dim(a, env, defaults, depth + 1) for a in node.args]
+        if vals:
+            return min(vals) if call_name(node) == "min" else max(vals)
+    return _DEFAULT_DIM
+
+
+def _dtype_bytes(args: List[ast.expr]) -> int:
+    for a in args:
+        leaf = dotted(a).split(".")[-1]
+        if leaf in _DTYPE_BYTES:
+            return _DTYPE_BYTES[leaf]
+    return 4
+
+
+# ----------------------------------------------------------------------------
+# PAL004: inlined tile-floor literals in kernels guards
+
+
+def _check_tile_literals(mod, ctx: Context) -> List[Finding]:
+    floors = {ctx.constraints.min_sublane_tile,
+              ctx.constraints.min_sublane_tile_packed4}
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        test = None
+        if isinstance(node, ast.If):
+            test = node.test
+        elif isinstance(node, ast.Assert):
+            test = node.test
+        if test is None:
+            continue
+        for sub in ast.walk(test):
+            bad = None
+            if isinstance(sub, ast.Compare):
+                for cmp in sub.comparators:
+                    if isinstance(cmp, ast.Constant) and cmp.value in floors:
+                        bad = cmp
+            elif isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod) \
+                    and isinstance(sub.right, ast.Constant) \
+                    and sub.right.value in floors:
+                bad = sub.right
+            if bad is not None:
+                out.append(make_finding(
+                    mod.path, getattr(bad, "lineno", node.lineno), "PAL004",
+                    f"bare tile-floor literal {bad.value} in a guard in "
+                    f"{qualname(node)}; import MIN_SUBLANE_TILE / "
+                    f"MIN_SUBLANE_TILE_PACKED4 from kernels.constraints",
+                    qualname(node), str(bad.value)))
+    return out

@@ -1,0 +1,124 @@
+"""repro-lint CLI.
+
+    python -m tools.analysis.run src/ tests/ benchmarks/
+
+Runs the four passes over the given files/directories, diffs the
+findings against ``tools/analysis/baseline.txt`` and exits non-zero on
+anything new. Stale baseline entries (suppressing findings that no
+longer fire) are reported so the baseline shrinks over time instead of
+fossilising.
+
+Exit codes: 0 clean, 1 new findings (or stale baseline with --strict),
+2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from tools.analysis import api_drift, jit_hygiene, lock_discipline, \
+    pallas_contract
+from tools.analysis.core import (BaselineError, Context, Finding,
+                                 iter_py_files, load_baseline,
+                                 load_constraints, parse_modules,
+                                 save_baseline)
+
+PASSES = (("pallas-contract", pallas_contract),
+          ("jit-hygiene", jit_hygiene),
+          ("lock-discipline", lock_discipline),
+          ("api-drift", api_drift))
+
+DEFAULT_BASELINE = os.path.join("tools", "analysis", "baseline.txt")
+
+
+def analyze(paths: List[str], root: str) -> List[Finding]:
+    files = iter_py_files(paths)
+    modules, findings = parse_modules(files, root)
+    ctx = Context(modules=modules, root=root,
+                  constraints=load_constraints(root))
+    for _, mod in PASSES:
+        findings.extend(mod.run(ctx))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis.run",
+        description="repro-lint: jit/Pallas/concurrency/API static checks")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze")
+    ap.add_argument("--root", default=".",
+                    help="repo root findings are reported relative to")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default {DEFAULT_BASELINE} "
+                         f"under --root; 'none' disables)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping existing justifications")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale baseline entries")
+    ap.add_argument("--output", default=None,
+                    help="write the full findings list to this file "
+                         "(for CI artifacts)")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    if args.baseline == "none":
+        baseline_path = None
+    else:
+        baseline_path = args.baseline or os.path.join(root, DEFAULT_BASELINE)
+
+    try:
+        findings = analyze(args.paths, root)
+    except (OSError, RecursionError) as e:
+        print(f"repro-lint: internal error: {e}", file=sys.stderr)
+        return 2
+
+    baseline = {}
+    if baseline_path:
+        try:
+            baseline = load_baseline(baseline_path)
+        except BaselineError as e:
+            print(f"repro-lint: {e}", file=sys.stderr)
+            return 2
+
+    if args.update_baseline:
+        if not baseline_path:
+            print("repro-lint: --update-baseline needs a baseline path",
+                  file=sys.stderr)
+            return 2
+        save_baseline(baseline_path, findings, baseline)
+        print(f"repro-lint: wrote {len(set(f.key for f in findings))} "
+              f"entries to {baseline_path}")
+        return 0
+
+    new = [f for f in findings if f.key not in baseline]
+    suppressed = [f for f in findings if f.key in baseline]
+    stale = sorted(set(baseline) - set(f.key for f in findings))
+
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            for f in findings:
+                mark = "baseline" if f.key in baseline else "NEW"
+                fh.write(f"{mark:8s} {f.render()}\n")
+
+    for f in new:
+        print(f.render())
+    for key in stale:
+        print(f"stale baseline entry (finding no longer fires): {key}",
+              file=sys.stderr)
+    n_files = len(iter_py_files(args.paths))
+    print(f"repro-lint: {n_files} files, {len(new)} new, "
+          f"{len(suppressed)} baselined, {len(stale)} stale",
+          file=sys.stderr)
+    if new:
+        return 1
+    if stale and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
