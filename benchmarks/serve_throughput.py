@@ -25,6 +25,13 @@ jitter — per-step trace cost is proportionally larger on short-decode
 workloads like the CI gate's 8-token bursts, where it measures ≈5-10%).
 The telemetry run's trace and metrics snapshots are written to
 ``benchmarks/out/`` as CI artifacts.
+
+A fourth, likewise ungated lane measures the accuracy-drift monitor
+(``ServeConfig(drift_monitor=True)``, sample rate 0.25): the sampled
+shadow probe must change zero tokens and keep throughput within 15% of
+the unmonitored run (the ISSUE budget is ≤3% at the default 0.05 rate;
+benching at 5x that rate with a 15% allowance absorbs CI jitter while
+still catching a probe that leaks into the serving path).
 """
 from __future__ import annotations
 
@@ -127,6 +134,36 @@ def telemetry_overhead(params, cfg, base, reqs, repeats: int = 5):
     return best["on"] / best["off"], best, engines["on"]
 
 
+def drift_overhead(params, cfg, base, reqs, repeats: int = 5,
+                   sample_rate: float = 0.25):
+    """Best-of-``repeats`` tok/s with the accuracy-drift monitor off vs
+    on (sampled shadow probe at ``sample_rate``), repeats interleaved
+    like the telemetry lane. The monitor is read-only by construction —
+    tokens must be identical — and its cost is the probe dispatch plus
+    one small host transfer per sampled step."""
+    engines = {label: Engine(params, cfg, ServeConfig(
+        scheduler="continuous", drift_monitor=mon,
+        drift_sample_rate=sample_rate, **base))
+        for label, mon in (("off", False), ("on", True))}
+    for eng in engines.values():
+        eng.generate(clone(reqs))       # warm: compile every shape
+    best = {}
+    results = {}
+    for _ in range(repeats):
+        for label, eng in engines.items():
+            t0 = time.perf_counter()
+            res = eng.generate(clone(reqs))
+            wall = time.perf_counter() - t0
+            tps = sum(len(r.tokens) for r in res) / wall
+            best[label] = max(best.get(label, 0.0), tps)
+            results[label] = res
+    mismatch = [a.uid for a, b in zip(results["off"], results["on"])
+                if not np.array_equal(a.tokens, b.tokens)]
+    assert not mismatch, \
+        f"drift monitor changed greedy outputs for uids {mismatch}"
+    return best["on"] / best["off"], best, engines["on"]
+
+
 def run(quick: bool = False):
     """benchmarks.run protocol: returns (csv_path, rows)."""
     # the CI bench-gate workload: 16 mixed-length requests over 8 decode
@@ -214,6 +251,19 @@ def _bench(argv=None):
     print("[bench] telemetry artifacts: serve_metrics.json/.prom, "
           "serve_trace.json/.jsonl")
 
+    # drift-monitor overhead lane (ungated): the sampled shadow probe
+    # must be token-invisible and cheap even at 5x the default rate
+    dratio, dbest, eng_drift = drift_overhead(params, cfg, base, reqs)
+    dstats = eng_drift.stats()
+    print(f"[bench] drift-monitor overhead: {dbest['on']:.1f} vs "
+          f"{dbest['off']:.1f} tok/s (ratio {dratio:.3f}); "
+          f"{int(dstats['drift_checks'])} checks, top-1 agreement "
+          f"{dstats['drift_top1_agreement_rate']:.3f}")
+    assert dratio >= 0.85, \
+        f"drift-monitor overhead ratio {dratio:.3f} below the 0.85 floor"
+    assert dstats["drift_checks"] > 0, \
+        "drift lane ran without a single sampled check"
+
     path = write_csv("serve_throughput.csv",
                      ["scheduler", "tokens", "wall_s", "tok_per_s",
                       "p50_ms", "p95_ms", "occupancy"],
@@ -226,6 +276,7 @@ def _bench(argv=None):
         "kv_dtype": args.kv,
         "gate": {"continuous_vs_bucketed": speedup},
         "telemetry_overhead_ratio": ratio,
+        "drift_overhead_ratio": dratio,
         "lanes": rows,
     })
     print(f"[bench] wrote {path}")

@@ -107,8 +107,15 @@ def quantize_layer(
     cfg: PTQConfig,
     key: jax.Array,
     quantizer=None,
+    recorder=None,
 ) -> tuple[Decomposition, LayerReport]:
-    """Apply the configured method to one weight matrix."""
+    """Apply the configured method to one weight matrix.
+
+    ``recorder`` is an optional duck-typed observer (see
+    :mod:`repro.obs.quant`) whose ``record_layer`` hook receives the
+    inputs and results of every pass; this module never imports the
+    observability package.
+    """
     t0 = time.perf_counter()
     scaling = (stats.scaling(cfg.scaling) if stats is not None
                else identity_scaling())
@@ -141,6 +148,8 @@ def quantize_layer(
         scaled_err=serr, weight_err=werr,
         seconds=time.perf_counter() - t0,
     )
+    if recorder is not None:
+        recorder.record_layer(name, w, dec, scaling, cfg, quantizer, report)
     return dec, report
 
 
@@ -149,6 +158,7 @@ def quantize_tree(
     stats: Dict[str, CalibStats],
     cfg: PTQConfig,
     progress: Optional[Callable[[LayerReport], None]] = None,
+    recorder=None,
 ) -> tuple[Dict[str, Decomposition], list[LayerReport]]:
     """Quantize every named weight; deterministic per-layer PRNG streams."""
     root = jax.random.PRNGKey(cfg.seed)
@@ -156,7 +166,8 @@ def quantize_tree(
     reports: list[LayerReport] = []
     for i, name in enumerate(sorted(weights)):
         key = jax.random.fold_in(root, i)
-        dec, rep = quantize_layer(name, weights[name], stats.get(name), cfg, key)
+        dec, rep = quantize_layer(name, weights[name], stats.get(name), cfg, key,
+                                  recorder=recorder)
         decs[name] = dec
         reports.append(rep)
         if progress is not None:

@@ -36,13 +36,31 @@ def add_model_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--rank", type=int, default=16)
     p.add_argument("--bits", type=int, default=3)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--quant-report", metavar="PATH", default=None,
+                   help="write the per-layer quantization-quality report "
+                        "(singular-spectrum head, preserved/exposed "
+                        "energy, residual norms, container bytes) as "
+                        "JSON to PATH, plus a Chrome trace of the "
+                        "quantizer passes to PATH with a .trace.json "
+                        "extension; render with python -m "
+                        "tools.quant_report PATH")
 
 
 def build_quantized_model(args, tag: str = "serve"):
     """Init the reduced model and run the paper pipeline (calibrate →
-    quantize) per the shared model flags; returns ``(params, cfg)``."""
+    quantize) per the shared model flags; returns ``(params, cfg)``.
+
+    ``--quant-report PATH`` threads a :class:`repro.obs.QuantRecorder`
+    through the pass and writes its schema-pinned JSON report (always —
+    ``--method none`` yields an empty-layer report, so CI artifact steps
+    never conditionally skip)."""
     cfg = get_config(args.arch).reduced()
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+    recorder = None
+    report_path = getattr(args, "quant_report", None)
+    if report_path:
+        from repro.obs import QuantRecorder
+        recorder = QuantRecorder()
     if args.method != "none":
         dcfg = data_config_for(cfg, seq_len=32, global_batch=4,
                                seed=args.seed)
@@ -56,9 +74,13 @@ def build_quantized_model(args, tag: str = "serve"):
                                                   block_size=32),
                         seed=args.seed)
         t0 = time.perf_counter()
-        params, reports = quantize_model_params(params, stats, ptq)
+        params, reports = quantize_model_params(params, stats, ptq,
+                                                recorder=recorder)
         print(f"[{tag}] {args.method} quantized {len(reports)} matrices "
               f"in {time.perf_counter() - t0:.1f}s")
+    if recorder is not None:
+        recorder.write(report_path)
+        print(f"[{tag}] quant report -> {report_path}")
     return params, cfg
 
 
@@ -128,6 +150,23 @@ def main(argv=None):
                         "a CI/debug mode, not a production default")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable radix-tree prefix reuse (paged only)")
+    p.add_argument("--drift-monitor", action="store_true",
+                   help="sampled shadow comparison of the serving logits "
+                        "against a reference lowering of the same "
+                        "quantized params (KL / top-1 agreement / "
+                        "max-|Δlogit| histograms + NaN/inf guard "
+                        "counters in the metrics snapshot); "
+                        "token-identical, costs one extra decode "
+                        "dispatch per sampled step")
+    p.add_argument("--drift-sample-rate", type=float, default=0.05,
+                   help="fraction of decode steps the drift monitor "
+                        "shadow-compares (deterministic in the step "
+                        "counter; 1.0 = every step)")
+    p.add_argument("--drift-ref-fused", default="off",
+                   choices=["auto", "on", "off"],
+                   help="fused mode of the drift monitor's reference "
+                        "lowering; the default 'off' is the dequant-"
+                        "then-matmul ground-truth path")
     p.add_argument("--telemetry", action="store_true",
                    help="enable serve telemetry: request-lifecycle + "
                         "step-phase tracing, latency histograms, compile "
@@ -170,6 +209,9 @@ def main(argv=None):
         fused=args.fused, paged=args.paged, page_size=args.page_size,
         n_pages=args.n_pages, compute_dtype=args.compute_dtype,
         sanitize=args.sanitize,
+        drift_monitor=args.drift_monitor,
+        drift_sample_rate=args.drift_sample_rate,
+        drift_ref_fused=args.drift_ref_fused,
         prefix_cache=not args.no_prefix_cache,
         telemetry=telemetry, trace_sync=args.trace_sync,
         profile_dir=args.profile_dir, profile_steps=args.profile_steps))
@@ -204,6 +246,11 @@ def main(argv=None):
                   f"{st['spec_accepted_tokens']}/{st['spec_draft_tokens']} "
                   f"drafts accepted "
                   f"(rate {st['spec_acceptance_rate']:.3f})")
+        if args.drift_monitor:
+            print(f"[serve] drift: {st['drift_checks']} checks, "
+                  f"top-1 agreement {st['drift_top1_agreement_rate']:.3f}, "
+                  f"{st['drift_nonfinite']} non-finite, "
+                  f"{st['guard_token_oob']} OOB tokens")
         if args.paged:
             print(f"[serve] paged: {st['prefill_chunks']} prefill chunks, "
                   f"{st['prefill_tokens_computed']}/"

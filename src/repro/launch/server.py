@@ -41,7 +41,10 @@ def build_engine(args) -> Engine:
         spec_k=args.spec_k if args.spec_k > 0 else 4,
         max_pages_per_request=args.max_pages_per_request,
         free_watermark=args.free_watermark, telemetry=args.telemetry,
-        sanitize=args.sanitize))
+        sanitize=args.sanitize,
+        drift_monitor=args.drift_monitor,
+        drift_sample_rate=args.drift_sample_rate,
+        drift_ref_fused=args.drift_ref_fused))
     print("[server] warming up (prefill + decode compiles)...")
     eng.warmup()
     return eng
@@ -76,6 +79,13 @@ def main(argv=None):
                    help="audit serve-state invariants after every step "
                         "(see repro.serve.sanitizer); token-identical "
                         "but host-syncing — smoke/debug use")
+    p.add_argument("--drift-monitor", action="store_true",
+                   help="sampled shadow comparison of serving vs "
+                        "reference-lowering logits; drift histograms + "
+                        "NaN/inf guard counters land in /metrics.json")
+    p.add_argument("--drift-sample-rate", type=float, default=0.05)
+    p.add_argument("--drift-ref-fused", default="off",
+                   choices=["auto", "on", "off"])
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=8000)
     p.add_argument("--model-id", default="repro-qlr")

@@ -64,8 +64,9 @@ def _stats_for(stats: Optional[Dict[str, CalibStats]], names: List[str],
 
 
 def _quantize_matrix(name: str, w, stats, cfg: PTQConfig, key,
-                     container: str) -> Tuple[Dict[str, jax.Array], LayerReport]:
-    dec, rep = quantize_layer(name, w, stats, cfg, key)
+                     container: str,
+                     recorder=None) -> Tuple[Dict[str, jax.Array], LayerReport]:
+    dec, rep = quantize_layer(name, w, stats, cfg, key, recorder=recorder)
     qz = MXIntQuantizer(bits=cfg.quantizer.bits,
                         block_size=cfg.quantizer.block_size)
     packed = qz.quantize(dec.q)
@@ -82,6 +83,8 @@ def _quantize_matrix(name: str, w, stats, cfg: PTQConfig, key,
         out["packed"] = pack_codes_4bit(packed.codes)
     else:
         out["codes"] = packed.codes
+    if recorder is not None:
+        recorder.attach_container(name, out, container)
     return out, rep
 
 
@@ -91,9 +94,13 @@ def quantize_model_params(
     cfg: PTQConfig,
     container: str = "int8",
     progress: Optional[Callable[[LayerReport], None]] = None,
+    recorder=None,
 ) -> Tuple[Any, List[LayerReport]]:
     """Walk a model param tree, replacing each projection's fp weight with
-    its SRR/QER decomposition. Pure host-side (offline calibration pass)."""
+    its SRR/QER decomposition. Pure host-side (offline calibration pass).
+
+    ``recorder`` (duck-typed, see :mod:`repro.obs.quant`) captures a
+    per-matrix quality record plus container byte accounting."""
     reports: List[LayerReport] = []
     root = jax.random.PRNGKey(cfg.seed)
     counter = [0]
@@ -114,7 +121,8 @@ def quantize_model_params(
             counter[0] += 1
             key = jax.random.fold_in(root, counter[0])
             q, rep = _quantize_matrix(f"{name}{list(idx)}", jnp.asarray(mat),
-                                      st, cfg, key, container)
+                                      st, cfg, key, container,
+                                      recorder=recorder)
             reports.append(rep)
             if progress:
                 progress(rep)

@@ -1,0 +1,38 @@
+"""``repro.obs`` — the thin observability export surface.
+
+Serving-side primitives live in :mod:`repro.serve.telemetry`;
+quantize-time introspection lives in :mod:`repro.obs.quant`. This
+package is the stable import point for consumers outside the serving
+stack (benchmarks, launch drivers, notebooks)::
+
+    from repro import obs
+    p95 = obs.percentile(latencies, 0.95)
+    reg = obs.MetricsRegistry()
+    rec = obs.QuantRecorder()
+"""
+from repro.obs.quant import (
+    NULL_QUANT_RECORDER,
+    LayerQuantRecord,
+    NullQuantRecorder,
+    QuantRecorder,
+)
+from repro.serve.telemetry import (
+    NULL_TELEMETRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullTelemetry,
+    Telemetry,
+    Tracer,
+    latency_summary,
+    log_buckets,
+    percentile,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LayerQuantRecord", "MetricsRegistry",
+    "NULL_QUANT_RECORDER", "NULL_TELEMETRY", "NullQuantRecorder",
+    "NullTelemetry", "QuantRecorder", "Telemetry", "Tracer",
+    "latency_summary", "log_buckets", "percentile",
+]

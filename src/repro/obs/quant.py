@@ -1,0 +1,221 @@
+"""Quantize-time introspection: per-layer SRR quality records.
+
+The paper's k-selection criterion balances *preserved* subspace energy
+against *quantization-exposed* energy of the activation-scaled weight
+``SW``; this module records exactly that balance layer-by-layer while a
+quantizer pass runs, so report readers (and the ROADMAP's future auto
+rank/bit allocation search) can see where error reconstruction pays off.
+
+A :class:`QuantRecorder` is threaded — duck-typed, optional — through
+:func:`repro.core.api.quantize_layer` and
+:func:`repro.models.quantize.quantize_model_params`. For each layer it
+captures a :class:`LayerQuantRecord`:
+
+* singular-spectrum head of ``SW`` plus preserved rank ``k`` and the
+  captured energy fraction ``Σσ²[:k] / Σσ²`` (its complement is the
+  quantization-exposed energy the paper's criterion trades against);
+* raw and activation-scaled residual norms ``‖W − Q − LR‖_F`` and
+  ``‖S(W − Q − LR)‖_F``, absolute and relative;
+* bits/rank budgets and — once the serving containers are packed —
+  actual container bytes split into quantized vs low-rank storage.
+
+``rec.build_report()`` returns a JSON-serializable dict pinned by
+``tools/quant_report_schema.json`` (validated with the existing
+``tools/validate_metrics.py`` engine); ``rec.write(path)`` also drops a
+sibling ``*.trace.json`` Chrome trace with one span per layer pass via
+the serving :class:`~repro.serve.telemetry.Tracer`.
+
+Everything is a null object when recording is off:
+:data:`NULL_QUANT_RECORDER` swallows every call so the quantizer hot
+path never branches on configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.telemetry import Tracer
+
+# Chrome-trace process lane for quantizer passes (the serving Tracer
+# reserves 1 for request lanes and 2 for the engine timeline).
+PID_QUANT = 3
+
+# how many leading singular values of SW each record keeps
+SPECTRUM_HEAD = 8
+
+REPORT_VERSION = 1
+
+
+@dataclasses.dataclass
+class LayerQuantRecord:
+    """Everything the report knows about one quantized matrix."""
+
+    name: str
+    shape: List[int]                  # [out_features, in_features] as stored
+    method: str                       # srr | srr-joint | qer | w-only | none
+    scaling: str                      # identity | lqer | qera-approx | ...
+    rank: int                         # low-rank budget r
+    k: int                            # preserved rank k* (<= rank)
+    bits: float                       # effective bits/weight incl. side info
+    singular_head: List[float]        # leading sigma_i of SW, descending
+    preserved_energy_fraction: float  # sum sigma^2[:k] / sum sigma^2
+    quant_exposed_energy_fraction: float  # 1 - preserved fraction
+    scaled_err: float                 # ||S(W - Q - LR)||_F
+    scaled_rel_err: float             # scaled_err / ||SW||_F
+    weight_err: float                 # ||W - Q - LR||_F
+    weight_rel_err: float             # weight_err / ||W||_F
+    seconds: float                    # wall time of the quantizer pass
+    quant_bytes: int = 0              # packed Q container (codes + scales)
+    lowrank_bytes: int = 0            # L, R (+ gscale) container
+    total_bytes: int = 0
+    container: str = ""               # serving container kind, if packed
+
+
+def _nbytes(x: Any) -> int:
+    return int(getattr(x, "nbytes", 0))
+
+
+class QuantRecorder:
+    """Accumulates :class:`LayerQuantRecord` objects during a pass.
+
+    The recorder is handed to the pipeline as an opaque object (core
+    modules never import this package); it derives every spectral
+    quantity itself from ``(w, dec, scaling)`` so quantizer internals
+    stay untouched.
+    """
+
+    def __init__(self, spectrum_head: int = SPECTRUM_HEAD):
+        self.spectrum_head = spectrum_head
+        self.records: Dict[str, LayerQuantRecord] = {}
+        self._config: Dict[str, Any] = {}
+        self.tracer = Tracer()
+        self.tracer.events.append({
+            "ph": "M", "pid": PID_QUANT, "tid": 0, "ts": 0,
+            "name": "process_name", "args": {"name": "quantize"}})
+
+    # ------------------------------------------------------------------
+    def record_layer(self, name: str, w, dec, scaling, cfg, quantizer,
+                     layer_report) -> None:
+        """Capture one quantized matrix (called by ``quantize_layer``)."""
+        if not self._config:
+            self._config = {
+                "method": cfg.method,
+                "scaling": cfg.scaling,
+                "quantizer": cfg.quantizer.kind,
+                "bits": int(cfg.quantizer.bits),
+                "block_size": int(cfg.quantizer.block_size),
+                "rank": int(cfg.rank),
+                "exact_svd": bool(cfg.exact_svd),
+            }
+        sw = np.asarray(scaling.apply(w.astype(jnp.float32)))
+        sigma = np.linalg.svd(sw, compute_uv=False)
+        energy = sigma.astype(np.float64) ** 2
+        total = float(energy.sum()) or 1.0
+        k = int(dec.k)
+        preserved = float(energy[:k].sum() / total)
+        sw_norm = float(np.sqrt(total))
+        w_norm = float(np.linalg.norm(np.asarray(w, dtype=np.float32))) or 1.0
+        bits = float(getattr(quantizer, "effective_bits",
+                             cfg.quantizer.bits))
+        self.records[name] = LayerQuantRecord(
+            name=name,
+            shape=[int(s) for s in w.shape],
+            method=cfg.method,
+            scaling=cfg.scaling,
+            rank=int(layer_report.rank),
+            k=k,
+            bits=bits,
+            singular_head=[float(s) for s in
+                           sigma[:self.spectrum_head]],
+            preserved_energy_fraction=preserved,
+            quant_exposed_energy_fraction=1.0 - preserved,
+            scaled_err=float(layer_report.scaled_err),
+            scaled_rel_err=float(layer_report.scaled_err) / (sw_norm or 1.0),
+            weight_err=float(layer_report.weight_err),
+            weight_rel_err=float(layer_report.weight_err) / w_norm,
+            seconds=float(layer_report.seconds),
+        )
+        dur = float(layer_report.seconds) * 1e6
+        self.tracer.complete(
+            name, self.tracer.now_us() - dur, dur, PID_QUANT, 0,
+            args={"k": k, "rank": int(layer_report.rank),
+                  "scaled_err": float(layer_report.scaled_err)})
+
+    def attach_container(self, name: str, packed: Dict[str, Any],
+                         container: str) -> None:
+        """Add serving-container byte accounting to an existing record.
+
+        ``packed`` is the per-matrix dict built by
+        ``models/quantize._quantize_matrix``: the quantized body lives in
+        ``codes``/``packed`` + ``scale``, the reconstruction in ``l``,
+        ``r`` (+ ``gscale``).
+        """
+        rec = self.records.get(name)
+        if rec is None:
+            return
+        rec.quant_bytes = sum(_nbytes(packed.get(key))
+                              for key in ("codes", "packed", "scale"))
+        rec.lowrank_bytes = sum(_nbytes(packed.get(key))
+                                for key in ("l", "r", "gscale"))
+        rec.total_bytes = rec.quant_bytes + rec.lowrank_bytes
+        rec.container = container
+
+    # ------------------------------------------------------------------
+    def build_report(self) -> Dict[str, Any]:
+        recs = list(self.records.values())
+        summary: Dict[str, Any] = {
+            "layers": len(recs),
+            "total_bytes": sum(r.total_bytes for r in recs),
+            "quant_bytes": sum(r.quant_bytes for r in recs),
+            "lowrank_bytes": sum(r.lowrank_bytes for r in recs),
+            "total_seconds": sum(r.seconds for r in recs),
+        }
+        if recs:
+            summary.update(
+                mean_scaled_rel_err=float(np.mean(
+                    [r.scaled_rel_err for r in recs])),
+                max_scaled_rel_err=float(np.max(
+                    [r.scaled_rel_err for r in recs])),
+                mean_preserved_energy_fraction=float(np.mean(
+                    [r.preserved_energy_fraction for r in recs])),
+                mean_k=float(np.mean([r.k for r in recs])),
+                mean_bits=float(np.mean([r.bits for r in recs])),
+            )
+        return {
+            "version": REPORT_VERSION,
+            "config": dict(self._config),
+            "summary": summary,
+            "layers": {r.name: dataclasses.asdict(r) for r in recs},
+        }
+
+    def write(self, path: str) -> str:
+        """Write the JSON report; drop a sibling ``*.trace.json``."""
+        with open(path, "w") as f:
+            json.dump(self.build_report(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        trace = (path[:-len(".json")] if path.endswith(".json")
+                 else path) + ".trace.json"
+        self.tracer.write_chrome(trace)
+        return path
+
+
+class NullQuantRecorder:
+    """No-op stand-in so call sites never branch on configuration."""
+
+    def record_layer(self, *a, **k) -> None:
+        pass
+
+    def attach_container(self, *a, **k) -> None:
+        pass
+
+    def build_report(self) -> Dict[str, Any]:
+        return {"version": REPORT_VERSION, "config": {}, "summary":
+                {"layers": 0, "total_bytes": 0, "quant_bytes": 0,
+                 "lowrank_bytes": 0, "total_seconds": 0.0}, "layers": {}}
+
+
+NULL_QUANT_RECORDER = NullQuantRecorder()

@@ -85,7 +85,7 @@ from repro.serve.scheduler import (ContinuousScheduler, SchedulerStats,
                                    StepBudget)
 from repro.serve.slots import KV_DTYPES, SlotKVCache
 from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
-                                   Telemetry)
+                                   Telemetry, log_buckets)
 
 
 # --------------------------------------------------------------------------
@@ -211,6 +211,18 @@ class ServeConfig:
     # tables, pos/slot_pos and int4 alignment after every step();
     # read-only (token-identical) but host-syncing — CI smokes and
     # debugging, not production
+    # --- accuracy-drift monitor (repro.obs quantization observability) ---
+    drift_monitor: bool = False      # sampled shadow comparison of the
+    # serving logits against a reference lowering of the same quantized
+    # params: per-lane KL / top-1 agreement / max-|Δlogit| histograms +
+    # always-cheap NaN/inf guard counters. Read-only (token-identical);
+    # costs one extra decode dispatch per sampled step
+    drift_sample_rate: float = 0.05  # fraction of plain decode steps
+    # shadow-compared (deterministic in the step counter, never in the
+    # tokens); 1.0 = every step
+    drift_ref_fused: str = "off"     # fused mode of the reference
+    # lowering (auto | on | off); "off" = dequant-then-matmul, the
+    # ungrouped ground-truth path the kernels are verified against
 
 
 @dataclasses.dataclass
@@ -294,6 +306,18 @@ class Engine:
                     f"attention path and needs a pure full-GQA-attention "
                     f"decoder (got pattern={cfg.block_pattern}, "
                     f"attn_kind={cfg.attn_kind!r})")
+        if sc.drift_ref_fused not in ("auto", "on", "off"):
+            raise ValueError(
+                f"unknown drift_ref_fused {sc.drift_ref_fused!r}")
+        if sc.drift_monitor:
+            if sc.scheduler != "continuous":
+                raise ValueError("drift_monitor shadows the continuous "
+                                 "engine's decode dispatch — it needs "
+                                 "scheduler='continuous'")
+            if not 0.0 < sc.drift_sample_rate <= 1.0:
+                raise ValueError(
+                    f"drift_sample_rate={sc.drift_sample_rate} must be "
+                    f"in (0, 1]")
         # absorb MLA decode weights once per engine session (identity-
         # cached across engines; switching to a non-MLA model frees any
         # previous model's cached absorption)
@@ -467,6 +491,43 @@ class Engine:
         self._verify = jax.jit(_verify, static_argnums=(7,))
         self._rewind = jax.jit(_rewind)
 
+        # --- accuracy-drift probe --------------------------------------
+        # one jitted shadow dispatch re-runs this step's decode over the
+        # *pre-step* cache twice — under the serving lowering and under a
+        # reference lowering of the same quantized params (default
+        # fused="off": the dequant-then-matmul ground truth the fused
+        # kernels are verified against) — and reduces the final-position
+        # logits to per-lane KL(serving ‖ reference), argmax agreement,
+        # max-|Δlogit| and a non-finite element count. Both cache outputs
+        # are discarded and nothing is donated, so the probe is read-only
+        # by construction: served tokens are bit-identical with the
+        # monitor on or off.
+        if sc.drift_monitor:
+            rctx = dataclasses.replace(ctx, fused=sc.drift_ref_fused)
+            rctx.use_pallas = fused_mode(rctx) == "kernel"
+
+            def _drift_probe(params, token, cache):
+                lg_s, _ = decode_step(ctx, params, token, cache, cfg)
+                with jax.named_scope("drift_ref"):
+                    lg_r, _ = decode_step(rctx, params, token, cache, cfg)
+                s = lg_s[:, -1].astype(jnp.float32)
+                r = lg_r[:, -1].astype(jnp.float32)
+                logp_s = jax.nn.log_softmax(s)
+                logp_r = jax.nn.log_softmax(r)
+                kl = jnp.sum(jnp.exp(logp_s) * (logp_s - logp_r), axis=-1)
+                agree = jnp.argmax(s, axis=-1) == jnp.argmax(r, axis=-1)
+                delta = jnp.max(jnp.abs(s - r), axis=-1)
+                bad = (jnp.sum(~jnp.isfinite(s), axis=-1)
+                       + jnp.sum(~jnp.isfinite(r), axis=-1))
+                return kl, agree, delta, bad
+
+            self._drift_probe = jax.jit(_drift_probe)
+            self._drift_every = max(1, round(1.0 / sc.drift_sample_rate))
+        else:
+            self._drift_probe = None
+            self._drift_every = 0
+        self._drift_step = 0
+
         # paged geometry: the chunk width is the (even) prefill length,
         # chunk starts are page-aligned (matched prefixes are whole
         # pages), so int4 nibble pairs always land whole
@@ -533,6 +594,21 @@ class Engine:
         self._h_accept = self.registry.histogram(
             "spec_accept_per_round",
             "accepted draft tokens per lane per speculative round")
+        # drift-monitor accounting (published unconditionally, like the
+        # spec counters: zeros when the monitor is off)
+        self._drift_checks = 0
+        self._drift_agree = 0
+        self._drift_nonfinite = 0
+        self._guard_oob = 0
+        self._h_drift_kl = self.registry.histogram(
+            "drift_kl",
+            "per-lane KL(serving ‖ reference) at drift-sampled steps",
+            buckets=log_buckets(1e-12, 100.0, 2))
+        self._h_drift_delta = self.registry.histogram(
+            "drift_logit_delta",
+            "per-lane max |Δlogit| vs the reference lowering at "
+            "drift-sampled steps",
+            buckets=log_buckets(1e-12, 100.0, 2))
         # streaming hook: called as on_token(uid, token, info) for every
         # generated token the moment it is recorded (serve.http fans
         # these out to SSE connections); info is the logprob record when
@@ -1037,6 +1113,11 @@ class Engine:
             self._sanitize()
             return finished
 
+        # drift monitor: keep references to the *pre-step* token/cache —
+        # the decode jit is functional (nothing donated), so they stay
+        # valid for the shadow probe dispatched after the transfer
+        drift_in = ((self._tok, self.slots.cache)
+                    if self._drift_due() else None)
         with tel.phase("decode"), tel.entry("decode", self._tok.shape):
             (self._tok, lpd), self.slots.cache = self._decode(
                 self.params, self._tok, self.slots.cache,
@@ -1049,6 +1130,9 @@ class Engine:
         with tel.phase("transfer"):
             toks = np.asarray(jax.device_get(self._tok))[:, 0]
             lp_host = jax.device_get(lpd) if lpd is not None else None
+        self._host_guard(toks, decoding)
+        if drift_in is not None:
+            self._observe_drift(drift_in[0], drift_in[1], decoding)
         for slot in decoding:
             info = None
             if lp_host is not None:
@@ -1068,6 +1152,47 @@ class Engine:
         sanitized engine emits exactly the tokens a bare one does."""
         if self._san is not None:
             self._san.check(self)
+
+    # ------------------------------------------------------------------
+    # Accuracy-drift monitor (ServeConfig(drift_monitor=True))
+    # ------------------------------------------------------------------
+    def _drift_due(self) -> bool:
+        """Deterministic sampling cadence over plain decode steps: the
+        decision depends only on the step counter, never on tokens, so a
+        monitored run replays identically."""
+        if self._drift_probe is None:
+            return False
+        due = self._drift_step % self._drift_every == 0
+        self._drift_step += 1
+        return due
+
+    def _observe_drift(self, token, cache, decoding: List[int]) -> None:
+        """Shadow-compare this step's serving logits against the
+        reference lowering and fold the per-lane divergences into the
+        registry. Read-only: the probe's cache outputs are discarded."""
+        out = self._drift_probe(self.params, token, cache)
+        with jax.named_scope("drift_probe"):
+            # fence: the probe's sync is the sampled monitoring cost, not
+            # part of the serving step's transfer budget
+            kl, agree, delta, bad = map(np.asarray, jax.device_get(out))
+        for slot in decoding:
+            self._drift_checks += 1
+            self._drift_agree += int(agree[slot])
+            self._drift_nonfinite += int(bad[slot])
+            if np.isfinite(kl[slot]):
+                # tiny negative KL is float32 round-off, clamp to the
+                # histogram's domain
+                self._h_drift_kl.observe(max(float(kl[slot]), 0.0))
+            if np.isfinite(delta[slot]):
+                self._h_drift_delta.observe(float(delta[slot]))
+
+    def _host_guard(self, toks: np.ndarray, decoding: List[int]) -> None:
+        """Always-cheap sanity counter over the tokens just sampled: a
+        token outside [0, vocab) means the logits went bad upstream
+        (NaN/inf collapse the in-graph sample to lane garbage). Pure
+        host arithmetic on an already-transferred array."""
+        t = toks[decoding]
+        self._guard_oob += int(np.sum((t < 0) | (t >= self.cfg.vocab)))
 
     # ------------------------------------------------------------------
     # Self-speculative decoding: Q-only draft, full Q+LR verify
@@ -1278,6 +1403,23 @@ class Engine:
                   "spec_accepted_tokens / spec_draft_tokens").set(
             round(self._spec_accepted_tokens / self._spec_draft_tokens, 4)
             if self._spec_draft_tokens else 0.0)
+        # drift-monitor counters follow the same uniform-key-set rule
+        reg.counter("drift_checks",
+                    "per-lane shadow comparisons executed"
+                    ).set(self._drift_checks)
+        reg.counter("drift_top1_agree",
+                    "shadow comparisons whose argmax matched the "
+                    "reference lowering").set(self._drift_agree)
+        reg.counter("drift_nonfinite",
+                    "non-finite logit elements seen by the drift probe"
+                    ).set(self._drift_nonfinite)
+        reg.counter("guard_token_oob",
+                    "sampled tokens outside [0, vocab) — upstream "
+                    "logit corruption").set(self._guard_oob)
+        reg.gauge("drift_top1_agreement_rate",
+                  "drift_top1_agree / drift_checks").set(
+            round(self._drift_agree / self._drift_checks, 4)
+            if self._drift_checks else 1.0)
         self.tel.publish()
         return reg
 
@@ -1332,6 +1474,10 @@ class Engine:
         self._spec_rounds = 0
         self._spec_draft_tokens = 0
         self._spec_accepted_tokens = 0
+        self._drift_checks = 0
+        self._drift_agree = 0
+        self._drift_nonfinite = 0
+        self._guard_oob = 0
         # histogram samples reset even with telemetry off — the
         # acceptance histogram is registry-resident either way
         self.registry.reset_histograms()

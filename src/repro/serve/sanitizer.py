@@ -19,6 +19,11 @@ the *state* consistent:
     through speculative rollback), a mid-prefill lane sits at its
     chunk frontier, and a request's committed token count never
     decreases;
+  * **prefix-cache agreement** — the radix tree and the pool's
+    ``_cached`` flags describe the same page set: every page the pool
+    marks cached is reachable from a tree node and vice versa (an
+    orphaned flag pins a page forever; a ghost node hands out pages the
+    pool may already have recycled);
   * **int4 nibble-pair alignment** — packed4 cache leaves hold exactly
     ``page_size / 2`` (or ``max_len / 2``) byte rows on the slot axis.
 
@@ -91,6 +96,7 @@ class Sanitizer:
         if engine.sc.paged:
             self._check_pool(engine)
             self._check_tables(engine)
+            self._check_prefix_cache(engine)
         self._check_pos(engine)
         if engine.sc.kv_dtype == "int4":
             self._check_packed4(engine)
@@ -172,6 +178,30 @@ class Sanitizer:
                     _fail("block-table",
                           f"{path} slot {slot}: device row {got} != "
                           f"host mapping {want}")
+
+    # ------------------------------------------------------------------
+    def _check_prefix_cache(self, engine) -> None:
+        """Radix tree ↔ ``PagePool._cached`` agreement: both sides must
+        name exactly the same page set. A cached flag with no tree node
+        can never be released (the tree owns release_cached), and a node
+        over an un-flagged page would map out pages the pool considers
+        recyclable."""
+        prefix, pool = engine.prefix, engine.pool
+        if prefix is None:
+            return
+        tree = set(prefix._by_page)
+        cached = {p for p in range(pool.n_pages) if pool._cached[p]}
+        orphans = cached - tree
+        if orphans:
+            _fail("prefix-cache",
+                  f"pages marked cached with no radix-tree node: "
+                  f"{sorted(orphans)} — unreleasable without a tree owner")
+        ghosts = tree - cached
+        if ghosts:
+            _fail("prefix-cache",
+                  f"radix-tree nodes over pages the pool no longer marks "
+                  f"cached: {sorted(ghosts)} — the tree would map out "
+                  f"recyclable pages")
 
     # ------------------------------------------------------------------
     def _check_pos(self, engine) -> None:

@@ -1,0 +1,159 @@
+"""Runtime accuracy-drift monitor (ServeConfig(drift_monitor=True)).
+
+The flagship guarantee is behavioral invisibility: a monitored engine
+emits exactly the tokens a bare one does, on the busiest path we serve
+(paged + int4 KV + fused kernels). The remaining tests pin the metric
+surface — sampled shadow checks populate the KL / agreement / delta
+series, a NaN-poisoned model trips the non-finite guard, and the
+ServeConfig validation rejects unusable combinations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.api import PTQConfig
+from repro.models import init_lm
+from repro.models.quantize import quantize_model_params
+from repro.quant.base import QuantizerConfig
+from repro.serve import Engine, Request, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def tiny_q(tiny):
+    """Quantized params: serving vs reference lowering only diverge in a
+    measurable way once real SRR containers are in the tree."""
+    cfg, params = tiny
+    ptq = PTQConfig(method="srr", scaling="identity", rank=4,
+                    quantizer=QuantizerConfig(kind="mxint", bits=3,
+                                              block_size=32))
+    qparams, _ = quantize_model_params(params, None, ptq)
+    return cfg, qparams
+
+
+def _reqs(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=5 + (i % 3))
+                    .astype(np.int32))
+            for i in range(n)]
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_len=64, decode_batch=2, max_new_tokens=6,
+                    prefill_len=16, scheduler="continuous")
+    defaults.update(kw)
+    return Engine(params, cfg, ServeConfig(**defaults))
+
+
+# ---------------------------------------------------------------------------
+# token parity: the monitor must be behaviorally invisible
+# ---------------------------------------------------------------------------
+def test_monitor_is_token_invisible_paged_int4_fused(tiny_q):
+    cfg, qparams = tiny_q
+
+    def run(monitor):
+        eng = _engine(cfg, qparams, paged=True, kv_dtype="int4",
+                      page_size=8, fused="on", drift_monitor=monitor,
+                      drift_sample_rate=1.0)
+        out = eng.generate(_reqs(cfg, 4))
+        return [list(r.tokens) for r in sorted(out, key=lambda r: r.uid)]
+
+    assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# metric surface
+# ---------------------------------------------------------------------------
+def test_monitor_populates_drift_series(tiny_q):
+    cfg, qparams = tiny_q
+    eng = _engine(cfg, qparams, drift_monitor=True, drift_sample_rate=1.0)
+    eng.generate(_reqs(cfg, 3))
+    st = eng.stats()
+    assert st["drift_checks"] > 0
+    assert 0.0 <= st["drift_top1_agreement_rate"] <= 1.0
+    assert st["drift_top1_agree"] <= st["drift_checks"]
+    # clean weights on both lowerings: nothing non-finite, no OOB tokens
+    assert st["drift_nonfinite"] == 0
+    assert st["guard_token_oob"] == 0
+    assert st["drift_kl"]["count"] == st["drift_checks"]
+    assert st["drift_logit_delta"]["count"] == st["drift_checks"]
+    # the dequant reference sees the same containers: divergence is
+    # lowering round-off, not model error
+    assert st["drift_kl"]["max"] < 1e-2
+
+
+def test_sample_rate_thins_checks(tiny_q):
+    cfg, qparams = tiny_q
+
+    def checks(rate):
+        eng = _engine(cfg, qparams, drift_monitor=True,
+                      drift_sample_rate=rate)
+        eng.generate(_reqs(cfg, 3))
+        return eng.stats()["drift_checks"]
+
+    full, thinned = checks(1.0), checks(0.25)
+    assert full > 0
+    assert thinned < full
+
+
+def test_monitor_off_publishes_zeroed_series(tiny_q):
+    """The metric names exist either way (schema pins them); off means
+    zero checks and a vacuous agreement rate of 1.0."""
+    cfg, qparams = tiny_q
+    eng = _engine(cfg, qparams)
+    eng.generate(_reqs(cfg, 2))
+    st = eng.stats()
+    assert st["drift_checks"] == 0
+    assert st["drift_top1_agree"] == 0
+    assert st["drift_nonfinite"] == 0
+    assert st["drift_top1_agreement_rate"] == 1.0
+    assert st["drift_kl"]["count"] == 0
+
+
+def test_nan_injection_trips_guard(tiny):
+    """Poison every float leaf: the shadow probe must count non-finite
+    logits instead of letting the collapse pass silently."""
+    cfg, params = tiny
+    bad = jax.tree_util.tree_map(
+        lambda x: (jnp.full_like(x, jnp.nan)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x),
+        params)
+    eng = _engine(cfg, bad, drift_monitor=True, drift_sample_rate=1.0,
+                  max_new_tokens=3)
+    eng.generate(_reqs(cfg, 2))
+    st = eng.stats()
+    assert st["drift_checks"] > 0
+    assert st["drift_nonfinite"] > 0
+
+
+# ---------------------------------------------------------------------------
+# configuration validation
+# ---------------------------------------------------------------------------
+def test_monitor_requires_continuous_scheduler(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="drift_monitor"):
+        Engine(params, cfg, ServeConfig(scheduler="bucketed",
+                                        drift_monitor=True))
+
+
+@pytest.mark.parametrize("rate", [0.0, -0.5, 1.5])
+def test_monitor_rejects_bad_sample_rate(tiny, rate):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="drift_sample_rate"):
+        Engine(params, cfg, ServeConfig(scheduler="continuous",
+                                        drift_monitor=True,
+                                        drift_sample_rate=rate))
+
+
+def test_rejects_unknown_reference_lowering(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="drift_ref_fused"):
+        Engine(params, cfg, ServeConfig(drift_ref_fused="kernelz"))

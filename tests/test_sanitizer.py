@@ -137,6 +137,47 @@ def test_detects_packed4_misalignment(decoding_engine):
     assert eng.page_size % PACKED4_SLOT_ALIGN == 0
 
 
+def test_detects_prefix_cache_disagreement(tiny):
+    """Both directions of the radix-tree ↔ pool._cached audit: an
+    orphaned cached flag (no tree owner) and a ghost tree node (pool
+    un-flagged the page)."""
+    cfg, params = tiny
+    eng = _engine(cfg, params, paged=True, kv_dtype="int4", page_size=8,
+                  max_new_tokens=4)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate(
+                        [shared, rng.integers(0, cfg.vocab, size=4)
+                         .astype(np.int32)]))
+            for i in range(2)]
+    eng.generate(reqs)
+    assert eng.prefix is not None and eng.prefix._by_page, \
+        "the shared 16-token prefix must have inserted full pages"
+    eng._san.check(eng)
+    page = next(iter(eng.prefix._by_page))
+    # orphan: the pool says cached, the tree has no owning node
+    node = eng.prefix._by_page.pop(page)
+    try:
+        with pytest.raises(SanitizerError, match="prefix-cache"):
+            eng._san.check(eng)
+    finally:
+        eng.prefix._by_page[page] = node
+    eng._san.check(eng)
+    # ghost: the tree still maps a page the pool no longer marks cached.
+    # On a cold page the pool partition audit fires first in the full
+    # check (defense in depth), so pin the new invariant directly too.
+    eng.pool._cached[page] = False
+    try:
+        with pytest.raises(SanitizerError, match="prefix-cache"):
+            eng._san._check_prefix_cache(eng)
+        with pytest.raises(SanitizerError):
+            eng._san.check(eng)
+    finally:
+        eng.pool._cached[page] = True
+    eng._san.check(eng)
+
+
 # ---------------------------------------------------------------------------
 # configuration and parity
 # ---------------------------------------------------------------------------

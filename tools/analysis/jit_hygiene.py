@@ -9,7 +9,8 @@ Codes:
           ``jax.block_until_ready``, ``.item()``, ``np.asarray`` on
           device values) inside a function reachable from
           ``Engine.step()``, outside the documented fence contexts
-          (``with tel.phase("transfer")`` or an ``if ...sync:`` guard).
+          (``with tel.phase("transfer")``, an ``if ...sync:`` guard, or
+          a ``with jax.named_scope(...)`` block naming the sync).
   JIT003  recompile churn: ``jax.jit`` invoked inside a step-reachable
           function (a fresh compiled callable per call), or an
           unhashable literal (list/dict/set) passed at a known static
@@ -255,17 +256,21 @@ def _check_traced_branches(ctx: Context, jits: List[Jit]) -> List[Finding]:
 
 
 def _fenced(node: ast.AST) -> bool:
-    """Inside `with ...phase("transfer"):` or an `if ...sync:` guard —
-    the two documented places the engine is allowed to block on device
-    work."""
+    """Inside `with ...phase("transfer"):`, an `if ...sync:` guard, or a
+    `with jax.named_scope(...)` block — the documented places the engine
+    is allowed to block on device work (a named scope marks the sync as
+    deliberate and keeps it attributable in profiles)."""
     for p in parents(node):
         if isinstance(p, ast.With):
             for item in p.items:
                 c = item.context_expr
-                if isinstance(c, ast.Call) and call_name(c) == "phase" \
-                        and c.args \
+                if not isinstance(c, ast.Call):
+                    continue
+                if call_name(c) == "phase" and c.args \
                         and isinstance(c.args[0], ast.Constant) \
                         and c.args[0].value == "transfer":
+                    return True
+                if dotted(c.func).endswith("named_scope"):
                     return True
         if isinstance(p, ast.If):
             if any(isinstance(s, ast.Attribute) and s.attr == "sync"
@@ -307,9 +312,10 @@ def _check_host_syncs(ctx: Context,
             out.append(make_finding(
                 mod.path, node.lineno, "JIT002",
                 f"host sync {sync} in {qualname(node)} (reachable from "
-                f"Engine.step); move it under tel.phase(\"transfer\") or "
-                f"an explicit ...sync fence so the step loop never blocks "
-                f"silently", qualname(node), sync))
+                f"Engine.step); move it under tel.phase(\"transfer\"), an "
+                f"explicit ...sync fence, or a jax.named_scope block so "
+                f"the step loop never blocks silently",
+                qualname(node), sync))
     return out
 
 

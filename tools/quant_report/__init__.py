@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Render a quantization-quality report (repro.obs.quant) as tables.
+
+    python -m tools.quant_report REPORT.json [--worst N] [--no-validate]
+
+Reads the schema-pinned JSON written by ``--quant-report``, validates it
+against ``tools/quant_report_schema.json`` (same engine as the serve
+metrics snapshot — ``tools/validate_metrics.py``), then prints a
+per-layer table, the aggregate summary, and the worst-N layers by
+activation-scaled relative reconstruction error — the layers where the
+paper's rank budget is spent least effectively.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+TOOLS = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_SCHEMA = os.path.join(TOOLS, "quant_report_schema.json")
+
+_COLS = ("layer", "shape", "k/r", "bits", "pres%", "s-rel-err",
+         "w-rel-err", "KiB")
+
+
+def _rows(layers: Dict[str, Dict[str, Any]]) -> List[List[str]]:
+    rows = []
+    for name in sorted(layers):
+        rec = layers[name]
+        rows.append([
+            name,
+            "x".join(str(s) for s in rec["shape"]),
+            f"{rec['k']}/{rec['rank']}",
+            f"{rec['bits']:.2f}",
+            f"{100.0 * rec['preserved_energy_fraction']:.1f}",
+            f"{rec['scaled_rel_err']:.4f}",
+            f"{rec['weight_rel_err']:.4f}",
+            f"{rec['total_bytes'] / 1024:.1f}",
+        ])
+    return rows
+
+
+def _print_table(rows: List[List[str]], out) -> None:
+    widths = [max(len(c), *(len(r[i]) for r in rows)) if rows else len(c)
+              for i, c in enumerate(_COLS)]
+    def line(cells):
+        print("  ".join(c.ljust(w) if i == 0 else c.rjust(w)
+                        for i, (c, w) in enumerate(zip(cells, widths))),
+              file=out)
+    line(_COLS)
+    line(["-" * w for w in widths])
+    for r in rows:
+        line(r)
+
+
+def render(report: Dict[str, Any], worst: int = 5, out=None) -> None:
+    out = out or sys.stdout
+    cfg = report.get("config", {})
+    if cfg:
+        knobs = ", ".join(f"{k}={cfg[k]}" for k in sorted(cfg))
+        print(f"[quant-report] config: {knobs}", file=out)
+    layers = report["layers"]
+    _print_table(_rows(layers), out)
+    s = report["summary"]
+    print(f"[quant-report] {s['layers']} layers, "
+          f"{s['total_bytes'] / 1024:.1f} KiB total "
+          f"({s['quant_bytes'] / 1024:.1f} quant + "
+          f"{s['lowrank_bytes'] / 1024:.1f} low-rank), "
+          f"{s['total_seconds']:.2f}s", file=out)
+    if "mean_scaled_rel_err" in s:
+        print(f"[quant-report] scaled rel err mean "
+              f"{s['mean_scaled_rel_err']:.4f} max "
+              f"{s['max_scaled_rel_err']:.4f}; preserved energy mean "
+              f"{s['mean_preserved_energy_fraction']:.3f}; "
+              f"mean k {s['mean_k']:.1f} @ {s['mean_bits']:.2f} bits",
+              file=out)
+    if layers and worst > 0:
+        ranked = sorted(layers.values(), key=lambda r: -r["scaled_rel_err"])
+        print(f"[quant-report] worst {min(worst, len(ranked))} layers by "
+              "scaled relative error:", file=out)
+        for rec in ranked[:worst]:
+            print(f"  {rec['name']}: s-rel-err {rec['scaled_rel_err']:.4f} "
+                  f"(k={rec['k']}, preserved "
+                  f"{100.0 * rec['preserved_energy_fraction']:.1f}%, "
+                  f"exposed {100.0 * rec['quant_exposed_energy_fraction']:.1f}%)",
+                  file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.quant_report",
+        description="Render a --quant-report JSON as per-layer tables.")
+    ap.add_argument("report", help="report JSON written by --quant-report")
+    ap.add_argument("--worst", type=int, default=5,
+                    help="how many worst layers to highlight (0 = skip)")
+    ap.add_argument("--schema", default=DEFAULT_SCHEMA,
+                    help="schema to validate against before rendering")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema validation")
+    args = ap.parse_args(argv)
+
+    with open(args.report) as f:
+        report = json.load(f)
+    if not args.no_validate:
+        from tools.validate_metrics import validate
+        with open(args.schema) as f:
+            schema = json.load(f)
+        errors = validate(report, schema, schema)
+        if errors:
+            print(f"[quant-report] FAIL: {args.report} violates "
+                  f"{args.schema}:", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+    render(report, worst=args.worst)
+    return 0
